@@ -1,0 +1,54 @@
+"""§4 — in-kernel stack aggregation data-volume reduction (10–50x claim).
+
+Feeds the aggregator the SimCluster's realistic stack distribution at the
+99 Hz production rate and reports raw-vs-drained byte volumes per 5 s
+drain cycle, plus the projected per-node daily volume (the paper reports
+~400 TiB/day across 10k+ nodes ~= 40 GiB/node/day raw telemetry).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+from repro.core import simcluster as sc
+from repro.core.aggregate import StackAggregator
+from repro.core.events import RawStackSample
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    cl = sc.SimCluster(n_ranks=1, samples_per_iter=495)  # 99 Hz x 5 s drain
+    agg = StackAggregator()
+    rng = random.Random(0)
+    drains = 0
+    for it in range(60):  # 60 drain cycles = 5 minutes of telemetry
+        profiles = cl.step()
+        for p in profiles:
+            for s in p.cpu_samples:
+                frames = tuple(("bid", hash(f) & 0xFFFFFFFF)
+                               for f in s.frames)
+                for _ in range(s.weight):
+                    if rng.random() < 0.06:
+                        # long-tail: unique leaf (inlined/line-level PCs)
+                        frames_t = frames + (("bid", rng.getrandbits(32)),)
+                    else:
+                        frames_t = frames
+                    agg.record(RawStackSample(p.rank, s.timestamp, frames_t))
+        agg.drain()
+        drains += 1
+
+    st = agg.stats
+    reduction = st.reduction
+    raw_daily_gib = st.raw_bytes / drains * (86400 / 5) / (1 << 30)
+    drained_daily_gib = st.drained_bytes / drains * (86400 / 5) / (1 << 30)
+    out_lines.append("# §4 analog: aggregation volume reduction")
+    out_lines.append(f"aggregation_reduction,0,{reduction:.1f}x")
+    out_lines.append(f"aggregation_daily_volume,0,"
+                     f"{raw_daily_gib:.2f}GiB_raw->{drained_daily_gib:.3f}GiB")
+    assert 10 <= reduction, f"reduction {reduction} below the paper's band"
+    return {"reduction": reduction}
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

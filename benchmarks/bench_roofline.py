@@ -1,0 +1,34 @@
+"""§Roofline — emit the per-(arch x shape) three-term roofline table from
+the dry-run artifacts (uses the cost-extrapolated records when present)."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    from repro.roofline.analyze import format_table, load_rows
+    if not RESULTS.exists():
+        out_lines.append("roofline,0,dryrun_results_missing")
+        return {}
+    rows = load_rows(RESULTS)
+    out_lines.append("# §Roofline (single-pod, baseline variant)")
+    for line in format_table(rows).splitlines():
+        out_lines.append("  " + line)
+    if rows:
+        worst = min(rows, key=lambda r: r.roofline_fraction)
+        best = max(rows, key=lambda r: r.roofline_fraction)
+        out_lines.append(f"roofline_cells,0,{len(rows)}")
+        out_lines.append(f"roofline_worst,0,{worst.arch}/{worst.shape}="
+                         f"{100*worst.roofline_fraction:.2f}%")
+        out_lines.append(f"roofline_best,0,{best.arch}/{best.shape}="
+                         f"{100*best.roofline_fraction:.2f}%")
+    return {"cells": len(rows)}
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    run(lines)
+    print("\n".join(lines))

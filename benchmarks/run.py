@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
+
+  bench_overhead     — Table 2 (throughput vs sampling rate)
+  bench_unwind       — Fig 3  (frame accuracy) + §3.3 cost analysis
+  bench_symbols      — Fig 4 / §5.3 (misattribution)
+  bench_straggler    — Fig 5  (slow-rank detection sweep)
+  bench_aggregation  — §4    (10–50x volume reduction)
+  bench_cases        — §5.4  (five end-to-end case studies) + Fig 2
+  bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.bench_cases",
+    "benchmarks.bench_straggler",
+    "benchmarks.bench_unwind",
+    "benchmarks.bench_symbols",
+    "benchmarks.bench_aggregation",
+    "benchmarks.bench_overhead",
+    "benchmarks.bench_roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    lines: list = []
+    failures = []
+    for modname in MODULES:
+        short = modname.split(".")[-1]
+        if only and short not in only:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod = importlib.import_module(modname)
+            mod.run(lines)
+            lines.append(f"{short}_wall,{(time.monotonic()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures.append((short, repr(e)))
+            lines.append(f"{short}_wall,0,FAILED:{e!r}"[:200])
+        print(f"[bench] {short} done in {time.monotonic()-t0:.1f}s",
+              file=sys.stderr)
+    print("\n".join(str(l) for l in lines))
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

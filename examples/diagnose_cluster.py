@@ -1,0 +1,65 @@
+"""Operator's view: run all five §5.4 production incidents through the
+diagnosis pipeline and print the report an on-call engineer would read.
+
+Run:  PYTHONPATH=src python examples/diagnose_cluster.py [--case N]
+"""
+import argparse
+
+from repro.core import simcluster as sc
+from repro.core.service import CentralService
+from repro.ft import MitigationPlanner
+
+CASES = {
+    1: ("GPU thermal throttling (rank 0 clocks down)",
+        lambda: sc.thermal_throttle(0, start=30), False),
+    2: ("NIC soft-interrupt contention (rank 4 shares a core with NET_RX)",
+        lambda: sc.nic_softirq(4, start=30), False),
+    3: ("VFS dentry-lock contention (daemon-reload on 2 nodes)",
+        lambda: sc.vfs_lock_contention([2, 3], start=30), True),
+    4: ("SLS logging verbosity DEBUG (uniform 10% slowdown)",
+        lambda: sc.logging_overhead(start=30), False),
+    5: ("Data-ingestion bottleneck (storage tier saturated)",
+        lambda: sc.io_bottleneck(start=30), False),
+}
+
+
+def run_case(n: int) -> None:
+    desc, make_fault, robust = CASES[n]
+    print(f"\n=== Case {n}: {desc} ===")
+    svc = CentralService(window=50, robust_detector=robust)
+    planner = MitigationPlanner(straggler_patience=2)
+    cluster = sc.SimCluster(n_ranks=8, seed=7)
+    cluster.run(svc, 30)
+    cluster.add_fault(make_fault())
+    events = cluster.run(svc, 60)
+    if not events:
+        print("  no diagnosis produced (unexpected)")
+        return
+    e = events[0]
+    print(f"  detection : {'straggler rank ' + str(e.straggler_rank) if e.straggler_rank is not None else 'uniform degradation (temporal baseline)'}")
+    print(f"  layer     : {e.verdict.layer if e.verdict else '-'}")
+    print(f"  root cause: {e.root_cause}  [{e.category}]")
+    if e.verdict:
+        print(f"  action    : {e.verdict.action}")
+        ev = e.verdict.evidence
+        if "hot_deltas" in ev:
+            for fn, d in list(ev["hot_deltas"].items())[:5]:
+                print(f"     +{d*100:5.2f}%  {fn}")
+        if "per_kernel_ratio" in ev:
+            for k, r in list(ev["per_kernel_ratio"].items())[:5]:
+                print(f"     x{r:.3f}  {k}")
+    for act in planner.on_diagnosis(e):
+        print(f"  mitigation: {act.kind} -> nodes {list(act.target_nodes)} "
+              f"({act.reason})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", type=int, default=0, help="0 = all five")
+    args = ap.parse_args()
+    for n in ([args.case] if args.case else sorted(CASES)):
+        run_case(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Batched serving demo: KV-cache decode across a request batch.
+
+Builds a small model, prefues a prompt per request, then decodes with the
+jit'd serve_step while the observability agent traces per-step latency.
+Demonstrates: cache init/threading, ring-buffer SWA caches (mixtral-family
+config), SSM constant-state decode (mamba2-family config).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mixtral-8x22b]
+      (arch selects the *tiny* family variant)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+from repro.train import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b",
+                    choices=configs.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(configs.tiny(args.arch), param_dtype="float32",
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    b = args.batch
+    cache, _ = model.init_cache(b, 128)
+    if cfg.is_enc_dec:
+        from repro.models import whisper
+        frames = jnp.zeros((b, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        cache = whisper.prime_cross_cache(params, cache, frames, cfg)
+    serve = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    key = jax.random.PRNGKey(1)
+    if cfg.embeds_as_input and not cfg.is_enc_dec:
+        tok = jax.random.normal(key, (b, 1, cfg.d_model), jnp.float32) * 0.02
+    else:
+        tok = jnp.ones((b, 1), jnp.int32)
+    lat = []
+    generated = []
+    for pos in range(args.steps):
+        t0 = time.monotonic()
+        logits, cache = serve(params, cache,
+                              tok, jnp.full((b,), pos, jnp.int32))
+        nxt = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)
+        nxt.block_until_ready()
+        lat.append(time.monotonic() - t0)
+        generated.append(nxt)
+        if not (cfg.embeds_as_input and not cfg.is_enc_dec):
+            tok = nxt[:, None].astype(jnp.int32)
+
+    lat_ms = sorted(x * 1e3 for x in lat[2:])  # skip compile step
+    print(f"[serve] {cfg.name}: batch={b}, {args.steps} decode steps")
+    print(f"[serve] per-step latency p50={lat_ms[len(lat_ms)//2]:.1f}ms "
+          f"p95={lat_ms[int(len(lat_ms)*0.95)]:.1f}ms")
+    toks = jnp.stack(generated, axis=1)
+    print(f"[serve] generated token matrix {toks.shape}, "
+          f"sample row 0: {toks[0, :10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

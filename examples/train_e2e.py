@@ -1,0 +1,76 @@
+"""End-to-end training driver: ~100M-parameter LM, few hundred steps,
+full production feature set on one host:
+
+  * WSD schedule (MiniCPM-style), grad clipping, AdamW
+  * async checkpointing + automatic resume
+  * SysOM-AI observability: sampling profiler + collective tracing +
+    central-service straggler/temporal analysis
+  * data pipeline with background prefetch and exact-resume cursors
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--tiny]
+
+The default config is a ~100M-param qwen2-family model (seq 256).  On this
+CPU container a step takes O(seconds); --tiny drops to a seconds-long demo.
+"""
+import argparse
+import dataclasses
+import pathlib
+
+from repro import configs
+from repro.core.service import CentralService
+from repro.data import DataPipeline, SyntheticCorpus
+from repro.models import ModelConfig, build_model
+from repro.train.loop import LoopConfig, train_loop
+
+
+def model_100m() -> ModelConfig:
+    # qwen2-family, ~110M params (embed 32k x 768 + 12 layers d=768/f=3072)
+    return ModelConfig(
+        name="qwen2-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=3072, vocab_size=32768,
+        qkv_bias=True, tie_embeddings=True, param_dtype="float32",
+        compute_dtype="float32", vocab_pad_multiple=128,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = (dataclasses.replace(configs.tiny("qwen2-0.5b"),
+                               param_dtype="float32")
+           if args.tiny else model_100m())
+    model = build_model(cfg)
+    print(f"[e2e] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seq_len=args.seq, seed=0)
+    pipeline = DataPipeline(corpus, global_batch=args.batch)
+    service = CentralService()
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        warmup_steps=max(args.steps // 20, 5),
+        peak_lr=6e-4,
+        schedule="wsd",                      # MiniCPM's schedule, exercised
+        log_every=10,
+        checkpoint_every=max(args.steps // 4, 10),
+        checkpoint_dir=args.ckpt_dir,
+        observability=True,
+        sampling_rate=0.10,                  # the paper's production default
+    )
+    pathlib.Path(args.ckpt_dir).mkdir(parents=True, exist_ok=True)
+    res = train_loop(model, pipeline, loop_cfg, service=service)
+    print(f"[e2e] done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"({res.steps_per_s:.2f} steps/s)")
+    print(f"[e2e] service ingested {service.ingested} profiles; "
+          f"diagnostic events: {len(service.events)}")
+    print(f"[e2e] checkpoints in {args.ckpt_dir} (re-run to resume)")
+
+
+if __name__ == "__main__":
+    main()

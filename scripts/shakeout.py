@@ -1,0 +1,65 @@
+"""Developer shakeout: run every tiny arch through one fwd/train/decode step."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model, smoke_shape
+from repro.optim import make_schedule
+from repro.train import init_train_state, make_train_step, make_serve_step
+
+FAILURES = []
+
+
+def run_arch(name: str) -> None:
+    cfg = configs.tiny(name)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    shape = smoke_shape("train")
+    b, s = shape.global_batch, shape.seq_len
+
+    batch = {}
+    if cfg.is_enc_dec:
+        batch["embeds"] = jnp.ones((b, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.02
+        batch["tokens"] = jnp.zeros((b, s), jnp.int32)
+    elif cfg.embeds_as_input:
+        batch["embeds"] = jnp.ones((b, s, cfg.d_model), jnp.float32) * 0.02
+    else:
+        batch["tokens"] = jnp.ones((b, s), jnp.int32)
+    batch["labels"] = jnp.ones((b, s), jnp.int32)
+
+    state = init_train_state(model, key)
+    step = jax.jit(make_train_step(model, make_schedule("cosine", peak_lr=1e-3)))
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert jnp.isfinite(loss), f"{name}: loss not finite"
+
+    # decode
+    cache, _ = model.init_cache(b, 64)
+    if cfg.is_enc_dec:
+        from repro.models import whisper
+        cache = whisper.prime_cross_cache(state["params"], cache, batch["embeds"], cfg)
+    serve = jax.jit(make_serve_step(model))
+    if cfg.embeds_as_input and not cfg.is_enc_dec:
+        tok = jnp.ones((b, 1, cfg.d_model), jnp.float32)
+    else:
+        tok = jnp.ones((b, 1), jnp.int32)
+    logits, cache = serve(state["params"], cache, tok, jnp.zeros((b,), jnp.int32))
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), f"{name}: decode NaN"
+    print(f"  OK {name}: loss={loss:.4f} decode_logits={logits.shape}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or configs.list_archs()
+    for n in names:
+        print(f"[shakeout] {n}")
+        try:
+            run_arch(n)
+        except Exception as e:  # noqa: BLE001
+            FAILURES.append((n, repr(e)[:500]))
+            print(f"  FAIL {n}: {e!r}"[:600])
+    if FAILURES:
+        print(f"\n{len(FAILURES)} failures")
+        sys.exit(1)
+    print("\nall archs OK")

@@ -1,0 +1,4 @@
+"""repro: SysOM-AI continuous cross-layer performance diagnosis on a
+multi-pod JAX/TPU training framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

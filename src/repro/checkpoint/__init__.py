@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer, load_checkpoint, save_checkpoint, latest_step,
+)

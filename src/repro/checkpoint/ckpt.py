@@ -1,0 +1,134 @@
+"""Checkpoint/restart with cross-mesh resharding and async writes.
+
+Layout per step:  <dir>/step_<n>/
+    manifest.json      step, data cursor, PRNG key, mesh shape, tree paths
+    <leafpath>.npy     one array per pytree leaf (full/global arrays)
+
+Restore re-shards onto ANY mesh: arrays are loaded host-side and
+device_put with the target sharding, so an elastic restart onto a smaller
+``data`` axis (node loss) or a different topology works as long as the
+global shapes divide.  Writes are atomic (tmp dir + rename) and can run on
+a background thread (AsyncCheckpointer) so the train loop never blocks on
+storage.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory, step: int, state, *, cursor: int = 0,
+                    extra: Optional[dict] = None) -> Path:
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten_with_paths(state)
+    manifest = {"step": step, "cursor": cursor, "leaves": {},
+                "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                   if p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory, step: int, template,
+                    shardings=None) -> Tuple[Any, dict]:
+    """``template``: pytree matching the saved structure (values ignored).
+    ``shardings``: optional matching pytree of NamedShardings — resharding
+    happens here, enabling elastic mesh changes on restart."""
+    d = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_template = _flatten_with_paths(template)
+    flat_shardings = (_flatten_with_paths(shardings)
+                      if shardings is not None else {})
+
+    loaded = {}
+    for key in flat_template:
+        meta = manifest["leaves"][key]
+        arr = np.load(d / meta["file"])
+        sh = flat_shardings.get(key)
+        loaded[key] = (jax.device_put(arr, sh) if sh is not None
+                       else jax.numpy.asarray(arr))
+
+    leaves_order = []
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves_order.append(loaded[key])
+    state = jax.tree_util.tree_unflatten(treedef, leaves_order)
+    return state, manifest
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: ``save`` returns immediately; ``wait``
+    joins the in-flight write (call before process exit / next save)."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps = []
+
+    def save(self, step: int, state, *, cursor: int = 0,
+             extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def _write():
+            save_checkpoint(self.directory, step, host_state,
+                            cursor=cursor, extra=extra)
+            self.saved_steps.append(step)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.iterdir()
+                       if p.name.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

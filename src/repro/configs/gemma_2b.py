@@ -1,0 +1,25 @@
+"""Gemma-2B — dense, GeGLU, head_dim=256, MQA (kv=1).  [arXiv:2403.08295; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    activation="gelu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=1, head_dim=32, d_ff=192, vocab_size=256,
+        activation="gelu", tie_embeddings=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,27 @@
+"""Llama-3.2-1B — the paper's §5.1 overhead-evaluation model (not an
+assigned arch; used by benchmarks/bench_overhead.py to mirror Table 2).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+)
+
+
+def tiny() -> ModelConfig:
+    # ~15M params: the real-training overhead benchmark model (CPU-sized
+    # stand-in for the paper's 2xA100 Llama-3.2-1B setup).
+    return ModelConfig(
+        name="llama3.2-1b-bench", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=2048,
+        tie_embeddings=True, vocab_pad_multiple=8,
+    )

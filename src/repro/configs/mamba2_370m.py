@@ -1,0 +1,31 @@
+"""Mamba2-370M — attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]
+
+Pure SSM: O(1) decode state, so long_500k runs (and is the showcase cell for
+sub-quadratic decode).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state_size=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk_size=256,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-tiny", family="ssm", num_layers=2, d_model=64,
+        num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=256,
+        ssm_state_size=16, ssm_expand=2, ssm_head_dim=32, ssm_chunk_size=16,
+        vocab_pad_multiple=8,
+    )

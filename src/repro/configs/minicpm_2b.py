@@ -1,0 +1,30 @@
+"""MiniCPM-2B — dense llama-like, MHA, WSD schedule.  [arXiv:2404.06395; hf]
+
+vocab 122753 is not divisible by the model axis; padded to 122880 (x128)
+per DESIGN.md §3 (Megatron-style vocab padding).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+# Training uses the WSD (warmup-stable-decay) schedule: optim/schedules.py.
+SCHEDULE = "wsd"
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=160, vocab_size=251,
+        tie_embeddings=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,32 @@
+"""Mixtral-8x22B — MoE, 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]
+
+SWA (window 4096) makes decode KV window-bounded, so this arch RUNS the
+long_500k cell (DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,          # per-expert FFN width
+    vocab_size=32768,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    num_experts=8,
+    num_experts_per_tok=2,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-tiny", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        sliding_window=32, num_experts=4, num_experts_per_tok=2,
+        vocab_pad_multiple=8,
+    )

@@ -1,0 +1,24 @@
+"""Qwen2-0.5B — dense, GQA (kv=2), QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-0.5b-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+        qkv_bias=True, tie_embeddings=True, vocab_pad_multiple=8,
+    )

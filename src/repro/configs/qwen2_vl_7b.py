@@ -1,0 +1,32 @@
+"""Qwen2-VL-7B — VLM backbone, M-RoPE, GQA (kv=4).  [arXiv:2409.12191; hf]
+
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, S, d_model); only the LM backbone lowers.
+M-RoPE splits head_dim into (temporal, height, width) rotary sections.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    rope_type="mrope",
+    mrope_sections=(16, 24, 24),   # t/h/w splits of head_dim=128 (x2 halves)
+    embeds_as_input=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-tiny", family="vlm", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+        qkv_bias=True, rope_type="mrope", mrope_sections=(4, 2, 2),
+        embeds_as_input=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,25 @@
+"""Qwen3-4B — dense, qk-norm, GQA (kv=8).  [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        qk_norm=True, tie_embeddings=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,29 @@
+"""Qwen3-30B-A3B — MoE, 128 experts top-8, GQA (kv=4).
+[hf:Qwen/Qwen3-30B-A3B; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,            # per-expert FFN width
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    num_experts=128,
+    num_experts_per_tok=8,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-tiny", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=256,
+        qk_norm=True, num_experts=8, num_experts_per_tok=2,
+        vocab_pad_multiple=8,
+    )

@@ -1,0 +1,34 @@
+"""Whisper-base — encoder-decoder, conv frontend STUB.  [arXiv:2212.04356; unverified]
+
+6 encoder + 6 decoder layers, d_model=512, 8 heads (MHA), d_ff=2048.
+The conv1d mel frontend is a stub: input_specs() provides precomputed frame
+embeddings (B, 1500, d_model).  Decode shapes lower against the assigned KV
+lengths as stress configs (Whisper's own decoder cap is 448 tokens —
+DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,            # decoder layers
+    encoder_layers=6,
+    encoder_seq_len=1500,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    activation="gelu",
+    rope_theta=0.0,          # whisper uses learned/sinusoidal positions
+    embeds_as_input=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny-smoke", family="audio", num_layers=2,
+        encoder_layers=2, encoder_seq_len=32, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=256, activation="gelu",
+        rope_theta=0.0, embeds_as_input=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,34 @@
+"""Zamba2-2.7B — hybrid: Mamba2 trunk + shared attention block.
+[arXiv:2411.15242; hf]
+
+54 Mamba2 layers; one weight-shared full-attention block applied every 6
+layers (9 invocations).  d_model=2560, 32 attention heads (MHA in the shared
+block), ssm_state=64.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state_size=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    shared_attention=True,
+)
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b-tiny", family="hybrid", num_layers=4, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        ssm_state_size=16, ssm_expand=2, ssm_head_dim=32, ssm_chunk_size=16,
+        attn_every=2, shared_attention=True, vocab_pad_multiple=8,
+    )

@@ -1,0 +1,21 @@
+"""SysOM-AI core: continuous cross-layer performance diagnosis.
+
+Modules map 1:1 to the paper's mechanisms:
+
+  events        — cross-layer event schema (CPU stacks, kernel timings,
+                  collective events, OS signals)
+  flamegraph    — folded-stack profiles, merge/diff
+  waterline     — per-communication-group CPU waterline (§3.1)
+  straggler     — slow-rank detection w/ barrier-semantics clock alignment (§3.1)
+  diffdiag      — layered differential diagnosis GPU→CPU→OS (§3.1)
+  baseline      — temporal baseline comparison (§3.1)
+  aggregate     — in-kernel-style stack aggregation + drain (§4)
+  unwind/       — adaptive hybrid FP+DWARF unwinding, Algorithm 1 (§3.3)
+  symbols/      — centralized Build-ID-keyed symbol resolution (§3.4)
+  collective/   — framework-agnostic collective observability (§3.2)
+  stitch        — Python↔native stack stitching (§4)
+  samplers      — real in-process sampling profiler (overhead benchmark)
+  agent         — node agent (collection, aggregation, upload)
+  service       — central analysis service
+  simcluster    — multi-rank simulation + fault injection (case studies §5.4)
+"""

@@ -1,0 +1,112 @@
+"""Node agent (§4): per-node collection, aggregation, batched upload.
+
+Production shape: eBPF programs + Rust daemon per node, Unix-socket
+registration from training processes, 30 s upload batches, chunked symbol
+uploads keyed by Build ID, ~200 MB resident budget.  Here the agent is a
+Python object with the same lifecycle; collectors are pluggable (real
+SamplingProfiler, SimCluster feeds, or a replayed trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.aggregate import StackAggregator
+from repro.core.collective.tracer import CollectiveTracer
+from repro.core.events import IterationProfile
+from repro.core.samplers import SamplingProfiler
+from repro.core.symbols.resolver import CentralResolver
+
+
+@dataclasses.dataclass
+class AgentConfig:
+    rank: int = 0
+    job_id: str = "job-0"
+    hz: float = 99.0
+    sampling_rate: float = 0.10
+    drain_interval_s: float = 5.0
+    upload_interval_s: float = 30.0
+    buffer_limit_s: float = 3600.0   # local buffering if service is down (§7)
+
+
+@dataclasses.dataclass
+class RegisteredProcess:
+    pid: int
+    rank: int
+    job_id: str
+    group_ids: List[str]
+
+
+class NodeAgent:
+    """One per node.  ``service`` is duck-typed: needs ``ingest(profile)``
+    and ``symbol_repo`` — the central service or a test double."""
+
+    def __init__(self, cfg: AgentConfig, service=None):
+        self.cfg = cfg
+        self.service = service
+        self.aggregator = StackAggregator()
+        self.sampler = SamplingProfiler(
+            hz=cfg.hz, sampling_rate=cfg.sampling_rate, rank=cfg.rank,
+            aggregator=self.aggregator)
+        self.tracer = CollectiveTracer(rank=cfg.rank)
+        self.resolver: Optional[CentralResolver] = (
+            CentralResolver(service.symbol_repo) if service is not None
+            and hasattr(service, "symbol_repo") else None)
+        self._procs: Dict[int, RegisteredProcess] = {}
+        self._buffer: List[IterationProfile] = []
+        self._lock = threading.Lock()
+        self.uploads = 0
+        self.dropped = 0
+
+    # -- the SYSOM_SOCK_PATH handshake (§4) ----------------------------------
+    def register_process(self, pid: int, rank: int, job_id: str,
+                         comm_snapshots: List[bytes]) -> RegisteredProcess:
+        """Training process registration: pid + packed communicator
+        snapshots (parsed without symbols)."""
+        groups = []
+        for blob in comm_snapshots:
+            info = self.tracer.register_comm_snapshot(blob)
+            groups.append(info.group_id)
+        rp = RegisteredProcess(pid, rank, job_id, groups)
+        self._procs[pid] = rp
+        return rp
+
+    def register_binary(self, binary) -> None:
+        """Build-ID dedup'd symbol upload."""
+        if self.resolver is not None:
+            self.resolver.ensure_uploaded(binary)
+
+    # -- profile submission ----------------------------------------------------
+    def submit(self, profile: IterationProfile) -> None:
+        with self._lock:
+            self._buffer.append(profile)
+            # local buffering bound: drop oldest beyond ~1 h at 1 iter/s
+            limit = int(self.cfg.buffer_limit_s)
+            if len(self._buffer) > limit:
+                self.dropped += len(self._buffer) - limit
+                self._buffer = self._buffer[-limit:]
+
+    def flush(self) -> int:
+        """Upload one batch to the central service (the 30 s cycle)."""
+        with self._lock:
+            batch, self._buffer = self._buffer, []
+        if self.service is None:
+            with self._lock:
+                self._buffer = batch + self._buffer
+            return 0
+        for p in batch:
+            self.service.ingest(p)
+        self.uploads += len(batch)
+        return len(batch)
+
+    # -- real-profiling lifecycle ------------------------------------------------
+    def start(self) -> None:
+        self.sampler.start()
+
+    def stop(self) -> None:
+        self.sampler.stop()
+
+    def drain_stacks(self):
+        return self.aggregator.drain()

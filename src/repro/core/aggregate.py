@@ -1,0 +1,73 @@
+"""In-kernel-style stack aggregation (§4).
+
+The eBPF program hashes each stack and increments a per-stack counter in a
+BPF hash map; the userspace daemon drains the map every 5 s, cutting data
+volume 10–50x vs per-sample streaming.  This module reproduces the same
+structure: a bounded hash map keyed by stack hash, drain(), and volume
+accounting so the reduction factor is measurable (benchmarks/bench_aggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Tuple
+
+from repro.core.events import RawStackSample
+
+
+@dataclasses.dataclass
+class DrainStats:
+    raw_samples: int = 0
+    unique_stacks: int = 0
+    raw_bytes: int = 0
+    drained_bytes: int = 0
+
+    @property
+    def reduction(self) -> float:
+        return self.raw_bytes / max(self.drained_bytes, 1)
+
+
+class StackAggregator:
+    """Bounded stack-hash -> (stack, count) map with periodic drain.
+
+    ``max_entries`` models the fixed-size BPF map; on overflow the sample is
+    passed through un-aggregated (same behavior as a full BPF map with a
+    userspace fallback ring).
+    """
+
+    _FRAME_BYTES = 16      # (build_id ref, offset) per frame on the wire
+    _HEADER_BYTES = 24     # rank, ts, weight
+
+    def __init__(self, max_entries: int = 16384):
+        self.max_entries = max_entries
+        self._map: Dict[int, Tuple[Tuple, int]] = {}
+        self._overflow: List[RawStackSample] = []
+        self._lock = threading.Lock()
+        self.stats = DrainStats()
+
+    def record(self, sample: RawStackSample) -> None:
+        key = hash(sample.frames)
+        with self._lock:
+            self.stats.raw_samples += sample.weight
+            self.stats.raw_bytes += (self._HEADER_BYTES
+                                     + self._FRAME_BYTES * len(sample.frames))
+            ent = self._map.get(key)
+            if ent is not None:
+                self._map[key] = (ent[0], ent[1] + sample.weight)
+            elif len(self._map) < self.max_entries:
+                self._map[key] = (sample.frames, sample.weight)
+            else:
+                self._overflow.append(sample)
+
+    def drain(self) -> List[Tuple[Tuple, int]]:
+        """Returns [(frames, count)] and resets the map (the 5 s cycle)."""
+        with self._lock:
+            out = list(self._map.values())
+            out.extend((s.frames, s.weight) for s in self._overflow)
+            self._map.clear()
+            self._overflow.clear()
+            self.stats.unique_stacks += len(out)
+            for frames, _ in out:
+                self.stats.drained_bytes += (self._HEADER_BYTES
+                                             + self._FRAME_BYTES * len(frames))
+        return out

@@ -1,0 +1,62 @@
+"""Temporal baseline comparison (§3.1).
+
+When no straggler fires but absolute iteration time rises (uniform
+degradation — Cases 4 & 5), compare the current per-group flame graph
+against a historical baseline; functions whose CPU fraction increased by
+more than delta (default 0.5%) are degradation candidates.  Cross-rank
+answers *which rank*; temporal answers *when* and *what code path*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.diffdiag import classify_functions
+from repro.core.flamegraph import FlameGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationCandidate:
+    function: str
+    fraction_now: float
+    fraction_baseline: float
+    delta: float
+    root_cause: str = ""
+    action: str = ""
+
+
+class BaselineStore:
+    """Historical per-group flame-graph baselines (the central log service's
+    role); keyed by (job, group)."""
+
+    def __init__(self):
+        self._store: Dict[Tuple[str, str], FlameGraph] = {}
+        self._iter_time: Dict[Tuple[str, str], float] = {}
+
+    def save(self, job: str, group: str, fg: FlameGraph,
+             iter_time: Optional[float] = None) -> None:
+        self._store[(job, group)] = fg
+        if iter_time is not None:
+            self._iter_time[(job, group)] = iter_time
+
+    def get(self, job: str, group: str) -> Optional[FlameGraph]:
+        return self._store.get((job, group))
+
+    def iter_time(self, job: str, group: str) -> Optional[float]:
+        return self._iter_time.get((job, group))
+
+
+def compare_to_baseline(current: FlameGraph, baseline: FlameGraph,
+                        delta: float = 0.005) -> List[DegradationCandidate]:
+    now = current.function_fractions()
+    base = baseline.function_fractions()
+    out: List[DegradationCandidate] = []
+    for fn, fr in now.items():
+        d = fr - base.get(fn, 0.0)
+        if d > delta:
+            cls = classify_functions([fn])
+            cause, action = cls if cls else ("", "")
+            out.append(DegradationCandidate(fn, fr, base.get(fn, 0.0), d,
+                                            cause, action))
+    out.sort(key=lambda c: -c.delta)
+    return out

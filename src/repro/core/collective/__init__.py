@@ -1,0 +1,3 @@
+from repro.core.collective.introspect import CommStructCodec, CommInfo  # noqa: F401
+from repro.core.collective.instances import separate_instances  # noqa: F401
+from repro.core.collective.tracer import CollectiveTracer  # noqa: F401

@@ -1,0 +1,62 @@
+"""Collective-instance separation by temporal overlap (§3.2).
+
+Matching the i-th AllReduce on rank 0 with the i-th on rank 7 normally uses
+ncclComm.opCount — but for point-to-point ops that counter lives in GPU
+memory (expensive to read).  SysOM-AI instead exploits the blocking
+semantics: operations that overlap in time across ranks belong to the same
+instance.  Within one (group, op) channel, instances are formed greedily in
+start-time order; an event joins the current instance iff it overlaps the
+instance's running intersection window and the instance does not yet have
+an event from that rank.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.events import CollectiveEvent
+
+
+def separate_instances(events: Sequence[CollectiveEvent],
+                       clock_skew: Dict[int, float] | None = None
+                       ) -> List[List[CollectiveEvent]]:
+    """Group events into collective instances.  Returns instances sorted by
+    start time; every event is annotated (via dataclasses.replace) with its
+    instance index."""
+    import dataclasses
+
+    skew = clock_skew or {}
+    chans: Dict[Tuple[str, str], List[CollectiveEvent]] = defaultdict(list)
+    for e in events:
+        chans[(e.group_id, e.op)].append(e)
+
+    instances: List[List[CollectiveEvent]] = []
+    for (_, _), evs in chans.items():
+        evs = sorted(evs, key=lambda e: e.entry - skew.get(e.rank, 0.0))
+        open_insts: List[dict] = []   # {"lo","hi","ranks","events"}
+        for e in evs:
+            entry = e.entry - skew.get(e.rank, 0.0)
+            exit_ = e.exit - skew.get(e.rank, 0.0)
+            placed = False
+            for inst in open_insts:
+                if e.rank in inst["ranks"]:
+                    continue
+                # overlap with running intersection window?
+                if entry <= inst["hi"] and exit_ >= inst["lo"]:
+                    inst["lo"] = max(inst["lo"], entry)
+                    inst["hi"] = min(inst["hi"], exit_)
+                    inst["ranks"].add(e.rank)
+                    inst["events"].append(e)
+                    placed = True
+                    break
+            if not placed:
+                open_insts.append({"lo": entry, "hi": exit_,
+                                   "ranks": {e.rank}, "events": [e]})
+        instances.extend(sorted(i["events"], key=lambda e: e.rank)
+                         for i in open_insts)
+
+    instances.sort(key=lambda inst: min(e.entry for e in inst))
+    out = []
+    for idx, inst in enumerate(instances):
+        out.append([dataclasses.replace(e, instance=idx) for e in inst])
+    return out

@@ -1,0 +1,103 @@
+"""Communication-group identification WITHOUT debug symbols (§3.2).
+
+Production NCCL builds ship stripped, so ``ncclComm`` cannot be parsed via
+DWARF.  SysOM-AI instead pre-registers the struct layout at known
+version-specific offsets (NCCL 2.14–2.21 + ACCL) and reads the fields
+straight out of communicator memory.  The cost: a configuration update when
+the internal layout changes — reproduced here verbatim: the codec knows
+per-version offset tables and parses raw communicator snapshots (bytes) it
+has never seen the source for.
+
+The JAX adaptation: our runtime snapshots its "communicator" (mesh axis
+groups) into the same packed binary layout at registration time, so the
+agent-side parsing problem is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, Optional, Tuple
+
+# (field -> (offset, struct fmt)) per supported library version.  Layouts
+# intentionally differ between versions, as NCCL's internals do.
+_LAYOUTS: Dict[str, Dict[str, Tuple[int, str]]] = {
+    "nccl-2.14": {"magic": (0x00, "<Q"), "commHash": (0x10, "<Q"),
+                  "rank": (0x30, "<i"), "nRanks": (0x34, "<i"),
+                  "localRank": (0x38, "<i"), "opCount": (0x60, "<Q")},
+    "nccl-2.18": {"magic": (0x00, "<Q"), "commHash": (0x18, "<Q"),
+                  "rank": (0x40, "<i"), "nRanks": (0x44, "<i"),
+                  "localRank": (0x48, "<i"), "opCount": (0x70, "<Q")},
+    "nccl-2.21": {"magic": (0x00, "<Q"), "commHash": (0x20, "<Q"),
+                  "rank": (0x48, "<i"), "nRanks": (0x4C, "<i"),
+                  "localRank": (0x50, "<i"), "opCount": (0x80, "<Q")},
+    "accl-1.x": {"magic": (0x00, "<Q"), "commHash": (0x08, "<Q"),
+                 "rank": (0x20, "<i"), "nRanks": (0x24, "<i"),
+                 "localRank": (0x28, "<i"), "opCount": (0x50, "<Q")},
+}
+_MAGIC = 0x53594F4D_41492121  # "SYOM" "AI!!"
+_SNAPSHOT_SIZE = 0x100
+
+
+@dataclasses.dataclass(frozen=True)
+class CommInfo:
+    version: str
+    comm_hash: int
+    rank: int
+    n_ranks: int
+    local_rank: int
+    op_count: int
+
+    @property
+    def group_id(self) -> str:
+        return f"{self.comm_hash:016x}"
+
+
+class CommStructCodec:
+    """Pack/parse communicator snapshots at version-specific offsets."""
+
+    @staticmethod
+    def supported_versions():
+        return sorted(_LAYOUTS)
+
+    @staticmethod
+    def pack(version: str, *, comm_hash: int, rank: int, n_ranks: int,
+             local_rank: int = 0, op_count: int = 0) -> bytes:
+        layout = _LAYOUTS[version]
+        buf = bytearray(_SNAPSHOT_SIZE)
+        vals = {"magic": _MAGIC, "commHash": comm_hash, "rank": rank,
+                "nRanks": n_ranks, "localRank": local_rank,
+                "opCount": op_count}
+        for field, (off, fmt) in layout.items():
+            struct.pack_into(fmt, buf, off, vals[field])
+        return bytes(buf)
+
+    @staticmethod
+    def parse(version: str, blob: bytes) -> CommInfo:
+        """Parse with a KNOWN version (config supplied, as in production)."""
+        layout = _LAYOUTS[version]
+
+        def rd(field):
+            off, fmt = layout[field]
+            return struct.unpack_from(fmt, blob, off)[0]
+
+        if rd("magic") != _MAGIC:
+            raise ValueError(f"bad communicator magic under layout {version}")
+        return CommInfo(version, rd("commHash"), rd("rank"), rd("nRanks"),
+                        rd("localRank"), rd("opCount"))
+
+    @classmethod
+    def sniff(cls, blob: bytes) -> Optional[CommInfo]:
+        """Identify the version by trying known layouts (magic + sanity
+        checks) — what the agent does when the job doesn't declare its
+        library version."""
+        for version in _LAYOUTS:
+            try:
+                info = cls.parse(version, blob)
+            except (ValueError, struct.error):
+                continue
+            if 0 <= info.rank < info.n_ranks <= 1_000_000:
+                # disambiguate versions sharing the magic offset: require
+                # consistent localRank too
+                if 0 <= info.local_rank <= info.rank:
+                    return info
+        return None

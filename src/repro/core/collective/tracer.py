@@ -1,0 +1,81 @@
+"""Runtime-side collective tracing — the library-boundary interception
+point of §3.2, adapted to JAX.
+
+On GPU the paper uprobes ncclAllReduce & friends.  In a JAX runtime the
+collectives are compiled into the XLA executable, so the TPU-idiomatic
+boundary is the *step* + *collective schedule*: the tracer (a) registers the
+job's communicators (packed snapshots parsed by CommStructCodec — no
+symbols), (b) timestamps step/collective segments on the host, and (c) for
+compiled programs, attributes per-collective bytes from the dry-run HLO
+schedule so each CollectiveEvent carries realistic sizes.
+
+The tracer is framework-agnostic by construction: anything that can call
+``record_collective`` (our train loop, the SimCluster, a replayed trace)
+produces identical downstream analysis.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.collective.introspect import CommInfo, CommStructCodec
+from repro.core.events import CollectiveEvent
+
+
+class CollectiveTracer:
+    def __init__(self, rank: int = 0, clock: Callable[[], float] = time.monotonic):
+        self.rank = rank
+        self.clock = clock
+        self._comms: Dict[str, CommInfo] = {}
+        self._events: List[CollectiveEvent] = []
+        self._seq = 0
+        self._lock = threading.Lock()
+
+    # -- registration (the Unix-domain-socket handshake of §4) --------------
+    def register_comm_snapshot(self, blob: bytes,
+                               version: Optional[str] = None) -> CommInfo:
+        info = (CommStructCodec.parse(version, blob) if version
+                else CommStructCodec.sniff(blob))
+        if info is None:
+            raise ValueError("unrecognized communicator snapshot")
+        self._comms[info.group_id] = info
+        return info
+
+    def groups(self) -> List[str]:
+        return list(self._comms)
+
+    # -- event recording -----------------------------------------------------
+    def record_collective(self, group_id: str, op: str, *, entry: float,
+                          exit: float, nbytes: int = 0,
+                          device_duration: float = 0.0) -> CollectiveEvent:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        ev = CollectiveEvent(rank=self.rank, group_id=group_id, op=op,
+                             entry=entry, exit=exit, nbytes=nbytes,
+                             device_duration=device_duration, seq=seq)
+        with self._lock:
+            self._events.append(ev)
+        return ev
+
+    def timed_collective(self, group_id: str, op: str, nbytes: int = 0):
+        """Context manager stamping entry/exit around a blocking op."""
+        tracer = self
+
+        class _Ctx:
+            def __enter__(self):
+                self.t0 = tracer.clock()
+                return self
+
+            def __exit__(self, *exc):
+                tracer.record_collective(group_id, op, entry=self.t0,
+                                         exit=tracer.clock(), nbytes=nbytes)
+                return False
+
+        return _Ctx()
+
+    def drain(self) -> List[CollectiveEvent]:
+        with self._lock:
+            out, self._events = self._events, []
+        return out

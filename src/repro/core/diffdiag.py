@@ -1,0 +1,176 @@
+"""Layered differential diagnosis (§3.1).
+
+Given a flagged straggler and a healthy reference rank, generate
+layer-by-layer differential profiles and walk them in order:
+
+  (1) GPU diff   — uniform kernel slowdown => hardware (thermal/frequency);
+                   specific-kernel slowdown => software (operator change).
+  (2) CPU diff   — if GPU matches, diff flame graphs; new hot paths reveal
+                   host-side interference, classified by SOP signature rules.
+  (3) OS diff    — if CPU profiles match, compare interrupt counts,
+                   scheduler latency, NUMA migrations (signals too brief to
+                   appear in sampled flame graphs).
+
+Each verdict carries the evidence that produced it, mirroring the paper's
+case studies (§5.4): the same inputs reproduce Cases 1–3; Cases 4–5 go
+through the temporal-baseline path (baseline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.events import KernelEvent, OSSignals
+from repro.core.flamegraph import FlameGraph
+
+# SOP signature rules: hot-function patterns -> root-cause class + action.
+# These mirror the paper's production rule set (§5, "log-based SOP rule
+# matching") for the CPU-diff layer.
+SOP_RULES: List[Tuple[Tuple[str, ...], str, str]] = [
+    (("net_rx_action", "napi_poll"), "nic_softirq_contention",
+     "isolate NIC interrupts from training cores via /proc/irq/*/smp_affinity"),
+    (("queued_spin_lock_slowpath",), "vfs_dentry_lock_contention",
+     "locate the dcache-invalidating service (e.g. systemctl daemon-reload)"),
+    (("SLS::LogClient::Send",), "logging_overhead",
+     "revert log verbosity (serialization on training threads)"),
+    (("protobuf::Serialize",), "logging_overhead",
+     "revert log verbosity (serialization on training threads)"),
+    (("cpfs", ), "storage_io_bottleneck",
+     "upgrade storage tier / increase data-loader parallelism"),
+    (("ossutils",), "storage_io_bottleneck",
+     "upgrade storage tier / increase data-loader parallelism"),
+    (("do_sys_openat2",), "vfs_dentry_lock_contention",
+     "locate the dcache-invalidating service"),
+]
+
+
+@dataclasses.dataclass
+class Verdict:
+    layer: str                    # gpu | cpu | os | inconclusive
+    root_cause: str
+    confidence: float
+    evidence: Dict[str, object]
+    action: str = ""
+
+
+def classify_functions(functions: Sequence[str]) -> Optional[Tuple[str, str]]:
+    for pattern, cause, action in SOP_RULES:
+        if all(any(p in fn for fn in functions) for p in pattern):
+            return cause, action
+    return None
+
+
+# ---------------------------------------------------------------------------
+# layer 1: GPU diff
+# ---------------------------------------------------------------------------
+
+
+def gpu_diff(straggler: Sequence[KernelEvent], healthy: Sequence[KernelEvent],
+             uniform_cv: float = 0.05, slow_ratio: float = 1.02
+             ) -> Optional[Verdict]:
+    def per_kernel(evs):
+        acc: Dict[str, List[float]] = {}
+        for e in evs:
+            acc.setdefault(e.name, []).append(e.duration)
+        return {k: sum(v) / len(v) for k, v in acc.items()}
+
+    a, b = per_kernel(straggler), per_kernel(healthy)
+    common = sorted(set(a) & set(b))
+    if not common:
+        return None
+    ratios = {k: a[k] / b[k] for k in common if b[k] > 0}
+    vals = list(ratios.values())
+    med = statistics.median(vals)
+    cv = (statistics.pstdev(vals) / med) if med > 0 else 0.0
+
+    if med >= slow_ratio and cv <= uniform_cv:
+        return Verdict(
+            layer="gpu", root_cause="gpu_uniform_slowdown",
+            confidence=min(1.0, (med - 1) * 20),
+            evidence={"median_ratio": med, "ratio_cv": cv,
+                      "kernels": len(common), "per_kernel_ratio": ratios},
+            action="check DCGM clocks/thermals (frequency reduction)")
+    slow = {k: r for k, r in ratios.items() if r >= slow_ratio}
+    if slow and med < slow_ratio:
+        return Verdict(
+            layer="gpu", root_cause="gpu_specific_kernels_slow",
+            confidence=0.8,
+            evidence={"slow_kernels": slow, "median_ratio": med},
+            action="inspect recent operator/kernel changes")
+    return None  # GPU profiles match -> descend to CPU layer
+
+
+# ---------------------------------------------------------------------------
+# layer 2: CPU diff
+# ---------------------------------------------------------------------------
+
+
+def cpu_diff(straggler: FlameGraph, healthy: FlameGraph,
+             min_delta: float = 0.005) -> Optional[Verdict]:
+    deltas = straggler.diff(healthy)
+    hot = {fn: d for fn, d in deltas.items() if d >= min_delta}
+    if not hot:
+        return None
+    cls = classify_functions(list(hot))
+    cause, action = cls if cls else (
+        "cpu_host_interference", "inspect divergent host-side code paths")
+    return Verdict(
+        layer="cpu", root_cause=cause,
+        confidence=min(1.0, max(hot.values()) / 0.02),
+        evidence={"hot_deltas": dict(sorted(hot.items(), key=lambda kv: -kv[1])[:12])},
+        action=action)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: OS diff
+# ---------------------------------------------------------------------------
+
+
+def os_diff(straggler: OSSignals, healthy: OSSignals,
+            irq_ratio: float = 2.0, sched_ratio: float = 2.0
+            ) -> Optional[Verdict]:
+    evidence: Dict[str, object] = {}
+    causes = []
+    for irq, cnt in straggler.interrupts.items():
+        base = healthy.interrupts.get(irq, 0)
+        if cnt > max(base, 1) * irq_ratio and cnt - base > 1000:
+            causes.append("irq_imbalance")
+            evidence[f"irq:{irq}"] = (cnt, base)
+    if (straggler.sched_latency_p99
+            > max(healthy.sched_latency_p99, 1e-6) * sched_ratio):
+        causes.append("scheduler_contention")
+        evidence["sched_latency_p99"] = (straggler.sched_latency_p99,
+                                         healthy.sched_latency_p99)
+    if straggler.numa_migrations > max(healthy.numa_migrations, 1) * 4:
+        causes.append("numa_migration_storm")
+        evidence["numa_migrations"] = (straggler.numa_migrations,
+                                       healthy.numa_migrations)
+    if not causes:
+        return None
+    return Verdict(layer="os", root_cause=causes[0], confidence=0.7,
+                   evidence=evidence,
+                   action="inspect /proc/interrupts binding and cgroup shares")
+
+
+# ---------------------------------------------------------------------------
+# the layered walk
+# ---------------------------------------------------------------------------
+
+
+def diagnose(straggler_kernels, healthy_kernels,
+             straggler_cpu: FlameGraph, healthy_cpu: FlameGraph,
+             straggler_os: Optional[OSSignals] = None,
+             healthy_os: Optional[OSSignals] = None) -> Verdict:
+    v = gpu_diff(straggler_kernels, healthy_kernels)
+    if v:
+        return v
+    v = cpu_diff(straggler_cpu, healthy_cpu)
+    if v:
+        return v
+    if straggler_os and healthy_os:
+        v = os_diff(straggler_os, healthy_os)
+        if v:
+            return v
+    return Verdict(layer="inconclusive", root_cause="unknown", confidence=0.0,
+                   evidence={}, action="escalate with raw profiles attached")

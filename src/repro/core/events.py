@@ -1,0 +1,81 @@
+"""Cross-layer event schema.
+
+Every collector (real sampler, eBPF-analog sim, collective tracer) emits
+these types; the diagnosis pipeline consumes ONLY this schema — that is
+what makes the system framework-agnostic (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSample:
+    """One sampled call stack (leaf-last tuple of symbolized frame names,
+    or raw addresses pre-symbolization)."""
+    rank: int
+    timestamp: float
+    frames: Tuple[str, ...]          # root..leaf
+    weight: int = 1
+    kind: str = "cpu"                # cpu | kernel | python | mixed
+
+
+@dataclasses.dataclass(frozen=True)
+class RawStackSample:
+    """Address-stack before central symbolization (§3.4): (build_id, offset)
+    per frame, leaf-first as produced by the unwinder."""
+    rank: int
+    timestamp: float
+    frames: Tuple[Tuple[str, int], ...]   # (build_id, offset), leaf..root
+    weight: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEvent:
+    """One accelerator kernel execution (host-side timing, §4)."""
+    rank: int
+    name: str
+    start: float
+    duration: float
+    stream: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveEvent:
+    """One collective operation on one rank (§3.2)."""
+    rank: int
+    group_id: str                    # communication group (comm hash)
+    op: str                          # AllReduce | ReduceScatter | AllGather | ...
+    entry: float                     # host-side entry timestamp (local clock)
+    exit: float                      # host-side completion timestamp
+    nbytes: int = 0
+    device_duration: float = 0.0     # GPU-side duration
+    instance: int = -1               # filled by instance separation
+    seq: int = -1                    # per-rank op counter (debug only)
+
+
+@dataclasses.dataclass(frozen=True)
+class OSSignals:
+    """OS-subsystem counters for the OS-diff layer (§3.1): brief,
+    high-frequency events that sampled flame graphs miss."""
+    rank: int
+    timestamp: float
+    interrupts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    softirq_residency: Dict[str, float] = dataclasses.field(default_factory=dict)
+    sched_latency_p99: float = 0.0
+    numa_migrations: int = 0
+    cpu_steal: float = 0.0
+
+
+@dataclasses.dataclass
+class IterationProfile:
+    """Everything one rank reports for one training iteration."""
+    rank: int
+    iteration: int
+    group_id: str
+    iter_time: float
+    cpu_samples: List[StackSample] = dataclasses.field(default_factory=list)
+    kernel_events: List[KernelEvent] = dataclasses.field(default_factory=list)
+    collectives: List[CollectiveEvent] = dataclasses.field(default_factory=list)
+    os_signals: Optional[OSSignals] = None

@@ -1,0 +1,98 @@
+"""Folded-stack flame graphs: build, merge, per-function fractions, diff.
+
+A FlameGraph is a multiset of root..leaf stack tuples.  The differential
+views in §3.1 (cross-rank CPU diff, temporal baseline diff) are computed on
+per-function *inclusive* fractions — matching how the paper's Figures 6–8
+read ("x% of total CPU time in path p").
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Iterable, List, Tuple
+
+from repro.core.events import StackSample
+
+
+@dataclasses.dataclass
+class FlameGraph:
+    counts: Dict[Tuple[str, ...], int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    total: int = 0
+
+    # -- construction -------------------------------------------------------
+    def add(self, frames: Tuple[str, ...], weight: int = 1) -> None:
+        self.counts[tuple(frames)] += weight
+        self.total += weight
+
+    def add_samples(self, samples: Iterable[StackSample]) -> None:
+        for s in samples:
+            self.add(s.frames, s.weight)
+
+    @staticmethod
+    def from_samples(samples: Iterable[StackSample]) -> "FlameGraph":
+        fg = FlameGraph()
+        fg.add_samples(samples)
+        return fg
+
+    def merge(self, other: "FlameGraph") -> "FlameGraph":
+        out = FlameGraph()
+        for fg in (self, other):
+            for st, c in fg.counts.items():
+                out.add(st, c)
+        return out
+
+    # -- views ---------------------------------------------------------------
+    def function_fractions(self) -> Dict[str, float]:
+        """Inclusive fraction of samples whose stack contains each function."""
+        if self.total == 0:
+            return {}
+        incl: Dict[str, int] = defaultdict(int)
+        for st, c in self.counts.items():
+            for fn in set(st):
+                incl[fn] += c
+        return {fn: c / self.total for fn, c in incl.items()}
+
+    def leaf_fractions(self) -> Dict[str, float]:
+        if self.total == 0:
+            return {}
+        leaf: Dict[str, int] = defaultdict(int)
+        for st, c in self.counts.items():
+            if st:
+                leaf[st[-1]] += c
+        return {fn: c / self.total for fn, c in leaf.items()}
+
+    def folded(self) -> List[str]:
+        """Brendan-Gregg folded format lines (for external FG tooling)."""
+        return [";".join(st) + f" {c}" for st, c in sorted(self.counts.items())]
+
+    # -- diff -----------------------------------------------------------------
+    def diff(self, other: "FlameGraph") -> Dict[str, float]:
+        """self - other, per-function inclusive fraction deltas (sorted desc).
+        Positive = hotter in self."""
+        a, b = self.function_fractions(), other.function_fractions()
+        out = {}
+        for fn in set(a) | set(b):
+            out[fn] = a.get(fn, 0.0) - b.get(fn, 0.0)
+        return dict(sorted(out.items(), key=lambda kv: -abs(kv[1])))
+
+    def hot_paths(self, top: int = 10) -> List[Tuple[Tuple[str, ...], float]]:
+        if self.total == 0:
+            return []
+        items = sorted(self.counts.items(), key=lambda kv: -kv[1])[:top]
+        return [(st, c / self.total) for st, c in items]
+
+
+def path_fraction(fg: FlameGraph, path: Tuple[str, ...]) -> float:
+    """Fraction of samples whose stack contains ``path`` as a contiguous
+    subsequence (used to read interrupt chains like Fig 7)."""
+    if fg.total == 0:
+        return 0.0
+    n = len(path)
+    hit = 0
+    for st, c in fg.counts.items():
+        for i in range(len(st) - n + 1):
+            if st[i:i + n] == tuple(path):
+                hit += c
+                break
+    return hit / fg.total

@@ -1,0 +1,225 @@
+"""Central analysis service (§3–§5): ingestion, symbol repo, slow-rank
+detection, layered differential diagnosis, temporal baselines, SOP rules.
+
+Pipeline per ingested batch:
+  1. collective events -> instance separation -> StragglerDetector
+  2. CPU samples -> per-rank flame graphs -> CPUWaterline
+  3. alert? -> layered diagnosis (GPU diff -> CPU diff -> OS diff)
+     no alert but iter-time regression? -> temporal baseline comparison
+  4. every diagnosis becomes a DiagnosticEvent with a category matching the
+     paper's Fig 2 taxonomy (gpu_hardware | os_interference | network |
+     software) and a wall-clock diagnosis latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.baseline import BaselineStore, compare_to_baseline
+from repro.core.collective.instances import separate_instances
+from repro.core.diffdiag import Verdict, diagnose
+from repro.core.events import CollectiveEvent, IterationProfile
+from repro.core.flamegraph import FlameGraph
+from repro.core.straggler import StragglerAlert, StragglerDetector
+from repro.core.symbols.repo import SymbolRepository
+from repro.core.waterline import CPUWaterline
+
+# Fig 2 taxonomy
+CATEGORY_BY_CAUSE = {
+    "gpu_uniform_slowdown": "gpu_hardware",
+    "gpu_specific_kernels_slow": "software",
+    "nic_softirq_contention": "os_interference",
+    "vfs_dentry_lock_contention": "os_interference",
+    "scheduler_contention": "os_interference",
+    "irq_imbalance": "os_interference",
+    "numa_migration_storm": "os_interference",
+    "logging_overhead": "software",
+    "storage_io_bottleneck": "software",
+    "network_slow_collective": "network",
+    "cpu_host_interference": "os_interference",
+    "unknown": "unknown",
+}
+
+# log-based SOP rules (the paper's 1,454 "software" events, median 1 min)
+LOG_SOP_RULES: List[Tuple[str, str]] = [
+    ("CUDA out of memory", "oom"),
+    ("NCCL timeout", "nccl_timeout"),
+    ("ECC error", "gpu_ecc"),
+    ("checkpoint write failed", "ckpt_storage"),
+    ("Loss is NaN", "loss_nan"),
+]
+
+
+@dataclasses.dataclass
+class DiagnosticEvent:
+    job_id: str
+    group_id: str
+    category: str
+    root_cause: str
+    verdict: Optional[Verdict]
+    straggler_rank: Optional[int]
+    detected_at: float
+    diagnosis_latency_s: float
+    evidence: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+class CentralService:
+    def __init__(self, window: int = 100, k: float = 2.0,
+                 baseline_delta: float = 0.005,
+                 iter_regression: float = 0.05,
+                 robust_detector: bool = False):
+        self.symbol_repo = SymbolRepository()
+        self.baselines = BaselineStore()
+        self.detector = StragglerDetector(window=window, k=k,
+                                          robust=robust_detector)
+        self.waterlines: Dict[str, CPUWaterline] = defaultdict(
+            lambda: CPUWaterline(window=window, k=k))
+        self.baseline_delta = baseline_delta
+        self.iter_regression = iter_regression
+        self.events: List[DiagnosticEvent] = []
+        # latest per (group, rank) profile for differential diagnosis
+        self._latest: Dict[Tuple[str, int], IterationProfile] = {}
+        self._group_iter_time: Dict[str, List[float]] = defaultdict(list)
+        self._pending_collectives: List[CollectiveEvent] = []
+        self._job_by_group: Dict[str, str] = {}
+        self.ingested = 0
+
+    # -- ingestion -----------------------------------------------------------
+    def ingest(self, profile: IterationProfile, job_id: str = "job-0") -> None:
+        self.ingested += 1
+        g = profile.group_id
+        self._job_by_group[g] = job_id
+        self._latest[(g, profile.rank)] = profile
+        self._group_iter_time[g].append(profile.iter_time)
+        self._pending_collectives.extend(profile.collectives)
+        fg = FlameGraph.from_samples(profile.cpu_samples)
+        self.waterlines[g].observe(profile.rank, fg)
+
+    def ingest_log_line(self, job_id: str, line: str) -> Optional[DiagnosticEvent]:
+        for pattern, cause in LOG_SOP_RULES:
+            if pattern.lower() in line.lower():
+                ev = DiagnosticEvent(
+                    job_id=job_id, group_id="-", category="software",
+                    root_cause=cause, verdict=None, straggler_rank=None,
+                    detected_at=time.monotonic(), diagnosis_latency_s=0.0,
+                    evidence={"log": line[:200]})
+                self.events.append(ev)
+                return ev
+        return None
+
+    # -- analysis cycle (the "processed within minutes" loop) ----------------
+    def process(self) -> List[DiagnosticEvent]:
+        t0 = time.monotonic()
+        new_events: List[DiagnosticEvent] = []
+
+        # 1. instance separation + straggler detection
+        if self._pending_collectives:
+            for inst in separate_instances(self._pending_collectives):
+                self.detector.observe_instance(inst)
+            self._pending_collectives = []
+        alerts = self.detector.check()
+
+        flagged_groups = set()
+        for alert in alerts[:8]:  # bounded per cycle
+            flagged_groups.add(alert.group_id)
+            ev = self._diagnose_straggler(alert, t0)
+            if ev:
+                new_events.append(ev)
+
+        # 2. uniform-degradation path (no straggler, iter time regressed)
+        for g, times in self._group_iter_time.items():
+            if g in flagged_groups or len(times) < 4:
+                continue
+            ev = self._check_temporal(g, times, t0)
+            if ev:
+                new_events.append(ev)
+
+        self.events.extend(new_events)
+        return new_events
+
+    # -- straggler path ---------------------------------------------------------
+    def _diagnose_straggler(self, alert: StragglerAlert,
+                            t0: float) -> Optional[DiagnosticEvent]:
+        g = alert.group_id
+        ranks = sorted(r for (gg, r) in self._latest if gg == g)
+        if len(ranks) < 2 or alert.rank not in ranks:
+            return None
+        healthy_candidates = [r for r in ranks if r != alert.rank]
+        healthy = healthy_candidates[-1]
+        sp = self._latest[(g, alert.rank)]
+        hp = self._latest[(g, healthy)]
+
+        verdict = diagnose(
+            sp.kernel_events, hp.kernel_events,
+            FlameGraph.from_samples(sp.cpu_samples),
+            FlameGraph.from_samples(hp.cpu_samples),
+            sp.os_signals, hp.os_signals)
+        if verdict.layer == "inconclusive" and alert.lateness > 1e-4:
+            # timing says slow but no layer diverges -> network path (§7)
+            verdict = Verdict(layer="network",
+                              root_cause="network_slow_collective",
+                              confidence=0.5,
+                              evidence={"lateness": alert.lateness},
+                              action="inspect fabric counters / RDMA stats")
+        return DiagnosticEvent(
+            job_id=self._job_by_group.get(g, "job-0"), group_id=g,
+            category=CATEGORY_BY_CAUSE.get(verdict.root_cause, "unknown"),
+            root_cause=verdict.root_cause, verdict=verdict,
+            straggler_rank=alert.rank, detected_at=t0,
+            diagnosis_latency_s=time.monotonic() - t0,
+            evidence={"alert": dataclasses.asdict(alert)})
+
+    # -- temporal path -------------------------------------------------------------
+    def _check_temporal(self, g: str, times: List[float],
+                        t0: float) -> Optional[DiagnosticEvent]:
+        job = self._job_by_group.get(g, "job-0")
+        base_time = self.baselines.iter_time(job, g)
+        recent = sum(times[-3:]) / len(times[-3:])
+        if base_time is None:
+            # bootstrap the baseline from the first healthy window
+            fg = self._group_flamegraph(g)
+            if fg is not None:
+                self.baselines.save(job, g, fg, iter_time=recent)
+            return None
+        if recent < base_time * (1 + self.iter_regression):
+            return None
+        baseline_fg = self.baselines.get(job, g)
+        current_fg = self._group_flamegraph(g)
+        if baseline_fg is None or current_fg is None:
+            return None
+        cands = compare_to_baseline(current_fg, baseline_fg,
+                                    self.baseline_delta)
+        if not cands:
+            return None
+        top = next((c for c in cands if c.root_cause), cands[0])
+        cause = top.root_cause or "cpu_host_interference"
+        verdict = Verdict(layer="cpu", root_cause=cause,
+                          confidence=min(1.0, top.delta / 0.01),
+                          evidence={"candidates": [
+                              dataclasses.asdict(c) for c in cands[:8]]},
+                          action=top.action)
+        return DiagnosticEvent(
+            job_id=job, group_id=g,
+            category=CATEGORY_BY_CAUSE.get(cause, "unknown"),
+            root_cause=cause, verdict=verdict, straggler_rank=None,
+            detected_at=t0, diagnosis_latency_s=time.monotonic() - t0,
+            evidence={"iter_time": (base_time, recent)})
+
+    def _group_flamegraph(self, g: str) -> Optional[FlameGraph]:
+        fgs = [FlameGraph.from_samples(p.cpu_samples)
+               for (gg, _r), p in self._latest.items() if gg == g]
+        if not fgs:
+            return None
+        out = fgs[0]
+        for f in fgs[1:]:
+            out = out.merge(f)
+        return out
+
+    # -- reporting -----------------------------------------------------------------
+    def event_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = defaultdict(int)
+        for e in self.events:
+            counts[e.category] += 1
+        return dict(counts)

@@ -1,0 +1,280 @@
+"""Multi-rank training-cluster simulation + fault injection (§5.4).
+
+Generates per-iteration IterationProfiles for an N-rank communication
+group running a synchronous training loop: realistic CPU flame graphs
+(the Fig 6 forward/softmax/dropout paths), per-kernel GPU timings, NCCL
+collective entry/exit events with per-rank clock skew and jitter, and OS
+signal counters.  Fault injectors reproduce the paper's five production
+case studies; the CentralService must recover each root cause.
+
+Wall-clock here is simulated (the cluster "runs" at arbitrary speed), so
+diagnosis latency is measured in iterations + real analysis time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.collective.introspect import CommStructCodec
+from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
+                               OSSignals, StackSample)
+
+# ---------------------------------------------------------------------------
+# baseline workload model (Fig 6's python/c++ mixed stacks)
+# ---------------------------------------------------------------------------
+
+_BASE_STACKS: List[Tuple[Tuple[str, ...], float]] = [
+    (("py::train_loop", "py::forward", "py::_wrapped_call_impl", "py::softmax",
+      "torch::autograd::THPVariable_softmax", "at::_ops::_softmax::call",
+      "at::native::softmax", "cudaLaunchKernel"), 0.21),
+    (("py::train_loop", "py::forward", "py::dropout",
+      "torch::autograd::THPVariable_dropout", "at::_ops::native_dropout::call",
+      "at::native::dropout_cuda", "cudaLaunchKernel"), 0.16),
+    (("py::train_loop", "py::forward", "py::attention_mask_func",
+      "at::_ops::masked_fill_::call", "at::native::masked_fill"), 0.10),
+    (("py::train_loop", "py::backward", "torch::autograd::Engine::execute",
+      "at::native::matmul_backward", "cudaLaunchKernel"), 0.25),
+    (("py::train_loop", "py::optimizer_step", "at::_ops::_foreach_add_::call",
+      "at::native::foreach_tensor_add"), 0.08),
+    (("py::train_loop", "py::data_next", "py::collate",
+      "PyObject_CallFunctionObjArgs"), 0.06),
+    (("ncclAllReduce", "ncclGroupEnd", "ncclProxyService"), 0.09),
+    (("py::train_loop", "py::log_metrics", "py::format"), 0.05),
+]
+
+_BASE_KERNELS: List[Tuple[str, float]] = [
+    ("gemm_bf16_128x128", 38e-3),
+    ("flash_attention_fwd", 21e-3),
+    ("elementwise_softmax", 8e-3),
+    ("dropout_kernel", 6e-3),
+    ("layernorm_fwd", 5e-3),
+    ("gemm_bf16_bwd", 52e-3),
+    ("ncclDevKernel_ReduceScatter", 14e-3),
+    ("adam_update", 4e-3),
+]
+
+# Fault stack fragments -------------------------------------------------------
+
+_NIC_SOFTIRQ_STACK = (
+    "asm_common_interrupt", "common_interrupt", "irq_exit_rcu", "do_softirq",
+    "net_rx_action", "napi_poll", "virtnet_poll", "virtnet_receive",
+    "napi_gro_receive")
+
+_VFS_STACKS = [
+    (("py::data_next", "py::open", "do_sys_openat2", "path_openat",
+      "link_path_walk", "__legitimize_path", "lockref_get_not_dead",
+      "queued_spin_lock_slowpath"), 0.65),
+    (("py::data_next", "py::open", "do_sys_openat2", "path_openat",
+      "terminate_walk", "dput", "queued_spin_lock_slowpath"), 0.24),
+    (("py::data_next", "py::open", "do_sys_openat2", "path_openat",
+      "lookup_fast", "unlazy_child", "queued_spin_lock_slowpath"), 0.11),
+]
+
+_LOGGING_STACK = ("py::train_loop", "py::log_metrics", "SLS::LogClient::Send",
+                  "protobuf::Serialize", "memcpy")
+
+_IO_STACKS = [
+    (("py::data_next", "py::read_shard", "cpfs::Client::Read",
+      "cpfs::RpcChannel::Call"), 0.6),
+    (("py::data_next", "py::fetch_object", "ossutils::GetObject",
+      "ossutils::HttpTransfer"), 0.4),
+]
+
+
+# ---------------------------------------------------------------------------
+# fault injectors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Fault:
+    name: str
+    ranks: Sequence[int]               # affected ranks ([] = all)
+    start_iteration: int = 0
+
+    def applies(self, rank: int, iteration: int) -> bool:
+        if iteration < self.start_iteration:
+            return False
+        return not self.ranks or rank in self.ranks
+
+
+def thermal_throttle(rank: int, start: int = 0, factor: float = 1.075) -> Fault:
+    f = Fault("gpu_thermal_throttle", [rank], start)
+    f.factor = factor  # type: ignore[attr-defined]
+    return f
+
+
+def nic_softirq(rank: int, start: int = 0, fraction: float = 0.0174) -> Fault:
+    f = Fault("nic_softirq_contention", [rank], start)
+    f.fraction = fraction  # type: ignore[attr-defined]
+    return f
+
+
+def vfs_lock_contention(ranks: Sequence[int], start: int = 0,
+                        slow: float = 1.6) -> Fault:
+    f = Fault("vfs_dentry_lock_contention", list(ranks), start)
+    f.slow = slow  # type: ignore[attr-defined]
+    return f
+
+
+def logging_overhead(start: int = 0, fraction: float = 0.10) -> Fault:
+    f = Fault("logging_overhead", [], start)
+    f.fraction = fraction  # type: ignore[attr-defined]
+    return f
+
+
+def io_bottleneck(start: int = 0, fraction: float = 0.12) -> Fault:
+    f = Fault("storage_io_bottleneck", [], start)
+    f.fraction = fraction  # type: ignore[attr-defined]
+    return f
+
+
+# ---------------------------------------------------------------------------
+# the simulated cluster
+# ---------------------------------------------------------------------------
+
+
+class SimCluster:
+    def __init__(self, n_ranks: int = 8, group_hash: int = 0xAB54A98CEB1F0AD2,
+                 comm_version: str = "nccl-2.18", seed: int = 0,
+                 samples_per_iter: int = 400, iter_time: float = 0.1):
+        self.n_ranks = n_ranks
+        self.rng = random.Random(seed)
+        self.samples_per_iter = samples_per_iter
+        self.base_iter_time = iter_time
+        self.iteration = 0
+        self.faults: List[Fault] = []
+        self.group_hash = group_hash
+        self.comm_version = comm_version
+        # per-rank clock skew (us-scale) — exercised by ClockAligner
+        self.skew = {r: self.rng.uniform(-2e-4, 2e-4) for r in range(n_ranks)}
+        self.group_id = f"{group_hash:016x}"
+
+    # -- registration handshake payloads --------------------------------------
+    def comm_snapshots(self, rank: int) -> List[bytes]:
+        return [CommStructCodec.pack(
+            self.comm_version, comm_hash=self.group_hash, rank=rank,
+            n_ranks=self.n_ranks, local_rank=rank % 8)]
+
+    def add_fault(self, fault: Fault) -> None:
+        self.faults.append(fault)
+
+    # -- one iteration ---------------------------------------------------------
+    def _cpu_samples(self, rank: int, t: float) -> List[StackSample]:
+        stacks = list(_BASE_STACKS)
+        for f in self.faults:
+            if not f.applies(rank, self.iteration):
+                continue
+            if f.name == "nic_softirq_contention":
+                frac = f.fraction  # type: ignore[attr-defined]
+                stacks.append((_NIC_SOFTIRQ_STACK, frac / (1 - frac)))
+            elif f.name == "vfs_dentry_lock_contention":
+                stacks = [(s, w * 0.25) for s, w in stacks]
+                stacks += [(s, w * 3.0) for s, w in _VFS_STACKS]
+            elif f.name == "logging_overhead":
+                frac = f.fraction  # type: ignore[attr-defined]
+                stacks.append((_LOGGING_STACK, frac / (1 - frac)))
+            elif f.name == "storage_io_bottleneck":
+                frac = f.fraction  # type: ignore[attr-defined]
+                stacks += [(s, w * frac / (1 - frac)) for s, w in _IO_STACKS]
+        total = sum(w for _, w in stacks)
+        samples = []
+        n = self.samples_per_iter
+        for stack, w in stacks:
+            cnt = round(n * w / total)
+            # Poisson-ish jitter so sigma is non-degenerate
+            cnt = max(0, cnt + self.rng.randint(-2, 2))
+            if cnt:
+                samples.append(StackSample(rank=rank, timestamp=t,
+                                           frames=stack, weight=cnt))
+        return samples
+
+    def _kernels(self, rank: int, t: float) -> Tuple[List[KernelEvent], float]:
+        factor = 1.0
+        for f in self.faults:
+            if f.name == "gpu_thermal_throttle" and f.applies(rank, self.iteration):
+                factor *= f.factor  # type: ignore[attr-defined]
+        evs, extra = [], 0.0
+        cursor = t
+        for name, dur in _BASE_KERNELS:
+            d = dur * factor * self.rng.uniform(0.995, 1.005)
+            evs.append(KernelEvent(rank=rank, name=name, start=cursor, duration=d))
+            cursor += d
+            extra += d - dur
+        return evs, extra
+
+    def _os_signals(self, rank: int, t: float) -> OSSignals:
+        irqs = {"LOC": 100_000 + self.rng.randint(-500, 500),
+                "NET_RX": 2_000 + self.rng.randint(-100, 100)}
+        sched_p99 = 80e-6 * self.rng.uniform(0.9, 1.1)
+        for f in self.faults:
+            if not f.applies(rank, self.iteration):
+                continue
+            if f.name == "nic_softirq_contention":
+                irqs["NET_RX"] = 95_000 + self.rng.randint(-2000, 2000)
+                sched_p99 *= 4.0
+            if f.name == "vfs_dentry_lock_contention":
+                sched_p99 *= 8.0
+        return OSSignals(rank=rank, timestamp=t, interrupts=irqs,
+                         softirq_residency={}, sched_latency_p99=sched_p99)
+
+    def step(self) -> List[IterationProfile]:
+        """Simulate one synchronous iteration across all ranks."""
+        t0 = self.iteration * self.base_iter_time
+        profiles = []
+        # per-rank compute time before entering the gradient collective
+        entry_delay: Dict[int, float] = {}
+        kernel_evs: Dict[int, List[KernelEvent]] = {}
+        for r in range(self.n_ranks):
+            evs, gpu_extra = self._kernels(r, t0)
+            kernel_evs[r] = evs
+            delay = gpu_extra + self.rng.gauss(0, 12e-6)
+            for f in self.faults:
+                if not f.applies(r, self.iteration):
+                    continue
+                if f.name == "nic_softirq_contention":
+                    delay += 0.6e-3
+                elif f.name == "vfs_dentry_lock_contention":
+                    delay += (f.slow - 1) * self.base_iter_time  # type: ignore[attr-defined]
+                elif f.name == "logging_overhead":
+                    delay += f.fraction * self.base_iter_time  # type: ignore[attr-defined]
+                elif f.name == "storage_io_bottleneck":
+                    delay += f.fraction * self.base_iter_time * 2.5  # type: ignore[attr-defined]
+            entry_delay[r] = max(0.0, delay)
+
+        # blocking collective: starts when the last rank arrives
+        base_entry = t0 + 0.7 * self.base_iter_time
+        entries = {r: base_entry + entry_delay[r] for r in range(self.n_ranks)}
+        start = max(entries.values())
+        coll_dur = 9e-3
+        exit_t = start + coll_dur
+        iter_end = exit_t + 0.05 * self.base_iter_time
+
+        for r in range(self.n_ranks):
+            ev = CollectiveEvent(
+                rank=r, group_id=self.group_id, op="ReduceScatter",
+                entry=entries[r] + self.skew[r],
+                exit=exit_t + self.skew[r] + self.rng.gauss(0, 3e-6),
+                nbytes=512 * 1024 * 1024, device_duration=coll_dur)
+            profiles.append(IterationProfile(
+                rank=r, iteration=self.iteration, group_id=self.group_id,
+                iter_time=iter_end - t0,
+                cpu_samples=self._cpu_samples(r, t0),
+                kernel_events=kernel_evs[r],
+                collectives=[ev],
+                os_signals=self._os_signals(r, t0)))
+        self.iteration += 1
+        return profiles
+
+    def run(self, service, iterations: int, job_id: str = "job-0",
+            process_every: int = 10) -> List:
+        """Drive the cluster into a CentralService; returns new events."""
+        events = []
+        for _ in range(iterations):
+            for p in self.step():
+                service.ingest(p, job_id=job_id)
+            if self.iteration % process_every == 0:
+                events.extend(service.process())
+        events.extend(service.process())
+        return events

@@ -1,0 +1,81 @@
+"""Multi-runtime (Python <-> native) stack stitching (§4).
+
+AI-training stacks interleave CPython frames with native C++/CUDA-launch
+frames.  The agent walks the PyThreadState frame chain (f_back /
+_PyInterpreterFrame) for Python frames and the hybrid unwinder for native
+frames, then stitches them into a unified stack using each Python frame's
+recorded *native stack pointer* as the join point: a Python frame is
+inserted where the native walk crosses its SP.
+
+The sim model mirrors that: native frames carry SP ranges; python frames
+carry the native SP of their evaluator frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class NativeFrame:
+    name: str
+    sp: int                 # stack pointer at this frame (grows down)
+
+
+@dataclasses.dataclass(frozen=True)
+class PyFrame:
+    code_name: str          # function (code object) name
+    filename: str
+    lineno: int
+    native_sp: int          # SP of the interpreter frame evaluating it
+
+    @property
+    def label(self) -> str:
+        return f"py::{self.code_name}"
+
+
+def walk_pyframes(frame_obj, native_sp_of=None) -> List[PyFrame]:
+    """Walk a real CPython frame chain (f_back), leaf-first.  ``frame_obj``
+    is a types.FrameType (e.g. from sys._current_frames()).  Native SPs are
+    synthesized monotonically when no extractor is given (pure-Python agent
+    cannot read the C stack; the sim path supplies real SPs)."""
+    out: List[PyFrame] = []
+    depth = 0
+    while frame_obj is not None:
+        sp = native_sp_of(frame_obj) if native_sp_of else depth
+        out.append(PyFrame(frame_obj.f_code.co_name,
+                           frame_obj.f_code.co_filename,
+                           frame_obj.f_lineno, sp))
+        frame_obj = frame_obj.f_back
+        depth += 1
+    return out
+
+
+def stitch(native: Sequence[NativeFrame], python: Sequence[PyFrame],
+           evaluator_names: Tuple[str, ...] = ("_PyEval_EvalFrameDefault",)
+           ) -> Tuple[str, ...]:
+    """Merge leaf-first native frames with leaf-first Python frames into one
+    root..leaf stack.  Each evaluator frame in the native stack is REPLACED
+    by the Python frame whose native_sp joins there; other native frames
+    pass through.  Falls back to appending leftover Python frames at their
+    SP-ordered position."""
+    py = list(python)
+    merged: List[str] = []
+    for nf in native:  # leaf..root
+        if nf.name in evaluator_names and py:
+            # the evaluator executes exactly one python frame: match by
+            # nearest native_sp <= evaluator sp
+            best_i, best_sp = None, None
+            for i, pf in enumerate(py):
+                if pf.native_sp <= nf.sp and (best_sp is None
+                                              or pf.native_sp > best_sp):
+                    best_i, best_sp = i, pf.native_sp
+            if best_i is None:
+                best_i = 0
+            merged.append(py.pop(best_i).label)
+        else:
+            merged.append(nf.name)
+    # any remaining python frames are outermost interpreter frames
+    for pf in py:
+        merged.append(pf.label)
+    return tuple(reversed(merged))  # root..leaf

@@ -1,0 +1,117 @@
+"""Slow-rank (straggler) detection from per-collective timing (§3.1–3.2).
+
+Cross-rank clock alignment exploits the collective's barrier semantics:
+since every rank must enter and exit, the latest entry ~ the collective's
+true start and exits cluster at its true end.  Per-rank clock skew is
+estimated from exit-time residuals over a window, then a rank is flagged
+when its (aligned) entry lateness exceeds mu + k*sigma across the group
+over a sliding window of W iterations (defaults W=100, k=2; §5.4 uses an
+8-rank group with a 0.4 ms straggler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.core.events import CollectiveEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerAlert:
+    group_id: str
+    rank: int
+    lateness: float          # seconds behind group mean entry
+    mean: float
+    std: float
+    zscore: float
+    window: int
+
+
+class ClockAligner:
+    """Estimate per-rank clock skew from barrier exit residuals."""
+
+    def __init__(self, window: int = 100):
+        self._resid: Dict[int, Deque[float]] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
+        if len(events) < 2:
+            return
+        mean_exit = sum(e.exit for e in events) / len(events)
+        for e in events:
+            self._resid[e.rank].append(e.exit - mean_exit)
+
+    def skew(self, rank: int) -> float:
+        r = self._resid.get(rank)
+        if not r:
+            return 0.0
+        s = sorted(r)
+        return s[len(s) // 2]  # median residual
+
+    def align_entry(self, e: CollectiveEvent) -> float:
+        return e.entry - self.skew(e.rank)
+
+
+class StragglerDetector:
+    """Per-group sliding-window entry-lateness outlier detection."""
+
+    def __init__(self, window: int = 100, k: float = 2.0,
+                 min_lateness: float = 50e-6, min_instances: int = 8,
+                 robust: bool = False):
+        """``robust=False`` is the paper-faithful mean/std outlier model.
+        ``robust=True`` is our beyond-paper variant using median/MAD, which
+        keeps power when several ranks degrade together (the paper's §7
+        limitation: 2 stragglers among 8 dilute mu and inflate sigma enough
+        that mu+2sigma misses them; the median/MAD score does not)."""
+        self.window = window
+        self.k = k
+        self.min_lateness = min_lateness  # absolute floor (50 us)
+        self.min_instances = min_instances
+        self.robust = robust
+        self.aligner = ClockAligner(window)
+        # lateness[group][rank] = deque of per-instance entry lateness
+        self._late: Dict[str, Dict[int, Deque[float]]] = defaultdict(
+            lambda: defaultdict(lambda: deque(maxlen=window)))
+
+    def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
+        """Feed one matched collective instance (all ranks of one group)."""
+        if len(events) < 2:
+            return
+        self.aligner.observe_instance(events)
+        group = events[0].group_id
+        aligned = {e.rank: self.aligner.align_entry(e) for e in events}
+        mean_entry = sum(aligned.values()) / len(aligned)
+        for rank, t in aligned.items():
+            self._late[group][rank].append(t - mean_entry)
+
+    def check(self, group_id: Optional[str] = None) -> List[StragglerAlert]:
+        alerts: List[StragglerAlert] = []
+        groups = [group_id] if group_id else list(self._late)
+        for g in groups:
+            ranks = self._late.get(g, {})
+            if len(ranks) < 2:
+                continue
+            n_inst = min((len(d) for d in ranks.values()), default=0)
+            if n_inst < self.min_instances:
+                continue
+            # windowed mean lateness per rank
+            mean_late = {r: sum(d) / len(d) for r, d in ranks.items()}
+            vals = sorted(mean_late.values())
+            if self.robust:
+                mu = vals[len(vals) // 2]                       # median
+                mad = sorted(abs(v - mu) for v in vals)[len(vals) // 2]
+                sigma = 1.4826 * mad                            # ~std under N
+            else:
+                mu = sum(vals) / len(vals)
+                sigma = math.sqrt(sum((v - mu) ** 2 for v in vals) / len(vals))
+            for r, v in mean_late.items():
+                if v - mu < self.min_lateness:
+                    continue
+                if v > mu + self.k * max(sigma, 1e-9):
+                    z = (v - mu) / max(sigma, 1e-9)
+                    alerts.append(StragglerAlert(
+                        g, r, v - mu, mu, sigma, z, n_inst))
+        alerts.sort(key=lambda a: -a.lateness)
+        return alerts

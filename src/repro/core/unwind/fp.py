@@ -1,0 +1,55 @@
+"""Frame-pointer unwinding + ValidateCallerPC (§3.3, Algorithm 1 lines 5–7).
+
+O(1) per frame: pc' = mem[fp+8], fp' = mem[fp], sp' = fp+16.  Valid only for
+functions that preserve the rbp chain; for -fomit-frame-pointer code the FP
+register holds a general-purpose value and validation must reject the
+result.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.unwind.procmodel import SimProcess, SimThread, WORD
+
+
+def unwind_fp(thread: SimThread, pc: int, sp: int, fp: int
+              ) -> Optional[Tuple[int, int, int]]:
+    """Returns (pc', sp', fp') or None when memory is unreadable."""
+    saved_fp = thread.read_word(fp)
+    ra = thread.read_word(fp + WORD)
+    if saved_fp is None or ra is None:
+        return None
+    return ra, fp + 2 * WORD, saved_fp
+
+
+def unwind_fp_only(thread: SimThread, max_depth: int = 127) -> list:
+    """The FP-only baseline profiler of Fig 3: blind rbp-chain walk with no
+    validation and no DWARF fallback.  Truncates (or misattributes) at the
+    first -fomit-frame-pointer frame."""
+    pc = thread.registers.pc
+    sp = thread.registers.sp
+    fp = thread.registers.fp
+    stack = [pc]
+    for _ in range(max_depth):
+        nxt = unwind_fp(thread, pc, sp, fp)
+        if nxt is None:
+            break
+        pc, sp, fp = nxt
+        if not thread.proc.is_executable(pc):
+            break
+        stack.append(pc)
+    return stack
+
+
+def validate_caller_pc(proc: SimProcess, pc_new: Optional[int],
+                       sp_new: Optional[int], sp_old: int) -> bool:
+    """The paper's two checks: (1) pc' inside a mapped executable ELF
+    segment; (2) the stack pointer is monotonically increasing (unwinding
+    upward)."""
+    if pc_new is None or sp_new is None:
+        return False
+    if not proc.is_executable(pc_new):
+        return False
+    if sp_new <= sp_old:
+        return False
+    return True

@@ -1,0 +1,120 @@
+"""Adaptive hybrid FP+DWARF stack unwinding — Algorithm 1, verbatim (§3.3).
+
+    while PC is in a mapped executable region:
+        m = GetMarker(BuildID(PC), Offset(PC))
+        if m = unmarked:
+            try FP; ValidateCallerPC -> mark fp, else DWARF -> mark dwarf
+        elif m = fp:   UnwindFP
+        else:          UnwindDWARF
+        append pc'; advance
+
+Per-sample cost is tracked so the §5.1 cost claim (steady state ~ pure FP)
+is measurable: FP steps are O(1); DWARF steps cost a ceil(log2 M) bisect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.unwind.dwarf import DwarfUnwinder
+from repro.core.unwind.fp import unwind_fp, validate_caller_pc
+from repro.core.unwind.markers import Marker, MarkerMap
+from repro.core.unwind.procmodel import SimProcess, SimThread
+
+
+@dataclasses.dataclass
+class UnwindStats:
+    samples: int = 0
+    frames: int = 0
+    fp_steps: int = 0
+    dwarf_steps: int = 0
+    validations: int = 0
+    validation_failures: int = 0
+    truncated: int = 0
+
+    @property
+    def fp_fraction(self) -> float:
+        total = self.fp_steps + self.dwarf_steps
+        return self.fp_steps / total if total else 0.0
+
+
+class HybridUnwinder:
+    MAX_DEPTH = 127  # eBPF-analog bounded walk
+
+    def __init__(self, markers: Optional[MarkerMap] = None,
+                 dwarf: Optional[DwarfUnwinder] = None):
+        self.markers = markers or MarkerMap()
+        self.dwarf = dwarf or DwarfUnwinder()
+        self.stats = UnwindStats()
+
+    def register_binary(self, binary) -> None:
+        self.dwarf.add_binary(binary)
+        if any(f.is_jit for f in binary.functions):
+            for f in binary.functions:
+                if f.is_jit:
+                    self.markers.mark_jit(binary.build_id, f.offset)
+
+    # ------------------------------------------------------------------
+    def unwind(self, thread: SimThread) -> List[int]:
+        """Returns the PC list (leaf..root), Algorithm 1."""
+        proc = thread.proc
+        pc, sp, fp = (thread.registers.pc, thread.registers.sp,
+                      thread.registers.fp)
+        stack: List[int] = [pc]
+        self.stats.samples += 1
+
+        for _ in range(self.MAX_DEPTH):
+            if not proc.is_executable(pc):
+                break
+            resolved = proc.resolve(pc)
+            if resolved is None:
+                break
+            build_id, _off, fn = resolved
+            m = self.markers.get(build_id, fn.offset)
+
+            nxt: Optional[Tuple[int, int, int]] = None
+            if m is Marker.UNMARKED:
+                cand = unwind_fp(thread, pc, sp, fp)
+                self.stats.validations += 1
+                if cand is not None and validate_caller_pc(
+                        proc, cand[0], cand[1], sp):
+                    self.markers.compare_and_swap(
+                        build_id, fn.offset, Marker.UNMARKED, Marker.FP)
+                    nxt = cand
+                    self.stats.fp_steps += 1
+                else:
+                    self.stats.validation_failures += 1
+                    nxt = self.dwarf.unwind(thread, pc, sp)
+                    self.markers.compare_and_swap(
+                        build_id, fn.offset, Marker.UNMARKED, Marker.DWARF)
+                    self.stats.dwarf_steps += 1
+            elif m is Marker.FP:
+                nxt = unwind_fp(thread, pc, sp, fp)
+                self.stats.fp_steps += 1
+            else:  # DWARF
+                nxt = self.dwarf.unwind(thread, pc, sp)
+                self.stats.dwarf_steps += 1
+
+            if nxt is None:
+                self.stats.truncated += 1
+                break
+            pc, sp, fp = nxt
+            if not proc.is_executable(pc):
+                break  # reached the sentinel / end of stack
+            stack.append(pc)
+            self.stats.frames += 1
+
+        return stack
+
+    # ------------------------------------------------------------------
+    def unwind_symbolized_truthcheck(self, thread: SimThread):
+        """(names leaf..root via proc-side resolution, truth leaf..root).
+        Used by accuracy benchmarks; production symbolization goes through
+        repro.core.symbols instead."""
+        pcs = self.unwind(thread)
+        names = []
+        for pc in pcs:
+            r = thread.proc.resolve(pc)
+            names.append(r[2].name if r else "?")
+        truth = tuple(reversed(thread.truth_names()))
+        return tuple(names), truth

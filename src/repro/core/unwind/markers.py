@@ -1,0 +1,59 @@
+"""Per-function unwinding-method markers (§3.3).
+
+Map<(BuildID, Offset) -> Marker>, Marker in {unmarked, fp, dwarf}.  Markers
+are stable (frame-pointer behavior is fixed at compile time); dlopen/JIT
+code starts unmarked and converges.  Concurrent CPUs may race on the same
+unmarked function: updates use compare-and-swap so races converge to one
+value (§4) — reproduced with a lock-based CAS providing identical
+semantics.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from typing import Dict, Tuple
+
+
+class Marker(enum.Enum):
+    UNMARKED = 0
+    FP = 1
+    DWARF = 2
+
+
+class MarkerMap:
+    def __init__(self):
+        self._map: Dict[Tuple[str, int], Marker] = {}
+        self._lock = threading.Lock()
+        self.cas_conflicts = 0
+
+    def get(self, build_id: str, func_offset: int) -> Marker:
+        return self._map.get((build_id, func_offset), Marker.UNMARKED)
+
+    def compare_and_swap(self, build_id: str, func_offset: int,
+                         expected: Marker, new: Marker) -> Marker:
+        """Atomically set marker if it still equals ``expected``.  Returns
+        the winning value (new on success, the racer's value on conflict)."""
+        key = (build_id, func_offset)
+        with self._lock:
+            cur = self._map.get(key, Marker.UNMARKED)
+            if cur is expected:
+                self._map[key] = new
+                return new
+            self.cas_conflicts += 1
+            return cur
+
+    def mark_jit(self, build_id: str, func_offset: int) -> None:
+        """JIT code is conservatively marked dwarf (§4): its frame layout
+        may not follow the standard ABI."""
+        self.compare_and_swap(build_id, func_offset, Marker.UNMARKED,
+                              Marker.DWARF)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            vals = list(self._map.values())
+        return {
+            "total": len(vals),
+            "fp": sum(v is Marker.FP for v in vals),
+            "dwarf": sum(v is Marker.DWARF for v in vals),
+            "cas_conflicts": self.cas_conflicts,
+        }

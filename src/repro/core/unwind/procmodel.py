@@ -1,0 +1,223 @@
+"""Simulated process model for the unwinding subsystem.
+
+The paper's Algorithm 1 operates on (PC, SP, FP) machine state, process
+memory maps, and per-binary .eh_frame tables.  This module provides those
+objects faithfully enough that the algorithm runs VERBATIM:
+
+  * binaries with functions that either preserve the frame-pointer
+    convention or are compiled -fomit-frame-pointer (FP register holds a
+    general-purpose value — the failure mode §2.2 describes),
+  * x86-64-like stack frames laid out in a word-addressed memory image
+    ([saved FP][return addr][locals]), stack growing down,
+  * ELF-like mappings with Build IDs, exec bits and file offsets,
+  * an .eh_frame whose FDEs carry simple CFA rules (register+offset) or are
+    flagged "complex" (DWARF expressions -> userspace fallback, §4),
+  * dlopen()/JIT regions that appear mid-profile (§4's detection paths).
+
+This is the hardware-adaptation boundary recorded in DESIGN.md §2: kernel
+eBPF context becomes plain Python, but every algorithmic constraint
+(bounded stack walk, two-phase DWARF, CAS markers) is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+WORD = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionDef:
+    name: str
+    offset: int               # within the binary
+    size: int
+    omits_fp: bool = False    # -fomit-frame-pointer (needs DWARF)
+    frame_size: int = 48      # locals+spills, multiple of 8
+    complex_fde: bool = False  # FDE uses DWARF expressions (userspace path)
+    exported: bool = False    # visible in the node-side sparse symbol table
+    is_jit: bool = False
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+
+@dataclasses.dataclass
+class Binary:
+    name: str
+    build_id: str
+    functions: List[FunctionDef]          # sorted by offset
+    size: int
+
+    def function_at(self, offset: int) -> Optional[FunctionDef]:
+        lo, hi = 0, len(self.functions) - 1
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            f = self.functions[mid]
+            if offset < f.offset:
+                hi = mid - 1
+            elif offset >= f.end:
+                lo = mid + 1
+            else:
+                return f
+        return None
+
+    def eh_frame(self) -> List[Tuple[int, int, int, bool]]:
+        """[(start, end, frame_size, complex)] — the raw FDE list that
+        Phase-1 pre-processing compiles into the sorted lookup array."""
+        return [(f.offset, f.end, f.frame_size, f.complex_fde)
+                for f in self.functions]
+
+
+def synth_binary(name: str, *, n_functions: int, omit_fp_fraction: float,
+                 exported_fraction: float = 0.35,
+                 complex_fde_fraction: float = 0.01,
+                 seed: int = 0, func_size: int = 512,
+                 gap_after: Optional[str] = None, gap_size: int = 0) -> Binary:
+    """Generate a synthetic stripped binary.  ``gap_after``/``gap_size``
+    reproduce the sparse-symbol-table hole of Fig 4 (an 18 MB range covered
+    by one symbol)."""
+    rng = random.Random(seed)
+    funcs: List[FunctionDef] = []
+    off = 0x1000
+    for i in range(n_functions):
+        fname = f"{name}::fn_{i:04d}"
+        omits = rng.random() < omit_fp_fraction
+        funcs.append(FunctionDef(
+            name=fname, offset=off, size=func_size,
+            omits_fp=omits,
+            frame_size=rng.choice((32, 48, 64, 96, 128)),
+            complex_fde=rng.random() < complex_fde_fraction,
+            exported=rng.random() < exported_fraction,
+        ))
+        off += func_size
+        if gap_after is not None and fname == gap_after:
+            off += gap_size
+    build_id = hashlib.sha1(f"{name}:{seed}:{n_functions}".encode()).hexdigest()
+    return Binary(name=name, build_id=build_id, functions=funcs, size=off)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mapping:
+    start: int
+    end: int
+    binary: Binary
+    executable: bool = True
+
+    def contains(self, addr: int) -> bool:
+        return self.start <= addr < self.end
+
+
+@dataclasses.dataclass
+class RegisterState:
+    pc: int
+    sp: int
+    fp: int
+
+
+class SimProcess:
+    """Address space + /proc/[pid]/maps analogue."""
+
+    STACK_TOP = 0x7FFF_FFFF_F000
+
+    def __init__(self, pid: int = 1):
+        self.pid = pid
+        self.mappings: List[Mapping] = []
+        self._next_base = 0x5555_0000_0000
+
+    def mmap_binary(self, binary: Binary, base: Optional[int] = None) -> Mapping:
+        base = base if base is not None else self._next_base
+        m = Mapping(base, base + binary.size, binary)
+        self.mappings.append(m)
+        self.mappings.sort(key=lambda mm: mm.start)
+        self._next_base = max(self._next_base, base + binary.size + 0x10000)
+        return m
+
+    # /proc/[pid]/maps lookups ------------------------------------------------
+    def mapping_for(self, addr: int) -> Optional[Mapping]:
+        for m in self.mappings:
+            if m.contains(addr):
+                return m
+        return None
+
+    def is_executable(self, addr: int) -> bool:
+        m = self.mapping_for(addr)
+        return bool(m and m.executable)
+
+    def resolve(self, addr: int) -> Optional[Tuple[str, int, FunctionDef]]:
+        """addr -> (build_id, offset, function)"""
+        m = self.mapping_for(addr)
+        if m is None:
+            return None
+        off = addr - m.start
+        f = m.binary.function_at(off)
+        if f is None:
+            return None
+        return m.binary.build_id, off, f
+
+    def abs_addr(self, binary: Binary, func: FunctionDef, pc_off: int = 8) -> int:
+        for m in self.mappings:
+            if m.binary is binary:
+                return m.start + func.offset + pc_off
+        raise KeyError(f"{binary.name} not mapped")
+
+
+class SimThread:
+    """A thread with a concrete stack image built from a ground-truth call
+    chain.  ``registers`` + ``read_word`` are exactly what the unwinder sees.
+    """
+
+    def __init__(self, proc: SimProcess, rng: Optional[random.Random] = None):
+        self.proc = proc
+        self.rng = rng or random.Random(1)
+        self.memory: Dict[int, int] = {}
+        self.registers = RegisterState(0, 0, 0)
+        self.truth: List[Tuple[Binary, FunctionDef]] = []
+
+    def read_word(self, addr: int) -> Optional[int]:
+        return self.memory.get(addr)
+
+    def call_chain(self, chain: Sequence[Tuple[Binary, FunctionDef]]) -> None:
+        """Build the stack image for root..leaf ``chain``.
+
+        ABI model (x86-64-like, System V):
+          * ``call`` pushes the return address; CFA = rsp just before it.
+          * EVERY function saves the caller's rbp at CFA-16 (rbp is
+            callee-saved, so even -fomit-frame-pointer code pushes it when
+            it clobbers rbp — which our omit-fp functions do).
+          * FP-preserving functions additionally set rbp = CFA-16, giving
+            the classic [rbp]=saved-rbp, [rbp+8]=RA chain.
+          * omit-fp functions use rbp as a general-purpose register: its
+            live value (and hence what the *callee* saves) is garbage.
+        DWARF CFI for every function: CFA = SP + frame_size + 16,
+        RA at CFA-8, caller rbp at CFA-16 (restored by UnwindDWARF).
+        """
+        self.truth = list(chain)
+        sp = SimProcess.STACK_TOP
+        fp = 0  # outermost sentinel rbp (glibc convention)
+        prev_func_addr = 0
+        for depth, (binary, func) in enumerate(chain):
+            if depth > 0:
+                ra = prev_func_addr + self.rng.randrange(16, 64, 8)
+                sp -= WORD
+                self.memory[sp] = ra       # return address @ CFA-8
+            sp -= WORD
+            self.memory[sp] = fp           # saved caller rbp @ CFA-16
+            if not func.omits_fp:
+                fp = sp                    # mov rbp, rsp
+            else:
+                fp = self.rng.getrandbits(47)  # rbp reused as GP register
+            sp -= func.frame_size
+            prev_func_addr = self.proc.abs_addr(binary, func, 0)
+        leaf_bin, leaf_fn = chain[-1]
+        self.registers = RegisterState(
+            pc=self.proc.abs_addr(leaf_bin, leaf_fn,
+                                  self.rng.randrange(8, leaf_fn.size - 8, 8)),
+            sp=sp,
+            fp=fp,
+        )
+
+    def truth_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for _, f in self.truth)

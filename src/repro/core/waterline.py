@@ -1,0 +1,88 @@
+"""Per-communication-group CPU waterline (§3.1).
+
+For each function f in group g, compute mean mu and std sigma of its CPU
+fraction across all ranks over a sliding window of W iterations.  A rank is
+flagged when any function exceeds mu + k*sigma (defaults W=100, k=2).  The
+waterline is computed over ALL ranks simultaneously — no healthy/unhealthy
+pre-partitioning; a single outlier among N>=8 ranks shifts mu by only 1/N.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Tuple
+
+from repro.core.flamegraph import FlameGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class WaterlineAlert:
+    rank: int
+    function: str
+    fraction: float
+    mean: float
+    std: float
+    zscore: float
+
+
+class CPUWaterline:
+    """Sliding-window per-function baseline for one communication group."""
+
+    def __init__(self, window: int = 100, k: float = 2.0,
+                 min_fraction: float = 0.002, min_excess: float = 0.01):
+        self.window = window
+        self.k = k
+        self.min_fraction = min_fraction  # ignore sub-noise functions
+        # practical-significance floor on (v - mu), mirroring the paper's
+        # temporal delta=0.5%: statistical outliers below it are noise
+        self.min_excess = min_excess
+        # history[rank] = deque of {function: fraction} dicts (one per iter)
+        self._history: Dict[int, Deque[Dict[str, float]]] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def observe(self, rank: int, profile: FlameGraph) -> None:
+        self._history[rank].append(profile.function_fractions())
+
+    # ------------------------------------------------------------------
+    def _per_rank_means(self) -> Dict[int, Dict[str, float]]:
+        """Windowed mean fraction per function per rank."""
+        out = {}
+        for rank, hist in self._history.items():
+            acc: Dict[str, float] = defaultdict(float)
+            for frame in hist:
+                for fn, fr in frame.items():
+                    acc[fn] += fr
+            n = max(len(hist), 1)
+            out[rank] = {fn: v / n for fn, v in acc.items()}
+        return out
+
+    def check(self) -> List[WaterlineAlert]:
+        """Flag ranks whose windowed fraction exceeds the group waterline."""
+        per_rank = self._per_rank_means()
+        if len(per_rank) < 2:
+            return []
+        functions = set()
+        for fr in per_rank.values():
+            functions |= set(fr)
+
+        alerts: List[WaterlineAlert] = []
+        n = len(per_rank)
+        for fn in functions:
+            vals = [(r, fr.get(fn, 0.0)) for r, fr in per_rank.items()]
+            mu = sum(v for _, v in vals) / n
+            var = sum((v - mu) ** 2 for _, v in vals) / n
+            sigma = math.sqrt(var)
+            floor = max(self.min_fraction, 1e-9)
+            for r, v in vals:
+                if v < floor:
+                    continue
+                if (v > mu + self.k * max(sigma, 1e-9)
+                        and v - mu > max(floor, self.min_excess)):
+                    z = (v - mu) / max(sigma, 1e-9)
+                    alerts.append(WaterlineAlert(r, fn, v, mu, sigma, z))
+        alerts.sort(key=lambda a: -a.zscore)
+        return alerts
+
+    def flagged_ranks(self) -> List[int]:
+        return sorted({a.rank for a in self.check()})

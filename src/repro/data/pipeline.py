@@ -1,0 +1,105 @@
+"""Deterministic synthetic data pipeline with sharding + background prefetch.
+
+The corpus is a learnable Markov-ish token stream (so training loss visibly
+drops): token[t+1] depends on token[t] through a fixed random permutation
+table with injected noise.  The pipeline is:
+
+  SyntheticCorpus (indexable, deterministic by seed)
+    -> per-host shard slice (data-parallel)
+    -> batcher
+    -> background prefetch thread (depth-N queue)
+
+Restart support: the pipeline exposes/accepts a cursor so checkpoint resume
+replays from the exact batch index (exactly-once consumption).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticCorpus:
+    """Deterministic pseudo-text: next = perm[cur] with p=0.8, uniform
+    otherwise.  Learnable structure => CE loss decreases during training."""
+
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0,
+                 noise: float = 0.2):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.seed = seed
+        self.noise = noise
+        rng = np.random.default_rng(seed)
+        self.perm = rng.permutation(vocab_size)
+
+    def sequence(self, index: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed << 20) ^ index)
+        out = np.empty(self.seq_len + 1, dtype=np.int32)
+        out[0] = rng.integers(self.vocab_size)
+        noise_draws = rng.random(self.seq_len)
+        noise_tok = rng.integers(self.vocab_size, size=self.seq_len)
+        for t in range(self.seq_len):
+            out[t + 1] = (self.perm[out[t]] if noise_draws[t] > self.noise
+                          else noise_tok[t])
+        return out
+
+
+class DataPipeline:
+    def __init__(self, corpus: SyntheticCorpus, global_batch: int,
+                 shard_index: int = 0, num_shards: int = 1,
+                 prefetch: int = 2, start_cursor: int = 0):
+        assert global_batch % num_shards == 0
+        self.corpus = corpus
+        self.global_batch = global_batch
+        self.local_batch = global_batch // num_shards
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self.cursor = start_cursor              # batch index (checkpointed)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- synchronous batch build -------------------------------------------
+    def build_batch(self, cursor: int) -> Dict[str, np.ndarray]:
+        base = cursor * self.global_batch + self.shard_index * self.local_batch
+        seqs = np.stack([self.corpus.sequence(base + i)
+                         for i in range(self.local_batch)])
+        return {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+
+    # -- prefetching iterator -------------------------------------------------
+    def _producer(self) -> None:
+        c = self.cursor
+        while not self._stop.is_set():
+            batch = self.build_batch(c)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((c, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            c += 1
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._producer, daemon=True,
+                                        name="data-prefetch")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        if self._thread is None:
+            batch = self.build_batch(self.cursor)
+            self.cursor += 1
+            return batch
+        c, batch = self._q.get()
+        self.cursor = c + 1
+        return batch

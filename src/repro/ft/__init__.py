@@ -1,0 +1,2 @@
+from repro.ft.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.ft.mitigation import MitigationPlanner, MitigationAction  # noqa: F401

@@ -1,0 +1,55 @@
+"""Node heartbeats + failure detection.
+
+Agents beat into the monitor; a node missing ``miss_threshold`` consecutive
+intervals is declared failed.  The monitor also accepts straggler/diagnosis
+events from the central service so the mitigation planner sees one stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure:
+    node: int
+    last_beat: float
+    detected_at: float
+    reason: str = "missed_heartbeats"
+
+
+class HeartbeatMonitor:
+    def __init__(self, interval_s: float = 10.0, miss_threshold: int = 3,
+                 clock: Callable[[], float] = time.monotonic):
+        self.interval_s = interval_s
+        self.miss_threshold = miss_threshold
+        self.clock = clock
+        self._last: Dict[int, float] = {}
+        self._failed: Dict[int, NodeFailure] = {}
+
+    def register(self, node: int) -> None:
+        self._last[node] = self.clock()
+
+    def beat(self, node: int) -> None:
+        self._last[node] = self.clock()
+        self._failed.pop(node, None)
+
+    def check(self) -> List[NodeFailure]:
+        now = self.clock()
+        deadline = self.interval_s * self.miss_threshold
+        new = []
+        for node, last in self._last.items():
+            if node in self._failed:
+                continue
+            if now - last > deadline:
+                f = NodeFailure(node=node, last_beat=last, detected_at=now)
+                self._failed[node] = f
+                new.append(f)
+        return new
+
+    def alive(self) -> List[int]:
+        return sorted(n for n in self._last if n not in self._failed)
+
+    def failed(self) -> List[int]:
+        return sorted(self._failed)

@@ -1,0 +1,119 @@
+"""Mitigation planning: turn detections into actions.
+
+The paper's system *detects and diagnoses*; operators act.  At 1000+-node
+scale the action loop must also be automatic: this planner consumes
+(a) node failures from heartbeats and (b) DiagnosticEvents from the central
+service, and emits ordered actions:
+
+  * node failure        -> restore latest checkpoint on survivors with an
+                           elastic re-mesh plan (shrink the data axis)
+  * persistent straggler (os_interference) -> isolate/cordon + re-mesh
+  * gpu_hardware        -> cordon the device's node, page hardware ops
+  * software (logging/storage) -> config rollback suggestion, no re-mesh
+
+The elastic plan keeps the model axis intact (TP topology is rigid) and
+shrinks data parallelism to the largest feasible divisor — gradient
+accumulation makes up the lost batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.service import DiagnosticEvent
+from repro.ft.heartbeat import NodeFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_data_axis: int
+    new_data_axis: int
+    model_axis: int
+    grad_accum_factor: int     # keeps the global batch constant
+
+    @property
+    def feasible(self) -> bool:
+        return self.new_data_axis >= 1
+
+
+def plan_remesh(data_axis: int, model_axis: int, lost_nodes: int,
+                chips_per_node: int = 8, global_batch: int = 256
+                ) -> ElasticPlan:
+    """Shrink the data axis by whole node columns; keep batch via accum."""
+    lost_chips = lost_nodes * chips_per_node
+    total = data_axis * model_axis - lost_chips
+    new_data = max(total // model_axis, 0)
+    # round down to a divisor of the global batch for even sharding
+    while new_data > 1 and global_batch % new_data:
+        new_data -= 1
+    accum = max(1, data_axis // max(new_data, 1))
+    return ElasticPlan(data_axis, new_data, model_axis, accum)
+
+
+@dataclasses.dataclass(frozen=True)
+class MitigationAction:
+    kind: str                 # restart_elastic | cordon | config_rollback | observe
+    target_nodes: Sequence[int]
+    plan: Optional[ElasticPlan]
+    reason: str
+    source: str               # heartbeat | diagnosis
+
+
+class MitigationPlanner:
+    def __init__(self, data_axis: int = 16, model_axis: int = 16,
+                 chips_per_node: int = 8, global_batch: int = 256,
+                 straggler_patience: int = 3):
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.chips_per_node = chips_per_node
+        self.global_batch = global_batch
+        self.straggler_patience = straggler_patience
+        self._strikes: Dict[int, int] = {}
+        self.actions: List[MitigationAction] = []
+
+    # ------------------------------------------------------------------
+    def on_failures(self, failures: Sequence[NodeFailure]) -> List[MitigationAction]:
+        if not failures:
+            return []
+        plan = plan_remesh(self.data_axis, self.model_axis, len(failures),
+                           self.chips_per_node, self.global_batch)
+        act = MitigationAction(
+            kind="restart_elastic",
+            target_nodes=[f.node for f in failures],
+            plan=plan,
+            reason=f"{len(failures)} node(s) missed heartbeats",
+            source="heartbeat")
+        self.actions.append(act)
+        self.data_axis = plan.new_data_axis
+        return [act]
+
+    def on_diagnosis(self, ev: DiagnosticEvent) -> List[MitigationAction]:
+        out: List[MitigationAction] = []
+        rank = ev.straggler_rank
+        if ev.category == "gpu_hardware" and rank is not None:
+            out.append(MitigationAction(
+                kind="cordon", target_nodes=[rank // self.chips_per_node],
+                plan=None, reason=ev.root_cause, source="diagnosis"))
+        elif ev.category == "os_interference" and rank is not None:
+            self._strikes[rank] = self._strikes.get(rank, 0) + 1
+            if self._strikes[rank] >= self.straggler_patience:
+                plan = plan_remesh(self.data_axis, self.model_axis, 1,
+                                   self.chips_per_node, self.global_batch)
+                out.append(MitigationAction(
+                    kind="restart_elastic",
+                    target_nodes=[rank // self.chips_per_node], plan=plan,
+                    reason=f"persistent straggler: {ev.root_cause}",
+                    source="diagnosis"))
+                self._strikes[rank] = 0
+            else:
+                out.append(MitigationAction(
+                    kind="observe", target_nodes=[rank], plan=None,
+                    reason=f"straggler strike {self._strikes[rank]}",
+                    source="diagnosis"))
+        elif ev.category == "software":
+            out.append(MitigationAction(
+                kind="config_rollback", target_nodes=[], plan=None,
+                reason=ev.verdict.action if ev.verdict else ev.root_cause,
+                source="diagnosis"))
+        self.actions.extend(out)
+        return out

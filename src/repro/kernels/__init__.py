@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention — blocked online-softmax attention (causal/SWA/GQA)
+ssd             — Mamba2 SSD chunk-local scan term
+rmsnorm         — fused norm+scale
+
+Each <name>.py holds the pl.pallas_call + BlockSpec tiling; ops.py the
+jit'd wrappers; ref.py the pure-jnp oracles the tests assert against.
+SysOM-AI itself has no kernel-level contribution (it is an observability
+system), so these kernels implement the *observed workload's* hot spots.
+"""

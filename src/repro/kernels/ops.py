@@ -1,0 +1,59 @@
+"""Public jit'd kernel entry points.
+
+Models call these; dispatch selects the Pallas kernel (TPU target,
+interpret-mode on CPU) or the pure-jnp oracle.  ``interpret`` defaults to
+True because this container is CPU-only; on a real TPU deployment it flips
+to False via REPRO_PALLAS_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ref as _ref
+from repro.kernels import ssd as _ssd
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         sliding_window: int = 0):
+    """(B, Hq, S, D) layout."""
+    return _fa.flash_attention_fwd(q, k, v, causal=causal,
+                                   sliding_window=sliding_window,
+                                   interpret=_INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0):
+    """(B, S, H, D) layout (model-side convention) -> same layout."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal,
+                               sliding_window=sliding_window)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@jax.jit
+def ssd_chunk(x, dt, A, B, C):
+    return _ssd.ssd_chunk_fwd(x, dt, A, B, C, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, weight, eps: float = 1e-6):
+    shape = x.shape
+    out = _rn.rmsnorm_fwd(x.reshape(-1, shape[-1]), weight,
+                          eps=eps, interpret=_INTERPRET)
+    return out.reshape(shape)
+
+
+# re-exported oracles (tests, fallback paths)
+flash_attention_ref = _ref.flash_attention_ref
+ssd_chunk_ref = _ref.ssd_chunk_ref
+rmsnorm_ref = _ref.rmsnorm_ref

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk-local computation.
+
+The SSD scan splits into (a) a quadratic chunk-local term + per-chunk state
+summaries — O(S*L) compute, the hot spot — and (b) a cheap sequential
+recurrence across chunks.  The kernel computes (a) per (batch, chunk, head)
+grid cell entirely in VMEM: the (L, L) decay matrix, gated scores, y_diag,
+and the (P, N) chunk state.  The host keeps (b) as a lax.scan plus the
+off-diagonal einsum (repro.models.ssm consumes these exact contracts).
+
+Block shapes: L=chunk (256 default) aligns the MXU; B/C tiles are shared
+across heads via index maps (no HBM duplication).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, st_ref, cd_ref, id_ref, *, L: int):
+    h = pl.program_id(2)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)       # (L,)
+    a = a_ref[h].astype(jnp.float32)                  # scalar decay rate
+    bm = b_ref[0, 0].astype(jnp.float32)              # (L, N)
+    cm = c_ref[0, 0].astype(jnp.float32)              # (L, N)
+
+    dA = dt * a                                       # (L,)
+    dA_cum = jnp.cumsum(dA)                           # (L,)
+
+    # intra-chunk decay matrix: exp(segsum) lower-tri
+    seg = dA_cum[:, None] - dA_cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(li >= lj, jnp.exp(seg), 0.0)    # (L, L)
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    gated = scores * decay                            # (L, L)
+    xdt = x * dt[:, None]                             # (L, P)
+    y = jax.lax.dot_general(gated, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    decay_to_end = jnp.exp(dA_cum[-1] - dA_cum)       # (L,)
+    weighted_b = bm * (decay_to_end * dt)[:, None]    # (L, N)
+    state = jax.lax.dot_general(x, weighted_b, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = state
+    cd_ref[0, 0, 0] = jnp.exp(dA_cum[-1])
+    id_ref[0, 0, 0] = jnp.exp(dA_cum)
+
+
+def ssd_chunk_fwd(x, dt, A, B, C, *, interpret: bool = True):
+    """Chunk-local SSD terms.
+
+    x: (b, nc, L, h, p); dt: (b, nc, L, h); A: (h,); B, C: (b, nc, L, n)
+    Returns (y_diag, states (b,nc,h,p,n), chunk_decay (b,nc,h),
+             in_decay (b,nc,h,L)) matching ref.ssd_chunk_ref.
+    """
+    b, nc, L, h, p = x.shape
+    n = B.shape[-1]
+    kernel = functools.partial(_ssd_kernel, L=L)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, nc, L, h, p), x.dtype),
+        jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+        jax.ShapeDtypeStruct((b, nc, h, L), jnp.float32),
+    )
+    grid = (b, nc, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda bb, c, hh: (bb, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda bb, c, hh: (bb, c, 0, hh)),
+            pl.BlockSpec((h,), lambda bb, c, hh: (0,)),
+            pl.BlockSpec((1, 1, L, n), lambda bb, c, hh: (bb, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda bb, c, hh: (bb, c, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, L, 1, p), lambda bb, c, hh: (bb, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bb, c, hh: (bb, c, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, c, hh: (bb, c, hh)),
+            pl.BlockSpec((1, 1, 1, L), lambda bb, c, hh: (bb, c, hh, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(*, multi_pod: bool = False, **overrides) -> ShardingRules:
+    return ShardingRules(pod_axis="pod" if multi_pod else None, **overrides)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Degenerate mesh over however many devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,116 @@
+"""Mixture-of-experts FFN: top-k routing, sort-based capacity dispatch.
+
+Dispatch strategy (TPU-adapted, MegaBlocks/MaxText-style): instead of the
+GShard one-hot (T, E, C) dispatch tensor — O(T*E*C) memory, impossible at
+1M tokens x 128 experts — tokens are ranked within their expert via a
+stable argsort + first-occurrence subtraction, then scattered into an
+(E*C, d) buffer.  Under pjit this lowers to all-to-all-style collectives on
+the expert-parallel axis.  Tokens beyond capacity are dropped (contribute
+zero), standard for capacity-based MoE.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": layers.dense_init(ks[0], (d, e), ("embed", "experts_r"), cfg),
+        "w_gate": layers.dense_init(ks[1], (e, d, f), ("experts", "embed", "ffn"), cfg, fan_in=d),
+        "w_in": layers.dense_init(ks[2], (e, d, f), ("experts", "embed", "ffn"), cfg, fan_in=d),
+        "w_out": layers.dense_init(ks[3], (e, f, d), ("experts", "ffn", "embed"), cfg, fan_in=f),
+    }
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(cfg.moe_capacity_factor * num_tokens * cfg.num_experts_per_tok
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def route(params, x_flat, cfg: ModelConfig):
+    """x_flat (T, d) -> (weights (T,k), ids (T,k), aux_loss)."""
+    logits = (x_flat @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # Switch-style load-balancing auxiliary loss
+    e = cfg.num_experts
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * mean_prob) * e * cfg.router_aux_loss_coef
+    return weights.astype(x_flat.dtype), ids, aux
+
+
+def moe_ffn(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss).
+
+    With ``moe_dispatch_groups = G > 0`` the token stream splits into G
+    independent dispatch groups (leading dim aligned with the data-parallel
+    batch shards): routing, capacity and the scatter/gather stay LOCAL to
+    each shard, so the (E, C, d) buffers never cross the data axis — the
+    GSPMD lowering loses its dispatch all-reduces (EXPERIMENTS §Perf,
+    mixtral iteration).  G=0 keeps one global dispatch.
+    """
+    b, s, d = x.shape
+    g = cfg.moe_dispatch_groups
+    if g and b % g == 0:
+        from repro.parallel.context import constrain
+        xg = x.reshape(g, (b // g) * s, d)
+        xg = constrain(xg, ("batch", None, None))
+        out, aux = jax.vmap(lambda xx: _moe_ffn_flat(params, xx, cfg))(xg)
+        out = constrain(out, ("batch", None, None))
+        return out.reshape(b, s, d), jnp.mean(aux)
+    out, aux = _moe_ffn_flat(params, x.reshape(b * s, d), cfg)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_ffn_flat(params, x_flat, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch + expert FFN over a flat (T, d) token group."""
+    t, d = x_flat.shape
+    k = cfg.num_experts_per_tok
+    e = cfg.num_experts
+    cap = _capacity(t, cfg)
+
+    weights, ids, aux = route(params, x_flat, cfg)
+
+    # ---- rank within expert via stable sort ------------------------------
+    flat_ids = ids.reshape(t * k)                       # (N,)
+    order = jnp.argsort(flat_ids, stable=True)          # (N,)
+    sorted_ids = flat_ids[order]
+    first = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    rank_sorted = jnp.arange(t * k) - first             # rank within expert
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    keep = rank < cap
+    slot = jnp.where(keep, flat_ids * cap + rank, e * cap)  # overflow row
+
+    # ---- scatter tokens into (E*C, d) expert buffers ----------------------
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), dtype=x_flat.dtype)
+    buf = buf.at[slot].set(x_flat[token_idx], mode="drop")
+    expert_in = buf[:-1].reshape(e, cap, d)
+
+    # ---- expert FFN (batched over E; EP-sharded over the model axis) ------
+    act = jax.nn.gelu if cfg.activation == "gelu" else jax.nn.silu
+    h = act(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w_in"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+    # ---- gather back & combine with routing weights -----------------------
+    out_buf = jnp.concatenate(
+        [expert_out.reshape(e * cap, d),
+         jnp.zeros((1, d), dtype=expert_out.dtype)], axis=0)
+    per_slot = out_buf[slot] * weights.reshape(t * k)[:, None]
+    per_slot = jnp.where(keep[:, None], per_slot, 0)
+    out = jnp.sum(per_slot.reshape(t, k, d), axis=1)
+    return out, aux

@@ -1,0 +1,188 @@
+"""SSM-family language models: pure Mamba2 (ssm) and Zamba2-style hybrid.
+
+hybrid layout: ``num_layers`` Mamba2 blocks in groups of ``attn_every``;
+after each group one weight-SHARED full-attention block runs (zamba2's
+shared-block design).  Lowered as a nested scan: outer over groups, inner
+over the group's Mamba layers, so compile time stays depth-independent.
+
+Decode state: conv (L,B,W-1,C) + ssm (L,B,H,P,N) (+ per-group KV cache for
+the hybrid's shared attention).  Pure-SSM decode is O(1) in context length —
+this is why these archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import attention, layers, ssm
+from repro.models.transformer import stack_layer_params, _remat, _unrolled_scan
+
+
+def _scan(body, carry, xs, length: int, cfg: ModelConfig):
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    return _unrolled_scan(body, carry, xs, length)
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    if not cfg.is_hybrid:
+        return 1
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    return {
+        "norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "mamba": ssm.init_mamba2_block(key, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_layers, k_attn = jax.random.split(key, 3)
+    stacked, layer_specs = stack_layer_params(
+        lambda k: init_mamba_layer(k, cfg), k_layers, cfg.num_layers)
+
+    embed_params, embed_specs = layers.split_tree(layers.init_embedding(k_embed, cfg))
+    fn_param, fn_spec = layers.init_rms_norm(cfg.d_model, cfg)
+    params = {"embed": embed_params, "layers": stacked, "final_norm": fn_param}
+    specs = {"embed": embed_specs, "layers": layer_specs, "final_norm": fn_spec}
+
+    if cfg.is_hybrid and cfg.shared_attention:
+        pairs = {
+            "norm": layers.init_rms_norm(cfg.d_model, cfg),
+            "attn": attention.init_attention(k_attn, cfg),
+        }
+        params["shared_attn"], specs["shared_attn"] = layers.split_tree(pairs)
+    return params, specs
+
+
+def _reshape_groups(tree, groups: int, per_group: int):
+    return jax.tree.map(
+        lambda p: p.reshape((groups, per_group) + p.shape[1:]), tree)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = layers.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def mamba_body(carry, lp):
+        h, _ = ssm.mamba2_block(
+            lp["mamba"], layers.rms_norm(carry, lp["norm"], cfg.norm_eps), cfg)
+        return carry + h, jnp.float32(0)
+
+    mamba_body_r = _remat(mamba_body, cfg)
+
+    if not cfg.is_hybrid:
+        x, _ = _scan(mamba_body_r, x, params["layers"], cfg.num_layers, cfg)
+    else:
+        groups = _num_groups(cfg)
+        grouped = _reshape_groups(params["layers"], groups, cfg.attn_every)
+        sa = params["shared_attn"]
+
+        def attn_block(y):
+            h = attention.attention(
+                sa["attn"], layers.rms_norm(y, sa["norm"], cfg.norm_eps),
+                cfg, positions)
+            return y + h
+
+        attn_block_r = _remat(attn_block, cfg)
+
+        def group_body(carry, group_params):
+            carry, _ = _scan(mamba_body_r, carry, group_params,
+                             cfg.attn_every, cfg)
+            return attn_block_r(carry), None
+
+        x, _ = _scan(group_body, x, grouped, groups, cfg)
+
+    return layers.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    loss = layers.lm_loss(params, hidden, batch["labels"], cfg)
+    return loss + aux, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    L = cfg.num_layers
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state_size
+    cache = {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          dtype=jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((L, batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state_size), dtype=jnp.float32),
+    }
+    specs = {
+        "conv": ("layers", "batch", "conv", "ssm_inner"),
+        "ssm": ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"),
+    }
+    if cfg.is_hybrid and cfg.shared_attention:
+        kv, kv_specs = attention.init_kv_cache(
+            cfg, batch, seq_len, _num_groups(cfg))
+        cache.update(kv)
+        specs.update(kv_specs)
+    return cache, specs
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """tokens (B,1), pos (B,) -> (logits (B,1,V), new_cache)."""
+    x = layers.embed(params["embed"], tokens, cfg)
+
+    def mamba_decode_body(carry, scanned):
+        lp, conv_st, ssm_st = scanned
+        h, (new_conv, new_ssm) = ssm.mamba2_decode(
+            lp["mamba"], layers.rms_norm(carry, lp["norm"], cfg.norm_eps),
+            cfg, conv_st, ssm_st)
+        return carry + h, (new_conv, new_ssm)
+
+    if not cfg.is_hybrid:
+        x, (new_conv, new_ssm) = _scan(
+            mamba_decode_body, x,
+            (params["layers"], cache["conv"], cache["ssm"]),
+            cfg.num_layers, cfg)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        groups = _num_groups(cfg)
+        per = cfg.attn_every
+        grouped = _reshape_groups(params["layers"], groups, per)
+        conv_g = cache["conv"].reshape((groups, per) + cache["conv"].shape[1:])
+        ssm_g = cache["ssm"].reshape((groups, per) + cache["ssm"].shape[1:])
+        sa = params["shared_attn"]
+
+        def group_body(carry, scanned):
+            gp, conv_st, ssm_st, k_st, v_st = scanned
+            carry, (nc, ns) = _scan(
+                mamba_decode_body, carry, (gp, conv_st, ssm_st), per, cfg)
+            h, new_kv = attention.decode_attention(
+                sa["attn"], layers.rms_norm(carry, sa["norm"], cfg.norm_eps),
+                cfg, {"k": k_st, "v": v_st}, pos)
+            return carry + h, (nc, ns, new_kv["k"], new_kv["v"])
+
+        x, (nc, ns, nk, nv) = _scan(
+            group_body, x, (grouped, conv_g, ssm_g, cache["k"], cache["v"]),
+            groups, cfg)
+        new_cache = {
+            "conv": nc.reshape(cache["conv"].shape),
+            "ssm": ns.reshape(cache["ssm"].shape),
+            "k": nk, "v": nv,
+        }
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_head(params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder with a stubbed conv frontend.
+
+Per the assignment the mel/conv frontend is a stub: the model consumes
+precomputed frame embeddings (B, T_enc, d).  Encoder = bidirectional
+attention; decoder = causal self-attention + cross-attention.  Sinusoidal
+positions on both sides (the learned-position difference is immaterial for
+a systems framework; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import attention, layers
+from repro.models.transformer import stack_layer_params, _remat, _unrolled_scan
+
+
+def _scan(body, carry, xs, length, cfg):
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    return _unrolled_scan(body, carry, xs, length)
+
+
+def init_encoder_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "attn": attention.init_attention(k1, cfg),
+        "mlp_norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "mlp": layers.init_mlp(k2, cfg),
+    }
+
+
+def init_decoder_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "self_attn": attention.init_attention(k1, cfg),
+        "cross_norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "cross_attn": attention.init_attention(k2, cfg),
+        "mlp_norm": layers.init_rms_norm(cfg.d_model, cfg),
+        "mlp": layers.init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_enc, k_dec = jax.random.split(key, 3)
+    enc, enc_specs = stack_layer_params(
+        lambda k: init_encoder_layer(k, cfg), k_enc, cfg.encoder_layers)
+    dec, dec_specs = stack_layer_params(
+        lambda k: init_decoder_layer(k, cfg), k_dec, cfg.num_layers)
+    embed_params, embed_specs = layers.split_tree(layers.init_embedding(k_embed, cfg))
+    enc_norm, enc_norm_spec = layers.init_rms_norm(cfg.d_model, cfg)
+    fn_param, fn_spec = layers.init_rms_norm(cfg.d_model, cfg)
+    params = {"embed": embed_params, "encoder": enc, "decoder": dec,
+              "enc_norm": enc_norm, "final_norm": fn_param}
+    specs = {"embed": embed_specs, "encoder": enc_specs, "decoder": dec_specs,
+             "enc_norm": enc_norm_spec, "final_norm": fn_spec}
+    return params, specs
+
+
+def _add_positions(x):
+    b, s, d = x.shape
+    return x + layers.sinusoidal_positions(s, d).astype(x.dtype)[None]
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: precomputed frontend embeddings (B, T_enc, d)."""
+    x = _add_positions(frames.astype(jnp.dtype(cfg.compute_dtype)))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, lp):
+        h = attention.attention(
+            lp["attn"], layers.rms_norm(carry, lp["attn_norm"], cfg.norm_eps),
+            cfg, positions, causal=False)
+        carry = carry + h
+        f = layers.mlp(lp["mlp"],
+                       layers.rms_norm(carry, lp["mlp_norm"], cfg.norm_eps), cfg)
+        return carry + f, None
+
+    x, _ = _scan(_remat(body, cfg), x, params["encoder"],
+                 cfg.encoder_layers, cfg)
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attention(lp, x, enc_out, cfg: ModelConfig):
+    """x (B,S,d) queries over enc_out (B,T,d) keys/values (no mask)."""
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dnh->bsnh", x, lp["wq"])
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+    k = jnp.einsum("btd,dnh->btnh", enc_out, lp["wk"])
+    v = jnp.einsum("btd,dnh->btnh", enc_out, lp["wv"])
+    scores = jnp.einsum("bsnh,btnh->bnst", q, k).astype(jnp.float32) * h ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    return jnp.einsum("bsnh,nhd->bsd", out, lp["wo"])
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig):
+    x = _add_positions(layers.embed(params["embed"], tokens, cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, lp):
+        h = attention.attention(
+            lp["self_attn"],
+            layers.rms_norm(carry, lp["self_norm"], cfg.norm_eps),
+            cfg, positions, causal=True)
+        carry = carry + h
+        c = _cross_attention(
+            lp["cross_attn"],
+            layers.rms_norm(carry, lp["cross_norm"], cfg.norm_eps),
+            enc_out, cfg)
+        carry = carry + c
+        f = layers.mlp(lp["mlp"],
+                       layers.rms_norm(carry, lp["mlp_norm"], cfg.norm_eps), cfg)
+        return carry + f, None
+
+    x, _ = _scan(_remat(body, cfg), x, params["decoder"],
+                 cfg.num_layers, cfg)
+    return layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: {embeds (B,T_enc,d), tokens (B,S), labels (B,S)}."""
+    enc_out = encode(params, batch["embeds"], cfg)
+    hidden = decode_train(params, batch["tokens"], enc_out, cfg)
+    loss = layers.lm_loss(params, hidden, batch["labels"], cfg)
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    kv, kv_specs = attention.init_kv_cache(cfg, batch, seq_len, cfg.num_layers)
+    h = cfg.resolved_head_dim
+    cross_shape = (cfg.num_layers, batch, cfg.encoder_seq_len,
+                   cfg.num_kv_heads, h)
+    cross_spec = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    cache = dict(kv)
+    cache["cross_k"] = jnp.zeros(cross_shape, dtype=jnp.bfloat16)
+    cache["cross_v"] = jnp.zeros(cross_shape, dtype=jnp.bfloat16)
+    specs = dict(kv_specs)
+    specs["cross_k"] = cross_spec
+    specs["cross_v"] = cross_spec
+    return cache, specs
+
+
+def prime_cross_cache(params, cache, frames, cfg: ModelConfig):
+    """Run the encoder once and fill the cross-attention K/V cache."""
+    enc_out = encode(params, frames, cfg)
+
+    def per_layer(lp):
+        k = jnp.einsum("btd,dnh->btnh", enc_out, lp["cross_attn"]["wk"])
+        v = jnp.einsum("btd,dnh->btnh", enc_out, lp["cross_attn"]["wv"])
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    ks, vs = jax.vmap(per_layer)(params["decoder"])
+    cache = dict(cache)
+    cache["cross_k"], cache["cross_v"] = ks, vs
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = layers.embed(params["embed"], tokens, cfg)
+    half = cfg.d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    args = pos.astype(jnp.float32)[:, None] * freqs[None, :]       # (B, d/2)
+    pos_emb = jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+    x = x + pos_emb.astype(x.dtype)[:, None, :]
+
+    def body(carry, scanned):
+        lp, k_st, v_st, ck, cv = scanned
+        h, new_kv = attention.decode_attention(
+            lp["self_attn"],
+            layers.rms_norm(carry, lp["self_norm"], cfg.norm_eps),
+            cfg, {"k": k_st, "v": v_st}, pos)
+        carry = carry + h
+        # cross-attention against the primed encoder cache
+        xq = layers.rms_norm(carry, lp["cross_norm"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dnh->bsnh", xq, lp["cross_attn"]["wq"])
+        scores = jnp.einsum("bsnh,btnh->bnst", q, ck.astype(q.dtype))
+        scores = scores.astype(jnp.float32) * hd ** -0.5
+        probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+        out = jnp.einsum("bnst,btnh->bsnh", probs, cv)
+        carry = carry + jnp.einsum("bsnh,nhd->bsd", out,
+                                   lp["cross_attn"]["wo"]).astype(carry.dtype)
+        f = layers.mlp(lp["mlp"],
+                       layers.rms_norm(carry, lp["mlp_norm"], cfg.norm_eps), cfg)
+        return carry + f, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = _scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]), cfg.num_layers, cfg)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_head(params["embed"], x, cfg)
+    return logits, new_cache

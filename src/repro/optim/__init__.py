@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401
+from repro.optim.clip import clip_by_global_norm  # noqa: F401

@@ -1,0 +1,54 @@
+"""Functional AdamW on parameter pytrees.
+
+Moments are kept in fp32 regardless of parameter dtype; updates are
+computed in fp32 and cast back (bf16 training with fp32 optimizer state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+    return {"m": jax.tree.map(f32, params), "v": jax.tree.map(f32, params)}
+
+
+def adamw_update(grads, opt_state, params, lr, step,
+                 cfg: AdamWConfig = AdamWConfig()) -> Tuple[Any, Any]:
+    """Returns (new_params, new_opt_state).  ``step`` is 0-based."""
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        m_hat = m_new / c1
+        v_hat = v_new / c2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}

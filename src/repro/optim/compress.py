@@ -1,0 +1,76 @@
+"""Gradient compression with error feedback (cross-pod DCN optimization).
+
+int8 block-quantized all-reduce payloads: per-block absmax scaling, with
+the quantization residual fed back into the next step's gradient (error
+feedback keeps convergence unbiased).  Intended for the ``pod`` axis where
+DCN bandwidth (~ tens of GB/s/host) is the constraint — a 4x reduction vs
+bf16 on the slowest link of the hierarchy.  bf16 cast compression is the
+cheap 2x variant for the ICI axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 values, f32 per-block scales).  Pads to a block multiple."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                    ) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads_int8(grads: Any, error_state: Any,
+                        block: int = 256) -> Tuple[Any, Any]:
+    """Quantize (grads + carried error); returns (decoded grads as the
+    optimizer sees them post-all-reduce, new error state).
+
+    The round trip models what every pod receives after the quantized
+    all-reduce; the residual (pre-quant minus decoded) is carried.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32, block)
+        dec = dequantize_int8(q, scale, g32.shape)
+        return dec.astype(g.dtype), g32 - dec
+
+    pairs = jax.tree.map(one, grads, error_state)
+    dec = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return dec, err
+
+
+def init_error_state(grads_or_params: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_or_params)
+
+
+def compressed_bytes(grads: Any, block: int = 256) -> Tuple[int, int]:
+    """(raw bf16 bytes, int8+scale bytes) — the DCN saving accounting."""
+    raw = comp = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        raw += n * 2
+        nblocks = -(-n // block)
+        comp += n + nblocks * 4
+    return raw, comp

@@ -1,0 +1,44 @@
+"""LR schedules: cosine and MiniCPM's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)  # lr>0 at step 0
+    frac = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5
+                     * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr, warmup_steps, stable_steps, decay_steps,
+        min_ratio=0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    flat stable phase, fast exponential-style decay tail."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)
+    in_decay = step - (warmup_steps + stable_steps)
+    frac = jnp.clip(in_decay / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * (min_ratio ** frac)  # exp interpolation to min
+    out = jnp.where(step < warmup_steps, warm,
+                    jnp.where(in_decay < 0, peak_lr, decay))
+    return out
+
+
+def make_schedule(name: str, **kw):
+    if name == "wsd":
+        kw.setdefault("warmup_steps", 100)
+        if "total_steps" in kw:  # derive WSD phases from a step budget
+            total = kw.pop("total_steps")
+            kw.setdefault("decay_steps", max(total // 10, 1))
+            kw.setdefault("stable_steps",
+                          max(total - kw["warmup_steps"] - kw["decay_steps"], 1))
+        kw.setdefault("stable_steps", 1000)
+        kw.setdefault("decay_steps", 100)
+        return lambda step: wsd(step, **kw)
+    kw.setdefault("warmup_steps", 100)
+    kw.setdefault("total_steps", 1000)
+    return lambda step: warmup_cosine(step, **kw)

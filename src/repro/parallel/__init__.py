@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    logical_to_pspec, params_pspecs, batch_pspec, ShardingRules,
+)

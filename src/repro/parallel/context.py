@@ -1,0 +1,36 @@
+"""Activation-sharding context: lets model code place logical sharding
+constraints without knowing the mesh (sequence parallelism & friends).
+
+The launcher (dryrun/train) installs (mesh, rules) before tracing; model
+code calls ``constrain(x, logical_axes)`` at annotation points.  Outside a
+context the call is a no-op, so tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.parallel.sharding import ShardingRules, logical_to_pspec
+
+_ACTIVE = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: ShardingRules):
+    prev = dict(_ACTIVE)
+    _ACTIVE["mesh"], _ACTIVE["rules"] = mesh, rules
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def constrain(x, logical_axes: Tuple[Optional[str], ...]):
+    mesh, rules = _ACTIVE["mesh"], _ACTIVE["rules"]
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(tuple(logical_axes), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

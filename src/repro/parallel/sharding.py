@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis sharding rules (FSDP + TP + EP + SP).
+
+Every parameter/cache tensor carries a tuple of *logical* axis names from
+model init.  This module maps them onto physical mesh axes with:
+
+  * a priority list of logical names eligible for the ``model`` axis
+    (tensor parallelism / expert parallelism),
+  * FSDP: one remaining eligible dim additionally sharded over ``data``,
+  * divisibility fallback: a dim that does not divide the axis size is
+    left replicated (e.g. gemma's kv=1 MQA heads, mixtral's 8 experts on a
+    16-way model axis -> expert weights fall through to d_ff TP),
+  * greedy one-axis-per-tensor assignment, so e.g. qwen3-moe assigns
+    ``experts`` to the model axis and leaves its small (768) expert FFN dim
+    replicated, while mixtral does the reverse.
+
+Activation/batch sharding: batch -> ('pod','data'); kv_seq -> 'model' for
+the context-parallel decode cache (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical names eligible for the tensor/expert-parallel ("model") axis,
+# in assignment priority order:
+MODEL_AXIS_PRIORITY = (
+    "experts", "q_heads", "kv_heads", "ffn", "vocab", "ssm_heads",
+    "ssm_inner", "kv_seq",
+)
+# logical names eligible for FSDP ("data") sharding of parameters:
+DATA_AXIS_PRIORITY = ("embed", "ffn", "vocab", "ssm_inner", "batch")
+# logical names for the batch/data axis on activations:
+BATCH_NAMES = ("batch",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Physical mesh axis names + toggles (hillclimb variants flip these)."""
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None       # set on the multi-pod mesh
+    fsdp: bool = True                    # shard params over data axis too
+    shard_kv_seq: bool = True            # context-parallel decode cache
+    seq_parallel: bool = False           # shard activation seq over model
+    ssm_tp: bool = True                  # tensor-parallel SSM projections
+
+    def batch_axes(self):
+        if self.pod_axis:
+            return (self.pod_axis, self.data_axis)
+        return (self.data_axis,)
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                     mesh: Mesh, rules: ShardingRules) -> P:
+    """Map one tensor's logical axes to a PartitionSpec."""
+    assert len(axes) == len(shape), (axes, shape)
+    assign: list = [None] * len(axes)
+    model_taken = False
+    data_taken = False
+
+    # pass 1: model axis (TP/EP/SP) by priority
+    priority = MODEL_AXIS_PRIORITY
+    if rules.seq_parallel:
+        priority = ("seq",) + priority   # SP outranks TP when enabled
+    for name in priority:
+        if model_taken:
+            break
+        for i, ax in enumerate(axes):
+            if ax == name and shape[i] % _axis_size(mesh, rules.model_axis) == 0:
+                if name == "kv_seq" and not rules.shard_kv_seq:
+                    continue
+                if name in ("ssm_inner", "ssm_heads") and not rules.ssm_tp:
+                    continue
+                assign[i] = rules.model_axis
+                model_taken = True
+                break
+
+    # pass 2: batch dims -> (pod, data)
+    for i, ax in enumerate(axes):
+        if ax in BATCH_NAMES and assign[i] is None:
+            total = 1
+            for a in rules.batch_axes():
+                total *= _axis_size(mesh, a)
+            if shape[i] % total == 0:
+                assign[i] = rules.batch_axes() if len(rules.batch_axes()) > 1 \
+                    else rules.batch_axes()[0]
+                data_taken = True
+            break
+
+    # pass 3: FSDP — shard one more param dim over data
+    if rules.fsdp and not data_taken:
+        for name in DATA_AXIS_PRIORITY:
+            if data_taken:
+                break
+            for i, ax in enumerate(axes):
+                if (ax == name and assign[i] is None
+                        and shape[i] % _axis_size(mesh, rules.data_axis) == 0):
+                    assign[i] = rules.data_axis
+                    data_taken = True
+                    break
+
+    return P(*assign)
+
+
+def tree_pspecs(specs_tree, shapes_tree, mesh: Mesh, rules: ShardingRules):
+    """Map a whole (specs, shapes) tree to PartitionSpecs."""
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda ax, arr: logical_to_pspec(ax, arr.shape, mesh, rules),
+        specs_tree, shapes_tree, is_leaf=lambda x: is_spec(x))
+
+
+def params_pspecs(specs_tree, params_shapes, mesh: Mesh, rules: ShardingRules):
+    return tree_pspecs(specs_tree, params_shapes, mesh, rules)
+
+
+def batch_pspec(batch_tree, mesh: Mesh, rules: ShardingRules):
+    """Training batch: shard leading (batch) dim over (pod, data)."""
+    def one(x):
+        total = 1
+        for a in rules.batch_axes():
+            total *= _axis_size(mesh, a)
+        lead = rules.batch_axes() if len(rules.batch_axes()) > 1 \
+            else rules.batch_axes()[0]
+        if x.shape and x.shape[0] % total == 0:
+            return P(lead, *([None] * (len(x.shape) - 1)))
+        return P(*([None] * len(x.shape)))
+    return jax.tree.map(one, batch_tree)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

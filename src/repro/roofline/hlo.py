@@ -1,0 +1,96 @@
+"""Parse compiled HLO text: per-collective operand bytes.
+
+cost_analysis() has no collective-bytes entry, so we scan the
+post-optimization HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instructions and sum their *operand* sizes
+(looked up from the defining instructions seen earlier in the module).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `  %name = <type> op-name(...)` or `  name = <type> op-name(...)`
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """bytes of an HLO type string, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+    """Returns (total_operand_bytes, per-op bytes, per-op counts)."""
+    sizes: Dict[str, int] = {}
+    per_op: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        sizes[name] = shape_bytes(type_str)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + "-start" or op == c + "-done":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        # operand names inside the call parens
+        args = line[line.index("(") + 1:]
+        depth, buf, opnds = 1, "", []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    if buf.strip():
+                        opnds.append(buf.strip())
+                    break
+            if depth >= 1 and ch not in "()":
+                if ch == "," and depth == 1:
+                    opnds.append(buf.strip())
+                    buf = ""
+                else:
+                    buf += ch
+        nbytes = 0
+        for o in opnds:
+            o = o.lstrip("%")
+            if o in sizes:
+                nbytes += sizes[o]
+        if nbytes == 0:
+            nbytes = shape_bytes(type_str)  # fallback: result size
+        per_op[base] += nbytes
+        counts[base] += 1
+
+    return sum(per_op.values()), dict(per_op), dict(counts)

@@ -1,0 +1,4 @@
+from repro.train.step import (  # noqa: F401
+    abstract_init, make_train_step, make_prefill_step, make_serve_step,
+    init_train_state, train_state_pspecs,
+)

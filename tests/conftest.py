@@ -1,0 +1,6 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — tests must see the real single
+CPU device; only launch/dryrun.py creates the 512 placeholder devices."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

@@ -1,0 +1,77 @@
+"""In-kernel-analog aggregation (§4) + Python/native stack stitching."""
+import sys
+
+from repro.core.aggregate import StackAggregator
+from repro.core.events import RawStackSample
+from repro.core.stitch import NativeFrame, PyFrame, stitch, walk_pyframes
+
+
+def _sample(frames, rank=0, w=1):
+    return RawStackSample(rank=rank, timestamp=0.0, frames=tuple(frames),
+                          weight=w)
+
+
+def test_aggregation_reduction_factor():
+    """The paper's 10-50x: many samples, few unique stacks."""
+    agg = StackAggregator()
+    stacks = [tuple((f"bid{i}", j) for j in range(20)) for i in range(10)]
+    for n in range(2000):
+        agg.record(_sample(stacks[n % len(stacks)]))
+    out = agg.drain()
+    assert len(out) == 10
+    assert sum(c for _, c in out) == 2000        # conservation
+    assert 10 <= agg.stats.reduction <= 500
+    assert agg.stats.reduction >= 50             # this workload: 200x-ish
+
+
+def test_aggregation_overflow_passthrough():
+    agg = StackAggregator(max_entries=4)
+    for i in range(10):
+        agg.record(_sample([(f"b{i}", 0)]))
+    out = agg.drain()
+    assert sum(c for _, c in out) == 10          # nothing lost
+
+
+def test_drain_resets():
+    agg = StackAggregator()
+    agg.record(_sample([("b", 1)]))
+    assert len(agg.drain()) == 1
+    assert agg.drain() == []
+
+
+# -- stitching ----------------------------------------------------------------
+
+def test_stitch_replaces_evaluator_frames():
+    native = [  # leaf..root
+        NativeFrame("memcpy", sp=100),
+        NativeFrame("at::native::softmax", sp=200),
+        NativeFrame("_PyEval_EvalFrameDefault", sp=300),
+        NativeFrame("_PyEval_EvalFrameDefault", sp=500),
+        NativeFrame("Py_RunMain", sp=700),
+    ]
+    python = [  # leaf..root
+        PyFrame("forward", "model.py", 10, native_sp=290),
+        PyFrame("train_step", "loop.py", 55, native_sp=480),
+    ]
+    merged = stitch(native, python)
+    assert merged == ("Py_RunMain", "py::train_step", "py::forward",
+                      "at::native::softmax", "memcpy")
+
+
+def test_stitch_pure_native_passthrough():
+    native = [NativeFrame("a", 1), NativeFrame("b", 2)]
+    assert stitch(native, []) == ("b", "a")
+
+
+def test_walk_real_python_frames():
+    def inner():
+        return walk_pyframes(sys._getframe())
+
+    def outer():
+        return inner()
+
+    frames = outer()
+    names = [f.code_name for f in frames]
+    assert names[0] == "inner" and "outer" in names
+    labels = [f.label for f in frames]
+    assert labels[0] == "py::inner"

@@ -1,0 +1,56 @@
+"""Communicator struct parsing + tracer (§3.2)."""
+import pytest
+
+from repro.core.collective import CommStructCodec, CollectiveTracer
+
+
+@pytest.mark.parametrize("version", CommStructCodec.supported_versions())
+def test_pack_parse_roundtrip(version):
+    blob = CommStructCodec.pack(version, comm_hash=0xDEADBEEF1234,
+                                rank=3, n_ranks=16, local_rank=3, op_count=42)
+    info = CommStructCodec.parse(version, blob)
+    assert info.comm_hash == 0xDEADBEEF1234
+    assert (info.rank, info.n_ranks, info.local_rank, info.op_count) == \
+        (3, 16, 3, 42)
+
+
+@pytest.mark.parametrize("version", CommStructCodec.supported_versions())
+def test_sniff_identifies_layout(version):
+    blob = CommStructCodec.pack(version, comm_hash=0xAB, rank=2, n_ranks=8,
+                                local_rank=2)
+    info = CommStructCodec.sniff(blob)
+    assert info is not None
+    assert (info.rank, info.n_ranks) == (2, 8)
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        CommStructCodec.parse("nccl-2.18", b"\x00" * 256)
+    assert CommStructCodec.sniff(b"\x00" * 256) is None
+
+
+def test_wrong_version_layout_fails_or_mismatches():
+    """Parsing with the wrong version's offsets must not silently return
+    the right answer — that's WHY layout updates are needed (§3.2 cost)."""
+    blob = CommStructCodec.pack("nccl-2.14", comm_hash=0x77, rank=1,
+                                n_ranks=8, local_rank=1)
+    try:
+        info = CommStructCodec.parse("nccl-2.21", blob)
+        assert (info.rank, info.n_ranks) != (1, 8)
+    except ValueError:
+        pass  # magic moved -> detected
+
+
+def test_tracer_records_and_drains():
+    tr = CollectiveTracer(rank=5)
+    blob = CommStructCodec.pack("accl-1.x", comm_hash=0xF00D, rank=5,
+                                n_ranks=64, local_rank=5)
+    info = tr.register_comm_snapshot(blob)
+    assert info.group_id in tr.groups()
+    with tr.timed_collective(info.group_id, "AllGather", nbytes=1024):
+        pass
+    evs = tr.drain()
+    assert len(evs) == 1
+    assert evs[0].op == "AllGather" and evs[0].rank == 5
+    assert evs[0].exit >= evs[0].entry
+    assert tr.drain() == []

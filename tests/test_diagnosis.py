@@ -1,0 +1,154 @@
+"""Waterline, layered differential diagnosis, temporal baselines."""
+import pytest
+
+from repro.core.baseline import BaselineStore, compare_to_baseline
+from repro.core.diffdiag import cpu_diff, diagnose, gpu_diff, os_diff
+from repro.core.events import KernelEvent, OSSignals, StackSample
+from repro.core.flamegraph import FlameGraph, path_fraction
+from repro.core.waterline import CPUWaterline
+
+
+def _fg(weights):
+    fg = FlameGraph()
+    for stack, w in weights.items():
+        fg.add(stack, w)
+    return fg
+
+
+BASE = {("main", "forward", "softmax"): 40,
+        ("main", "forward", "dropout"): 30,
+        ("main", "backward", "matmul"): 30}
+
+
+# -- flamegraph -------------------------------------------------------------
+
+def test_function_fractions_inclusive():
+    fg = _fg(BASE)
+    fr = fg.function_fractions()
+    assert fr["main"] == 1.0
+    assert abs(fr["forward"] - 0.7) < 1e-9
+    assert abs(fr["softmax"] - 0.4) < 1e-9
+
+
+def test_path_fraction():
+    fg = _fg(BASE)
+    assert abs(path_fraction(fg, ("forward", "softmax")) - 0.4) < 1e-9
+    assert path_fraction(fg, ("softmax", "forward")) == 0.0
+
+
+def test_diff_orders_by_magnitude():
+    a = _fg({**BASE, ("main", "io", "read"): 25})
+    b = _fg(BASE)
+    d = a.diff(b)
+    assert list(d)[0] in ("io", "read")
+    assert d["io"] > 0.1
+
+
+# -- waterline ----------------------------------------------------------------
+
+def test_waterline_flags_outlier_rank():
+    wl = CPUWaterline(window=10, k=2.0)
+    for it in range(10):
+        for rank in range(8):
+            weights = dict(BASE)
+            if rank == 4:
+                weights[("main", "net_rx_action", "napi_poll")] = 8
+            wl.observe(rank, _fg(weights))
+    flagged = wl.flagged_ranks()
+    assert 4 in flagged
+    alerts = [a for a in wl.check() if a.rank == 4]
+    assert any("net_rx" in a.function or "napi" in a.function for a in alerts)
+
+
+def test_waterline_quiet_on_healthy_group():
+    wl = CPUWaterline(window=10, k=2.0)
+    import random
+    rng = random.Random(0)
+    for it in range(10):
+        for rank in range(8):
+            w = {k: v + rng.randint(-2, 2) for k, v in BASE.items()}
+            wl.observe(rank, _fg(w))
+    assert wl.flagged_ranks() == []
+
+
+# -- gpu diff -------------------------------------------------------------------
+
+def _kernels(rank, factor=1.0, only=None):
+    base = [("gemm", 40e-3), ("softmax", 8e-3), ("dropout", 6e-3)]
+    out = []
+    for n, d in base:
+        f = factor if (only is None or n in only) else 1.0
+        out.append(KernelEvent(rank=rank, name=n, start=0, duration=d * f))
+    return out
+
+
+def test_gpu_diff_uniform_slowdown_is_hardware():
+    v = gpu_diff(_kernels(0, 1.18), _kernels(7))
+    assert v and v.root_cause == "gpu_uniform_slowdown"
+
+
+def test_gpu_diff_specific_kernel_is_software():
+    v = gpu_diff(_kernels(0, 1.8, only={"softmax"}), _kernels(7))
+    assert v and v.root_cause == "gpu_specific_kernels_slow"
+    assert "softmax" in v.evidence["slow_kernels"]
+
+
+def test_gpu_diff_matching_profiles_descend():
+    assert gpu_diff(_kernels(0), _kernels(7)) is None
+
+
+# -- cpu diff -------------------------------------------------------------------
+
+def test_cpu_diff_classifies_nic_softirq():
+    s = _fg({**BASE, ("asm_common_interrupt", "do_softirq",
+                      "net_rx_action", "napi_poll"): 2})
+    h = _fg(BASE)
+    v = cpu_diff(s, h)
+    assert v and v.root_cause == "nic_softirq_contention"
+
+
+def test_cpu_diff_classifies_vfs_lock():
+    s = _fg({("do_sys_openat2", "dput", "queued_spin_lock_slowpath"): 80,
+             **BASE})
+    v = cpu_diff(s, _fg(BASE))
+    assert v and v.root_cause == "vfs_dentry_lock_contention"
+
+
+# -- os diff ----------------------------------------------------------------------
+
+def test_os_diff_irq_imbalance():
+    s = OSSignals(rank=0, timestamp=0, interrupts={"NET_RX": 90000},
+                  sched_latency_p99=300e-6)
+    h = OSSignals(rank=7, timestamp=0, interrupts={"NET_RX": 2000},
+                  sched_latency_p99=80e-6)
+    v = os_diff(s, h)
+    assert v and v.root_cause in ("irq_imbalance", "scheduler_contention")
+
+
+# -- layered walk -------------------------------------------------------------------
+
+def test_layered_order_gpu_first():
+    v = diagnose(_kernels(0, 1.2), _kernels(7), _fg(BASE), _fg(BASE))
+    assert v.layer == "gpu"
+
+
+def test_layered_falls_through_to_cpu():
+    s = _fg({**BASE, ("SLS::LogClient::Send", "protobuf::Serialize"): 6})
+    v = diagnose(_kernels(0), _kernels(7), s, _fg(BASE))
+    assert v.layer == "cpu" and v.root_cause == "logging_overhead"
+
+
+# -- temporal baseline ---------------------------------------------------------------
+
+def test_temporal_baseline_flags_new_hot_path():
+    store = BaselineStore()
+    store.save("job", "g", _fg(BASE), iter_time=0.1)
+    now = _fg({**BASE, ("SLS::LogClient::Send", "memcpy"): 9})
+    cands = compare_to_baseline(now, store.get("job", "g"), delta=0.005)
+    assert cands and cands[0].function in ("SLS::LogClient::Send", "memcpy")
+    assert any(c.root_cause == "logging_overhead" for c in cands)
+
+
+def test_temporal_baseline_quiet_when_unchanged():
+    base = _fg(BASE)
+    assert compare_to_baseline(_fg(BASE), base, delta=0.005) == []

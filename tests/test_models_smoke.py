@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train step + decode step on CPU, asserting output shapes and finite values.
+(The FULL configs are exercised only via the dry-run, per the assignment.)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.optim import make_schedule
+from repro.train import init_train_state, make_train_step, make_serve_step
+
+ARCHS = configs.list_archs()
+
+
+def _batch(cfg, b=2, s=64, key=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    batch = {}
+    if cfg.is_enc_dec:
+        batch["embeds"] = jax.random.normal(
+            k1, (b, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.02
+        batch["tokens"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size)
+    elif cfg.embeds_as_input:
+        batch["embeds"] = jax.random.normal(k1, (b, s, cfg.d_model),
+                                            jnp.float32) * 0.02
+    else:
+        batch["tokens"] = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = configs.tiny(arch)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        model, make_schedule("cosine", peak_lr=1e-3)))
+    batch = _batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(jnp.asarray(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(diff)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = configs.tiny(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    b = 2
+    cache, _ = model.init_cache(b, 64)
+    if cfg.is_enc_dec:
+        from repro.models import whisper
+        emb = jnp.ones((b, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.02
+        cache = whisper.prime_cross_cache(params, cache, emb, cfg)
+    serve = jax.jit(make_serve_step(model))
+    if cfg.embeds_as_input and not cfg.is_enc_dec:
+        tok = jnp.ones((b, 1, cfg.d_model), jnp.float32)
+    else:
+        tok = jnp.ones((b, 1), jnp.int32)
+    logits, new_cache = serve(params, cache, tok, jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache mutated
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x22b", "mamba2-370m"])
+def test_decode_matches_incremental_prefill(arch):
+    """Decoding two tokens sequentially keeps logits finite and cache
+    positions advance (sanity of KV/SSM state threading)."""
+    cfg = dataclasses.replace(configs.tiny(arch), param_dtype="float32",
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    cache, _ = model.init_cache(1, 16)
+    serve = jax.jit(make_serve_step(model))
+    logits = []
+    for pos in range(3):
+        tok = jnp.array([[pos + 1]], jnp.int32)
+        lg, cache = serve(params, cache, tok, jnp.array([pos], jnp.int32))
+        logits.append(lg)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in logits)
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    c = configs.get("qwen2-0.5b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (24, 896, 14, 2, 4864, 151936)
+    assert c.qkv_bias
+    c = configs.get("minicpm-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (40, 2304, 36, 36, 5760, 122753)
+    c = configs.get("gemma-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.head_dim) == (18, 2048, 8, 1, 16384, 256000, 256)
+    assert c.activation == "gelu"
+    c = configs.get("qwen3-4b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (36, 2560, 32, 8, 9728, 151936)
+    assert c.qk_norm
+    c = configs.get("zamba2-2.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size,
+            c.ssm_state_size) == (54, 2560, 32, 10240, 32000, 64)
+    assert c.shared_attention
+    c = configs.get("qwen3-moe-30b-a3b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.num_experts_per_tok) == \
+        (48, 2048, 32, 4, 768, 151936, 128, 8)
+    c = configs.get("mixtral-8x22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.num_experts_per_tok) == \
+        (56, 6144, 48, 8, 16384, 32768, 8, 2)
+    assert c.sliding_window == 4096
+    c = configs.get("qwen2-vl-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (28, 3584, 28, 4, 18944, 152064)
+    assert c.rope_type == "mrope"
+    c = configs.get("mamba2-370m")
+    assert (c.num_layers, c.d_model, c.vocab_size, c.ssm_state_size) == \
+        (48, 1024, 50280, 128)
+    c = configs.get("whisper-base")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.num_heads,
+            c.d_ff, c.vocab_size) == (6, 6, 512, 8, 2048, 51865)
+
+
+def test_long_context_applicability():
+    assert not configs.shape_applicable("qwen2-0.5b", "long_500k")
+    assert not configs.shape_applicable("whisper-base", "long_500k")
+    assert configs.shape_applicable("mixtral-8x22b", "long_500k")  # SWA
+    assert configs.shape_applicable("mamba2-370m", "long_500k")
+    assert configs.shape_applicable("zamba2-2.7b", "long_500k")
+    cells = configs.all_cells()
+    assert len(cells) == 40
+    assert sum(1 for *_names, ok in cells if ok) == 33

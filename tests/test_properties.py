@@ -1,0 +1,155 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregate import StackAggregator
+from repro.core.collective.instances import separate_instances
+from repro.core.events import CollectiveEvent, RawStackSample, StackSample
+from repro.core.flamegraph import FlameGraph
+from repro.core.straggler import StragglerDetector
+from repro.core.symbols import SymbolFile
+from repro.core.waterline import CPUWaterline
+from repro.models.layers import cross_entropy
+from repro.optim.compress import dequantize_int8, quantize_int8
+from repro.roofline.hlo import shape_bytes
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+@given(st.lists(st.lists(st.integers(0, 30), min_size=1, max_size=10),
+                min_size=1, max_size=60),
+       st.integers(1, 8))
+def test_aggregation_conserves_counts(stacks, max_entries):
+    agg = StackAggregator(max_entries=max_entries)
+    total = 0
+    for s in stacks:
+        frames = tuple(("bid", o) for o in s)
+        agg.record(RawStackSample(rank=0, timestamp=0, frames=frames))
+        total += 1
+    out = agg.drain()
+    assert sum(c for _, c in out) == total
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=600))
+def test_quantize_dequantize_bounded_error(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q, s = quantize_int8(x, block=64)
+    dec = dequantize_int8(q, s, x.shape)
+    bound = float(jnp.max(jnp.abs(x))) / 127 + 1e-5
+    assert float(jnp.max(jnp.abs(dec - x))) <= bound
+
+
+@given(st.integers(2, 12), st.integers(1, 30), st.integers(0, 1000))
+def test_instance_separation_partitions_events(n_ranks, n_inst, seed):
+    rng = np.random.default_rng(seed)
+    events = []
+    for i in range(n_inst):
+        t0 = i * 1.0
+        entries = t0 + rng.uniform(0, 0.2, n_ranks)
+        exit_t = entries.max() + 0.3
+        for r in range(n_ranks):
+            events.append(CollectiveEvent(
+                rank=r, group_id="g", op="AllReduce",
+                entry=float(entries[r]), exit=float(exit_t)))
+    rng.shuffle(events)
+    instances = separate_instances(events)
+    # partition property: every event in exactly one instance
+    assert sum(len(i) for i in instances) == len(events)
+    for inst in instances:
+        ranks = [e.rank for e in inst]
+        assert len(ranks) == len(set(ranks))       # <=1 event per rank
+        lo = max(e.entry for e in inst)
+        hi = min(e.exit for e in inst)
+        assert lo <= hi + 1e-12                    # mutual overlap invariant
+
+
+@given(st.lists(st.tuples(st.integers(0, 1 << 30),
+                          st.text(min_size=1, max_size=20)),
+                min_size=1, max_size=200, unique_by=lambda t: t[0]))
+def test_symbol_file_resolves_exact_addresses(syms):
+    sf = SymbolFile.build(syms)
+    for addr, name in syms:
+        assert sf.resolve(addr) == name
+
+
+@given(st.dictionaries(
+    st.tuples(st.sampled_from(["a", "b", "c", "d"]),
+              st.sampled_from(["x", "y", "z"])),
+    st.integers(1, 100), min_size=1, max_size=10))
+def test_flamegraph_fraction_invariants(weights):
+    fg = FlameGraph()
+    for stack, w in weights.items():
+        fg.add(stack, w)
+    fr = fg.function_fractions()
+    assert all(0 <= v <= 1 + 1e-12 for v in fr.values())
+    leaf = fg.leaf_fractions()
+    assert abs(sum(leaf.values()) - 1.0) < 1e-9
+    d = fg.diff(fg)
+    assert all(abs(v) < 1e-12 for v in d.values())
+
+
+@given(st.integers(2, 16), st.integers(1, 40))
+def test_waterline_never_flags_identical_ranks(n_ranks, iters):
+    wl = CPUWaterline(window=50)
+    fg = FlameGraph()
+    fg.add(("main", "work"), 100)
+    for _ in range(iters):
+        for r in range(n_ranks):
+            wl.observe(r, fg)
+    assert wl.flagged_ranks() == []
+
+
+@given(st.integers(8, 16), st.floats(2e-4, 1e-2))
+def test_straggler_single_outlier_always_found(n_ranks, lateness):
+    """Paper §3.1: for N >= 8 one straggler's influence on mu/sigma is
+    bounded, so the outlier remains above mu + 2 sigma.  (For N <= 5 the
+    max attainable z-score sqrt(N-1) < 2 — a structural limit of the
+    mean/std model; the robust MAD variant covers small groups.)"""
+    det = StragglerDetector(window=50, min_instances=8)
+    for i in range(20):
+        base = i * 0.1
+        evs = []
+        entries = {r: base + (lateness if r == 1 else 0.0) + (r * 1e-7)
+                   for r in range(n_ranks)}
+        exit_t = max(entries.values()) + 0.01
+        for r in range(n_ranks):
+            evs.append(CollectiveEvent(rank=r, group_id="g", op="AR",
+                                       entry=entries[r], exit=exit_t))
+        det.observe_instance(evs)
+    alerts = det.check()
+    assert alerts and alerts[0].rank == 1
+
+
+@given(st.integers(2, 5), st.integers(3, 17), st.integers(2, 40),
+       st.integers(0, 100))
+def test_distributed_ce_matches_naive(b, s, vocab, seed):
+    rng = np.random.default_rng(seed)
+    padded = ((vocab + 7) // 8) * 8
+    logits = np.zeros((b, s, padded), np.float32)
+    logits[..., :vocab] = rng.normal(size=(b, s, vocab))
+    labels = rng.integers(0, vocab, size=(b, s))
+    ours = np.asarray(cross_entropy(jnp.asarray(logits),
+                                    jnp.asarray(labels), vocab))
+    # naive reference over the unpadded vocab
+    x = logits[..., :vocab]
+    m = x.max(-1, keepdims=True)
+    lse = np.log(np.exp(x - m).sum(-1)) + m[..., 0]
+    ref = lse - np.take_along_axis(x, labels[..., None], -1)[..., 0]
+    np.testing.assert_allclose(ours, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "pred", "u8"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_hlo_shape_bytes(dtype, dims):
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "u8": 1}
+    t = f"{dtype}[{','.join(map(str, dims))}]"
+    n = 1
+    for d in dims:
+        n *= d
+    assert shape_bytes(t) == n * sizes[dtype]

@@ -1,0 +1,72 @@
+"""HLO collective parsing + dry-run bookkeeping units (the 512-device
+dry-run itself runs via ``python -m repro.launch.dryrun``; here we test the
+machinery on this process's single device)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.roofline.hlo import collective_bytes, shape_bytes
+
+HLO = """
+HloModule jit_step
+
+ENTRY main {
+  %p0 = bf16[256,4096,896]{2,1,0} parameter(0)
+  %p1 = f32[1024,512]{1,0} parameter(1)
+  %ag = bf16[256,4096,896]{2,1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024,512]{1,0} all-reduce(%p1), to_apply=%add
+  %rs = f32[64,512]{1,0} reduce-scatter(%p1), dimensions={0}
+  %cp = bf16[256,4096,896]{2,1,0} collective-permute(%ag), source_target_pairs={{0,1}}
+  ROOT %t = (bf16[256,4096,896]{2,1,0}) tuple(%cp)
+}
+"""
+
+
+def test_collective_bytes_from_hlo():
+    total, by_op, counts = collective_bytes(HLO)
+    p0 = 256 * 4096 * 896 * 2
+    p1 = 1024 * 512 * 4
+    assert by_op["all-gather"] == p0
+    assert by_op["all-reduce"] == p1
+    assert by_op["reduce-scatter"] == p1
+    assert by_op["collective-permute"] == p0
+    assert counts == {"all-gather": 1, "all-reduce": 1,
+                      "reduce-scatter": 1, "collective-permute": 1}
+    assert total == 2 * p0 + 2 * p1
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+  %p0 = f32[128]{0} parameter(0)
+  %ags = f32[128]{0} all-gather-start(%p0), dimensions={0}
+  %agd = f32[128]{0} all-gather-done(%ags)
+"""
+    total, by_op, counts = collective_bytes(hlo)
+    assert counts["all-gather"] == 1
+    assert by_op["all-gather"] == 128 * 4
+
+
+def test_tuple_type_bytes():
+    assert shape_bytes("(f32[8,8], bf16[4])") == 8 * 8 * 4 + 4 * 2
+
+
+def test_dryrun_results_complete_if_present():
+    """When the sweep has run, assert all 33 applicable cells passed on
+    BOTH meshes (the multi-pod requirement)."""
+    results = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not results.exists():
+        pytest.skip("dry-run sweep not executed in this environment")
+    recs = [json.loads(p.read_text()) for p in results.glob("*_baseline.json")]
+    for pod in ("pod1", "pod2"):
+        got = {(r["arch"], r["shape"]) for r in recs
+               if r.get("ok") and (f"_{pod}_" in json.dumps(r) or
+                                   r.get("multi_pod") == (pod == "pod2"))}
+        assert len([r for r in recs
+                    if r.get("ok") and r.get("multi_pod") == (pod == "pod2")]) >= 33, pod
+
+
+def test_variants_registry():
+    from repro.launch.dryrun import VARIANTS
+    assert "baseline" in VARIANTS
+    assert {"no_fsdp", "remat_none", "no_kvshard"} <= set(VARIANTS)

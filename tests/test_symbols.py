@@ -1,0 +1,89 @@
+"""Centralized symbol resolution (§3.4/§5.3): format, O(log n) access,
+sparse-table misattribution, chunked dedup'd uploads."""
+import pytest
+
+from repro.core.events import RawStackSample
+from repro.core.symbols import SymbolFile, SymbolRepository
+from repro.core.symbols.resolver import (CentralResolver, NodeSideResolver,
+                                         full_table, sparse_table)
+from repro.core.unwind import synth_binary
+
+
+def test_symbol_file_roundtrip():
+    syms = [(0x1000, "alpha"), (0x2000, "beta"), (0x3000, "gamma::delta")]
+    sf = SymbolFile.build(syms)
+    assert sf.count == 3
+    assert sf.resolve(0x1000) == "alpha"
+    assert sf.resolve(0x1fff) == "alpha"      # nearest lower
+    assert sf.resolve(0x2001) == "beta"
+    assert sf.resolve(0x3abc) == "gamma::delta"
+    assert sf.resolve(0x500) is None          # below first symbol
+
+
+def test_symbol_lookup_reads_are_logarithmic():
+    syms = [(i * 64, f"fn_{i}") for i in range(4096)]
+    sf = SymbolFile.build(syms)
+    sf.reads = 0
+    sf.resolve(1234 * 64 + 8)
+    # bisect over 4096 entries: <= 13 probes (+1 final record read)
+    assert sf.reads <= 14
+
+
+def test_sparse_table_absorbs_gap_fig4():
+    """Fig 4: one exported symbol before an 18 MB gap absorbs everything."""
+    b = synth_binary("pangu", n_functions=200, omit_fp_fraction=0.2,
+                     exported_fraction=0.0, seed=11,
+                     gap_after="pangu::fn_0099", gap_size=18 << 20)
+    # make exactly one function exported: the one before the gap
+    funcs = list(b.functions)
+    idx = next(i for i, f in enumerate(funcs) if f.name == "pangu::fn_0099")
+    import dataclasses as dc
+    funcs[idx] = dc.replace(funcs[idx], exported=True,
+                            name="pangu_memcpy_avx512")
+    b.functions = funcs
+
+    sparse = sparse_table(b)
+    full = full_table(b)
+    absorbed = correct = 0
+    for f in funcs[idx:]:
+        got = sparse.resolve(f.offset + 8)
+        if got == "pangu_memcpy_avx512":
+            absorbed += 1
+        if full.resolve(f.offset + 8) == f.name:
+            correct += 1
+    assert absorbed == len(funcs) - idx        # everything maps to one name
+    assert correct == len(funcs) - idx         # central gets all right
+
+
+def test_node_vs_central_symbolization():
+    b = synth_binary("lib", n_functions=100, omit_fp_fraction=0.0,
+                     exported_fraction=0.3, seed=12)
+    node = NodeSideResolver()
+    central = CentralResolver()
+    node.register_binary(b)
+    central.ensure_uploaded(b)
+    raw = RawStackSample(rank=0, timestamp=0.0, frames=tuple(
+        (b.build_id, f.offset + 4) for f in b.functions[:20]))
+    sn = node.symbolize(raw)
+    sc = central.symbolize(raw)
+    truth = tuple(f.name for f in reversed(b.functions[:20]))
+    node_acc = sum(a == t for a, t in zip(sn.frames, truth)) / 20
+    cent_acc = sum(a == t for a, t in zip(sc.frames, truth)) / 20
+    assert cent_acc == 1.0
+    assert node_acc < 0.7  # sparse table misattributes the rest
+
+
+def test_chunked_upload_and_dedup():
+    repo = SymbolRepository(chunk_size=128)
+    central = CentralResolver(repo)
+    b = synth_binary("big", n_functions=500, omit_fp_fraction=0.0, seed=13)
+    central.ensure_uploaded(b, chunk_size=128)
+    assert repo.has(b.build_id)
+    assert repo.upload_chunks > 1              # actually chunked
+    chunks_before = repo.upload_chunks
+    central.ensure_uploaded(b, chunk_size=128)  # second agent, same build
+    assert repo.upload_chunks == chunks_before  # dedup: no re-upload
+    assert repo.dedup_hits == 1
+    # resolution through the repo works
+    f = b.functions[123]
+    assert repo.get(b.build_id).resolve(f.offset + 4) == f.name

@@ -1,0 +1,183 @@
+"""Algorithm 1 (adaptive hybrid FP+DWARF unwinding) behaviors."""
+import random
+import threading
+
+import pytest
+
+from repro.core.unwind import (Binary, FunctionDef, HybridUnwinder, Marker,
+                               MarkerMap, SimProcess, SimThread, synth_binary)
+from repro.core.unwind.dwarf import DwarfUnwinder, preprocess_eh_frame
+from repro.core.unwind.fp import unwind_fp_only
+
+
+def _setup(omit=0.3, n=200, seed=0):
+    b = synth_binary("libx", n_functions=n, omit_fp_fraction=omit, seed=seed)
+    proc = SimProcess()
+    proc.mmap_binary(b)
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    return b, proc, uw
+
+
+def _chain(b, rng, depth):
+    return [(b, rng.choice(b.functions)) for _ in range(depth)]
+
+
+def test_hybrid_recovers_full_stack():
+    b, proc, uw = _setup()
+    rng = random.Random(0)
+    for i in range(100):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain(_chain(b, rng, rng.randrange(5, 25)))
+        names, truth = uw.unwind_symbolized_truthcheck(t)
+        assert names == truth, (names, truth)
+
+
+def test_fp_only_truncates_at_omitted_frame():
+    b, proc, uw = _setup(omit=1.0)  # every function omits FP
+    t = SimThread(proc, random.Random(1))
+    t.call_chain(_chain(b, random.Random(2), 15))
+    stack = unwind_fp_only(t)
+    assert len(stack) <= 2  # leaf only (garbage FP breaks immediately)
+
+
+def test_fp_only_works_on_go_like_binary():
+    b, proc, uw = _setup(omit=0.0)  # Go-style: FP always preserved
+    t = SimThread(proc, random.Random(1))
+    t.call_chain(_chain(b, random.Random(2), 15))
+    stack = unwind_fp_only(t)
+    assert len(stack) == 15
+
+
+def test_markers_converge_and_match_compile_flags():
+    b, proc, uw = _setup(omit=0.4, n=100)
+    rng = random.Random(3)
+    for i in range(300):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain(_chain(b, rng, 12))
+        uw.unwind(t)
+    # marker soundness: FP-marked => preserves FP; omits-FP => DWARF-marked.
+    # (A preserving function CAN be DWARF-marked from the chain-root edge
+    # case — Algorithm 1 marks dwarf on any validation failure — which is
+    # safe: DWARF still unwinds it correctly, just costs a bisect.)
+    checked = fp_marked = 0
+    for f in b.functions:
+        m = uw.markers.get(b.build_id, f.offset)
+        if m is Marker.UNMARKED:
+            continue
+        checked += 1
+        if f.omits_fp:
+            assert m is Marker.DWARF, f.name
+        if m is Marker.FP:
+            fp_marked += 1
+            assert not f.omits_fp, f.name
+    assert checked > 50 and fp_marked > 20
+
+
+def test_steady_state_cost_is_fp_dominated():
+    """§3.3 cost claim: after convergence, per-sample cost ~ pure FP when
+    most functions preserve FP."""
+    b, proc, uw = _setup(omit=0.2)
+    rng = random.Random(4)
+    for i in range(200):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain(_chain(b, rng, 20))
+        uw.unwind(t)
+    s = uw.stats
+    assert s.fp_fraction > 0.7
+    # validations only happen on first encounters (bounded by function count)
+    assert s.validations <= len(b.functions) + 50
+
+
+def test_validation_rejects_garbage_fp():
+    """A leaf that omits FP must fail ValidateCallerPC and go DWARF."""
+    b = Binary("single", "b1d" * 13 + "0", [
+        FunctionDef("root", 0x1000, 256, omits_fp=False),
+        FunctionDef("leaf_omits", 0x2000, 256, omits_fp=True),
+    ], 0x3000)
+    proc = SimProcess()
+    proc.mmap_binary(b)
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    t = SimThread(proc, random.Random(5))
+    t.call_chain([(b, b.functions[0]), (b, b.functions[1])])
+    names, truth = uw.unwind_symbolized_truthcheck(t)
+    assert names == truth == ("leaf_omits", "root")
+    assert uw.markers.get(b.build_id, 0x2000) is Marker.DWARF
+    assert uw.stats.validation_failures >= 1
+
+
+def test_fde_bisect_is_logarithmic():
+    b = synth_binary("liby", n_functions=1000, omit_fp_fraction=0.5, seed=7)
+    table = preprocess_eh_frame(b)
+    assert len(table) == 1000
+    n_lookups = 64
+    for f in b.functions[:n_lookups]:
+        fde = table.lookup(f.offset + 8)
+        assert fde is not None and fde.start == f.offset
+    assert table.bisect_iterations <= n_lookups * (1000).bit_length()
+
+
+def test_complex_fde_userspace_fallback():
+    b = Binary("cx", "c" * 40, [
+        FunctionDef("root", 0x1000, 256, omits_fp=False),
+        FunctionDef("weird", 0x2000, 256, omits_fp=True, complex_fde=True),
+        FunctionDef("leaf", 0x3000, 256, omits_fp=False),
+    ], 0x4000)
+    proc = SimProcess()
+    proc.mmap_binary(b)
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    t = SimThread(proc, random.Random(6))
+    t.call_chain([(b, b.functions[0]), (b, b.functions[1]),
+                  (b, b.functions[2])])
+    names, truth = uw.unwind_symbolized_truthcheck(t)
+    assert names == truth
+    assert uw.dwarf.complex_fallbacks >= 1
+
+
+def test_dlopen_binary_unknown_until_registered():
+    """dlopen'd library: frames unresolvable until the 5 s maps-poll
+    registers it; afterwards the same sample unwinds fully (§4)."""
+    b1 = synth_binary("base", n_functions=50, omit_fp_fraction=0.0, seed=8)
+    b2 = synth_binary("plugin", n_functions=50, omit_fp_fraction=1.0, seed=9)
+    proc = SimProcess()
+    proc.mmap_binary(b1)
+    proc.mmap_binary(b2)  # mapped but NOT registered with the unwinder
+    uw = HybridUnwinder()
+    uw.register_binary(b1)
+    t = SimThread(proc, random.Random(7))
+    t.call_chain([(b1, b1.functions[0]), (b2, b2.functions[0]),
+                  (b1, b1.functions[1])])
+    names, truth = uw.unwind_symbolized_truthcheck(t)
+    assert names != truth  # truncated inside the unregistered plugin
+    uw.register_binary(b2)  # maps poll found it
+    names2, truth2 = uw.unwind_symbolized_truthcheck(t)
+    assert names2 == truth2
+
+
+def test_jit_functions_marked_dwarf_conservatively():
+    b = Binary("jit", "d" * 40, [
+        FunctionDef("jitted", 0x1000, 256, omits_fp=False, is_jit=True),
+    ], 0x2000)
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    assert uw.markers.get(b.build_id, 0x1000) is Marker.DWARF
+
+
+def test_marker_cas_concurrent_convergence():
+    mm = MarkerMap()
+    results = []
+
+    def racer(val):
+        results.append(mm.compare_and_swap("bid", 0x10, Marker.UNMARKED, val))
+
+    ts = [threading.Thread(target=racer,
+                           args=(Marker.FP if i % 2 else Marker.DWARF,))
+          for i in range(16)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    final = mm.get("bid", 0x10)
+    assert all(r is final for r in results)  # all racers converged
