@@ -7,11 +7,18 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
   bench_straggler    — Fig 5  (slow-rank detection sweep)
   bench_aggregation  — §4    (10–50x volume reduction)
   bench_cases        — §5.4  (five end-to-end case studies) + Fig 2
+  bench_service      — streaming-vs-legacy service + 1k-rank sharded fleet
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
+
+Besides the CSV lines on stdout, every run writes ``BENCH_service.json``
+(name -> {us_per_call, derived}) so CI and future PRs can diff the perf
+trajectory machine-readably.
 """
 from __future__ import annotations
 
 import importlib
+import json
+import os
 import sys
 import time
 
@@ -22,12 +29,37 @@ MODULES = [
     "benchmarks.bench_symbols",
     "benchmarks.bench_aggregation",
     "benchmarks.bench_overhead",
+    "benchmarks.bench_service",
     "benchmarks.bench_roofline",
 ]
+
+JSON_PATH = os.environ.get("BENCH_JSON", "BENCH_service.json")
+
+
+def lines_to_json(lines) -> dict:
+    """Parse ``name,us_per_call,derived`` CSV lines (comments skipped)."""
+    out = {}
+    for line in lines:
+        line = str(line)
+        if line.startswith("#") or "," not in line:
+            continue
+        name, _, rest = line.partition(",")
+        us, _, derived = rest.partition(",")
+        try:
+            us_val = float(us)
+        except ValueError:
+            us_val = None
+        out[name.strip()] = {"us_per_call": us_val, "derived": derived}
+    return out
 
 
 def main() -> None:
     only = sys.argv[1:] or None
+    known = {m.split(".")[-1] for m in MODULES}
+    if only and not set(only) <= known:
+        print(f"unknown benchmark(s): {sorted(set(only) - known)}; "
+              f"choose from {sorted(known)}", file=sys.stderr)
+        sys.exit(2)
     lines: list = []
     failures = []
     for modname in MODULES:
@@ -45,6 +77,19 @@ def main() -> None:
         print(f"[bench] {short} done in {time.monotonic()-t0:.1f}s",
               file=sys.stderr)
     print("\n".join(str(l) for l in lines))
+    # merge into any existing file so subset runs (e.g. CI's bench-smoke)
+    # refresh their entries without clobbering the rest of the trajectory
+    merged = {}
+    if os.path.exists(JSON_PATH):
+        try:
+            with open(JSON_PATH) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(lines_to_json(lines))
+    with open(JSON_PATH, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {JSON_PATH}", file=sys.stderr)
     if failures:
         print(f"{len(failures)} benchmark(s) failed: {failures}",
               file=sys.stderr)

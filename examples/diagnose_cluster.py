@@ -55,7 +55,8 @@ def run_case(n: int) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--case", type=int, default=0, help="0 = all five")
+    ap.add_argument("--case", type=int, default=0,
+                    choices=[0, *sorted(CASES)], help="0 = all five")
     args = ap.parse_args()
     for n in ([args.case] if args.case else sorted(CASES)):
         run_case(n)

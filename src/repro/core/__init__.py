@@ -16,6 +16,7 @@ Modules map 1:1 to the paper's mechanisms:
   stitch        — Python↔native stack stitching (§4)
   samplers      — real in-process sampling profiler (overhead benchmark)
   agent         — node agent (collection, aggregation, upload)
-  service       — central analysis service
+  service       — central analysis service (streaming, bounded state)
+  sharded       — group-partitioned multi-shard ingestion front-end
   simcluster    — multi-rank simulation + fault injection (case studies §5.4)
 """

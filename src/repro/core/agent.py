@@ -15,7 +15,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.aggregate import StackAggregator
 from repro.core.collective.tracer import CollectiveTracer
-from repro.core.events import IterationProfile
+from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.samplers import SamplingProfiler
 from repro.core.symbols.resolver import CentralResolver
 
@@ -59,6 +59,7 @@ class NodeAgent:
         self._lock = threading.Lock()
         self.uploads = 0
         self.dropped = 0
+        self.upload_failures = 0
 
     # -- the SYSOM_SOCK_PATH handshake (§4) ----------------------------------
     def register_process(self, pid: int, rank: int, job_id: str,
@@ -89,17 +90,39 @@ class NodeAgent:
                 self._buffer = self._buffer[-limit:]
 
     def flush(self) -> int:
-        """Upload one batch to the central service (the 30 s cycle)."""
+        """Upload one batch to the central service (the 30 s cycle).
+
+        If the service is unreachable — absent, or raising mid-upload —
+        the not-yet-ingested remainder is re-buffered *in front of*
+        anything submitted meanwhile, so a later flush preserves original
+        submission order and nothing is lost.  Services exposing
+        ``ingest_batch`` (the sharded front-end) get the whole upload in
+        one call; plain services get per-profile ``ingest``.
+        """
         with self._lock:
             batch, self._buffer = self._buffer, []
         if self.service is None:
             with self._lock:
                 self._buffer = batch + self._buffer
             return 0
-        for p in batch:
-            self.service.ingest(p)
-        self.uploads += len(batch)
-        return len(batch)
+        sent = 0
+        try:
+            if hasattr(self.service, "ingest_batch"):
+                self.service.ingest_batch(
+                    ProfileBatch(self.cfg.job_id, batch))
+                sent = len(batch)
+            else:
+                for p in batch:
+                    self.service.ingest(p)
+                    sent += 1
+        except Exception:
+            self.upload_failures += 1
+            with self._lock:
+                self._buffer = batch[sent:] + self._buffer
+            self.uploads += sent
+            return sent
+        self.uploads += sent
+        return sent
 
     # -- real-profiling lifecycle ------------------------------------------------
     def start(self) -> None:

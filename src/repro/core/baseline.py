@@ -9,6 +9,7 @@ answers *which rank*; temporal answers *when* and *what code path*.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.diffdiag import classify_functions
@@ -27,23 +28,48 @@ class DegradationCandidate:
 
 class BaselineStore:
     """Historical per-group flame-graph baselines (the central log service's
-    role); keyed by (job, group)."""
+    role); keyed by (job, group).
 
-    def __init__(self):
-        self._store: Dict[Tuple[str, str], FlameGraph] = {}
+    Bounded: at most ``max_entries`` (job, group) baselines are retained,
+    LRU-evicted, so a long-lived central service ingesting thousands of
+    transient jobs cannot grow without bound.  Saved graphs are snapshotted
+    (copied) because the streaming service mutates its live graphs in place.
+    """
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._store: "OrderedDict[Tuple[str, str], FlameGraph]" = OrderedDict()
         self._iter_time: Dict[Tuple[str, str], float] = {}
+        self.evicted = 0
 
     def save(self, job: str, group: str, fg: FlameGraph,
              iter_time: Optional[float] = None) -> None:
-        self._store[(job, group)] = fg
+        key = (job, group)
+        self._store[key] = fg.copy()
+        self._store.move_to_end(key)
         if iter_time is not None:
-            self._iter_time[(job, group)] = iter_time
+            self._iter_time[key] = iter_time
+        while len(self._store) > self.max_entries:
+            old, _ = self._store.popitem(last=False)
+            self._iter_time.pop(old, None)
+            self.evicted += 1
 
     def get(self, job: str, group: str) -> Optional[FlameGraph]:
-        return self._store.get((job, group))
+        fg = self._store.get((job, group))
+        if fg is not None:
+            self._store.move_to_end((job, group))
+        return fg
 
     def iter_time(self, job: str, group: str) -> Optional[float]:
-        return self._iter_time.get((job, group))
+        t = self._iter_time.get((job, group))
+        if t is not None and (job, group) in self._store:
+            # the every-cycle read path must keep live entries warm, or an
+            # actively-monitored job's baseline gets evicted by churn
+            self._store.move_to_end((job, group))
+        return t
+
+    def __len__(self) -> int:
+        return len(self._store)
 
 
 def compare_to_baseline(current: FlameGraph, baseline: FlameGraph,

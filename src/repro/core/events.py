@@ -79,3 +79,16 @@ class IterationProfile:
     kernel_events: List[KernelEvent] = dataclasses.field(default_factory=list)
     collectives: List[CollectiveEvent] = dataclasses.field(default_factory=list)
     os_signals: Optional[OSSignals] = None
+
+
+@dataclasses.dataclass
+class ProfileBatch:
+    """One node agent's upload unit (the 30 s batch, §4): profiles for one
+    job, possibly spanning several communication groups.  The sharded
+    ingestion front-end routes each contained profile to its group's shard."""
+    job_id: str
+    profiles: List[IterationProfile] = dataclasses.field(default_factory=list)
+    node_id: str = "node-0"
+
+    def __len__(self) -> int:
+        return len(self.profiles)

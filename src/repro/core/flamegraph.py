@@ -4,6 +4,10 @@ A FlameGraph is a multiset of root..leaf stack tuples.  The differential
 views in §3.1 (cross-rank CPU diff, temporal baseline diff) are computed on
 per-function *inclusive* fractions — matching how the paper's Figures 6–8
 read ("x% of total CPU time in path p").
+
+Weights are numeric (int for raw sample counts, float once a graph has
+been exponentially decayed by the streaming service); every fraction view
+is weight-type agnostic.
 """
 from __future__ import annotations
 
@@ -16,12 +20,12 @@ from repro.core.events import StackSample
 
 @dataclasses.dataclass
 class FlameGraph:
-    counts: Dict[Tuple[str, ...], int] = dataclasses.field(
-        default_factory=lambda: defaultdict(int))
-    total: int = 0
+    counts: Dict[Tuple[str, ...], float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    total: float = 0
 
     # -- construction -------------------------------------------------------
-    def add(self, frames: Tuple[str, ...], weight: int = 1) -> None:
+    def add(self, frames: Tuple[str, ...], weight: float = 1) -> None:
         self.counts[tuple(frames)] += weight
         self.total += weight
 
@@ -40,6 +44,39 @@ class FlameGraph:
         for fg in (self, other):
             for st, c in fg.counts.items():
                 out.add(st, c)
+        return out
+
+    # -- streaming (in-place) ------------------------------------------------
+    def add_graph(self, other: "FlameGraph", scale: float = 1.0) -> None:
+        """In-place merge of ``other`` (optionally scaled) — the streaming
+        ingestion path; avoids allocating a new graph per update."""
+        for st, c in other.counts.items():
+            self.counts[st] += c * scale
+            self.total += c * scale
+
+    def decay(self, factor: float, prune_below: float = 1e-3) -> None:
+        """Exponentially age all weights in place.  Stacks whose decayed
+        weight falls under ``prune_below`` are dropped so state stays
+        bounded by the *live* stack set, not everything ever observed."""
+        if self.total == 0:
+            return
+        dead = []
+        total = 0.0
+        for st, c in self.counts.items():
+            c *= factor
+            if c < prune_below:
+                dead.append(st)
+            else:
+                self.counts[st] = c
+                total += c
+        for st in dead:
+            del self.counts[st]
+        self.total = total
+
+    def copy(self) -> "FlameGraph":
+        out = FlameGraph()
+        out.counts.update(self.counts)
+        out.total = self.total
         return out
 
     # -- views ---------------------------------------------------------------
@@ -64,7 +101,7 @@ class FlameGraph:
 
     def folded(self) -> List[str]:
         """Brendan-Gregg folded format lines (for external FG tooling)."""
-        return [";".join(st) + f" {c}" for st, c in sorted(self.counts.items())]
+        return [";".join(st) + f" {c:g}" for st, c in sorted(self.counts.items())]
 
     # -- diff -----------------------------------------------------------------
     def diff(self, other: "FlameGraph") -> Dict[str, float]:

@@ -9,18 +9,30 @@ Pipeline per ingested batch:
   4. every diagnosis becomes a DiagnosticEvent with a category matching the
      paper's Fig 2 taxonomy (gpu_hardware | os_interference | network |
      software) and a wall-clock diagnosis latency.
+
+Streaming architecture (the default, ``streaming=True``): all analysis
+state is *bounded and maintained incrementally at ingest time* — ring-
+buffered iteration-time windows and exponentially-decayed per-(group, rank)
+flame graphs — so one ``process()`` cycle costs O(groups + alerts), not
+O(total ingested samples).  That is what lets a single service instance sit
+under a fleet-scale ingest stream the way the paper's regional deployments
+do (§5: 80k+ GPUs, minutes-not-days).  ``streaming=False`` preserves the
+original batch shape (grow-forever history, per-cycle
+``FlameGraph.from_samples`` rebuilds) for the old-vs-new benchmark in
+``benchmarks/bench_service.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.baseline import BaselineStore, compare_to_baseline
 from repro.core.collective.instances import separate_instances
 from repro.core.diffdiag import Verdict, diagnose
-from repro.core.events import CollectiveEvent, IterationProfile
+from repro.core.events import (CollectiveEvent, IterationProfile,
+                               ProfileBatch)
 from repro.core.flamegraph import FlameGraph
 from repro.core.straggler import StragglerAlert, StragglerDetector
 from repro.core.symbols.repo import SymbolRepository
@@ -69,21 +81,49 @@ class CentralService:
     def __init__(self, window: int = 100, k: float = 2.0,
                  baseline_delta: float = 0.005,
                  iter_regression: float = 0.05,
-                 robust_detector: bool = False):
+                 robust_detector: bool = False,
+                 streaming: bool = True,
+                 fg_window: int = 16,
+                 group_ttl_s: Optional[float] = 3600.0):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
         self.detector = StragglerDetector(window=window, k=k,
                                           robust=robust_detector)
         self.waterlines: Dict[str, CPUWaterline] = defaultdict(
             lambda: CPUWaterline(window=window, k=k))
+        self.window = window
         self.baseline_delta = baseline_delta
         self.iter_regression = iter_regression
+        self.streaming = streaming
+        # effective flame-graph memory in iterations: decay gamma such
+        # that weight halves roughly every fg_window*ln2 iterations
+        self.fg_window = max(2, fg_window)
+        self._fg_decay = 1.0 - 1.0 / self.fg_window
         self.events: List[DiagnosticEvent] = []
+        self._counts: Dict[str, int] = defaultdict(int)
         # latest per (group, rank) profile for differential diagnosis
+        # (kernel timings + OS signals; bounded: one entry per live rank)
         self._latest: Dict[Tuple[str, int], IterationProfile] = {}
-        self._group_iter_time: Dict[str, List[float]] = defaultdict(list)
+        # streaming: decayed per-(group, rank) flame graphs, merged at
+        # ingest; legacy: rebuilt from raw samples every process() cycle
+        self._rank_fg: Dict[Tuple[str, int], FlameGraph] = {}
+        # iteration-time history: ring buffer (streaming) or grow-forever
+        # list (legacy — the pre-refactor behaviour kept for benchmarks)
+        if streaming:
+            self._group_iter_time: Dict[str, Deque[float]] = defaultdict(
+                lambda: deque(maxlen=window))
+        else:
+            self._group_iter_time = defaultdict(list)
         self._pending_collectives: List[CollectiveEvent] = []
         self._job_by_group: Dict[str, str] = {}
+        # group -> live rank set, so per-group lookups never scan the
+        # whole (group, rank) space at fleet scale
+        self._group_ranks: Dict[str, set] = defaultdict(set)
+        # groups idle longer than group_ttl_s are fully evicted at
+        # process() time — transient jobs can't accumulate state forever
+        self.group_ttl_s = group_ttl_s
+        self._last_ingest: Dict[str, float] = {}
+        self.groups_evicted = 0
         self.ingested = 0
 
     # -- ingestion -----------------------------------------------------------
@@ -92,10 +132,25 @@ class CentralService:
         g = profile.group_id
         self._job_by_group[g] = job_id
         self._latest[(g, profile.rank)] = profile
+        self._group_ranks[g].add(profile.rank)
+        self._last_ingest[g] = time.monotonic()
         self._group_iter_time[g].append(profile.iter_time)
         self._pending_collectives.extend(profile.collectives)
         fg = FlameGraph.from_samples(profile.cpu_samples)
         self.waterlines[g].observe(profile.rank, fg)
+        if self.streaming:
+            key = (g, profile.rank)
+            acc = self._rank_fg.get(key)
+            if acc is None:
+                acc = self._rank_fg[key] = FlameGraph()
+            acc.decay(self._fg_decay)
+            acc.add_graph(fg)
+
+    def ingest_batch(self, batch: ProfileBatch) -> int:
+        """One agent upload (§4's 30 s cycle) — profiles may span groups."""
+        for p in batch.profiles:
+            self.ingest(p, job_id=batch.job_id)
+        return len(batch.profiles)
 
     def ingest_log_line(self, job_id: str, line: str) -> Optional[DiagnosticEvent]:
         for pattern, cause in LOG_SOP_RULES:
@@ -105,13 +160,40 @@ class CentralService:
                     root_cause=cause, verdict=None, straggler_rank=None,
                     detected_at=time.monotonic(), diagnosis_latency_s=0.0,
                     evidence={"log": line[:200]})
-                self.events.append(ev)
+                self._record(ev)
                 return ev
         return None
+
+    def _record(self, ev: DiagnosticEvent) -> None:
+        self.events.append(ev)
+        self._counts[ev.category] += 1
+
+    # -- group lifecycle -----------------------------------------------------
+    def evict_group(self, g: str) -> None:
+        """Drop every piece of per-group state (job retired or idle past
+        TTL).  Historical baselines stay — BaselineStore is LRU-bounded."""
+        for r in self._group_ranks.pop(g, ()):
+            self._latest.pop((g, r), None)
+            self._rank_fg.pop((g, r), None)
+        self.waterlines.pop(g, None)
+        self._group_iter_time.pop(g, None)
+        self._job_by_group.pop(g, None)
+        self._last_ingest.pop(g, None)
+        self.detector.forget_group(g)
+        self.groups_evicted += 1
+
+    def _evict_idle_groups(self, now: float) -> None:
+        if self.group_ttl_s is None:
+            return
+        idle = [g for g, t in self._last_ingest.items()
+                if now - t > self.group_ttl_s]
+        for g in idle:
+            self.evict_group(g)
 
     # -- analysis cycle (the "processed within minutes" loop) ----------------
     def process(self) -> List[DiagnosticEvent]:
         t0 = time.monotonic()
+        self._evict_idle_groups(t0)
         new_events: List[DiagnosticEvent] = []
 
         # 1. instance separation + straggler detection
@@ -136,14 +218,23 @@ class CentralService:
             if ev:
                 new_events.append(ev)
 
-        self.events.extend(new_events)
+        for ev in new_events:
+            self._record(ev)
         return new_events
 
     # -- straggler path ---------------------------------------------------------
+    def _rank_flamegraph(self, g: str, rank: int) -> FlameGraph:
+        """Windowed CPU profile of one rank: the decayed incremental graph
+        (streaming) or a fresh rebuild from the latest raw samples (legacy)."""
+        if self.streaming:
+            fg = self._rank_fg.get((g, rank))
+            return fg if fg is not None else FlameGraph()
+        return FlameGraph.from_samples(self._latest[(g, rank)].cpu_samples)
+
     def _diagnose_straggler(self, alert: StragglerAlert,
                             t0: float) -> Optional[DiagnosticEvent]:
         g = alert.group_id
-        ranks = sorted(r for (gg, r) in self._latest if gg == g)
+        ranks = sorted(self._group_ranks.get(g, ()))
         if len(ranks) < 2 or alert.rank not in ranks:
             return None
         healthy_candidates = [r for r in ranks if r != alert.rank]
@@ -153,8 +244,8 @@ class CentralService:
 
         verdict = diagnose(
             sp.kernel_events, hp.kernel_events,
-            FlameGraph.from_samples(sp.cpu_samples),
-            FlameGraph.from_samples(hp.cpu_samples),
+            self._rank_flamegraph(g, alert.rank),
+            self._rank_flamegraph(g, healthy),
             sp.os_signals, hp.os_signals)
         if verdict.layer == "inconclusive" and alert.lateness > 1e-4:
             # timing says slow but no layer diverges -> network path (§7)
@@ -172,11 +263,12 @@ class CentralService:
             evidence={"alert": dataclasses.asdict(alert)})
 
     # -- temporal path -------------------------------------------------------------
-    def _check_temporal(self, g: str, times: List[float],
-                        t0: float) -> Optional[DiagnosticEvent]:
+    def _check_temporal(self, g: str, times, t0: float
+                        ) -> Optional[DiagnosticEvent]:
         job = self._job_by_group.get(g, "job-0")
         base_time = self.baselines.iter_time(job, g)
-        recent = sum(times[-3:]) / len(times[-3:])
+        n = min(3, len(times))
+        recent = sum(times[len(times) - i - 1] for i in range(n)) / n
         if base_time is None:
             # bootstrap the baseline from the first healthy window
             fg = self._group_flamegraph(g)
@@ -208,6 +300,16 @@ class CentralService:
             evidence={"iter_time": (base_time, recent)})
 
     def _group_flamegraph(self, g: str) -> Optional[FlameGraph]:
+        if self.streaming:
+            ranks = self._group_ranks.get(g)
+            if not ranks:
+                return None
+            out = FlameGraph()
+            for r in ranks:
+                fg = self._rank_fg.get((g, r))
+                if fg is not None:
+                    out.add_graph(fg)
+            return out if out.total else None
         fgs = [FlameGraph.from_samples(p.cpu_samples)
                for (gg, _r), p in self._latest.items() if gg == g]
         if not fgs:
@@ -219,7 +321,19 @@ class CentralService:
 
     # -- reporting -----------------------------------------------------------------
     def event_counts(self) -> Dict[str, int]:
-        counts: Dict[str, int] = defaultdict(int)
-        for e in self.events:
-            counts[e.category] += 1
-        return dict(counts)
+        return dict(self._counts)
+
+    def stats(self) -> Dict[str, float]:
+        """Bounded-state introspection for dashboards and benchmarks."""
+        live_stacks = sum(len(fg.counts) for fg in self._rank_fg.values())
+        return {
+            "ingested": self.ingested,
+            "groups": len(self._group_iter_time),
+            "ranks": len(self._latest),
+            "live_stacks": live_stacks,
+            "iter_time_entries": sum(len(t) for t in
+                                     self._group_iter_time.values()),
+            "events": len(self.events),
+            "baselines": len(self.baselines),
+            "groups_evicted": self.groups_evicted,
+        }

@@ -1,0 +1,134 @@
+"""Sharded ingestion front-end (§5 regional deployments).
+
+Hash-partitions communication groups across N independent
+``CentralService`` shards.  Every per-group analysis (straggler windows,
+waterlines, temporal baselines) only ever touches one group's state, so
+routing by group id preserves each group's diagnoses while letting
+ingestion scale out: shards share no mutable state and can be driven from
+independent threads or processes, mirroring how the paper deploys one
+service instance per region and merges at the reporting layer.
+
+One deliberate capacity difference: the per-cycle straggler-alert cap
+(8 per ``process()``) applies per shard, so an N-shard deployment can
+diagnose up to N*8 concurrent incidents per cycle where a single service
+defers the overflow to later cycles.  Sharding never diagnoses *fewer*
+or *different* incidents per group — under <= 8 concurrent alerts the
+outputs are identical (asserted on the §5.4 case studies in
+tests/test_system.py).
+
+The symbol repository is intentionally *shared* across shards — Build-ID
+keyed symbolization is global, content-addressed, append-only state (§3.4)
+and deduplicating uploads fleet-wide is the point.
+"""
+from __future__ import annotations
+
+import zlib
+from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+from repro.core.events import IterationProfile, ProfileBatch
+from repro.core.service import CentralService, DiagnosticEvent
+
+
+def shard_of(group_id: str, n_shards: int) -> int:
+    """Stable group -> shard routing (crc32, not the salted builtin hash,
+    so placement survives process restarts and is identical on every node)."""
+    return zlib.crc32(group_id.encode()) % n_shards
+
+
+class ShardedService:
+    """Drop-in ``CentralService`` facade over N group-partitioned shards."""
+
+    def __init__(self, n_shards: int = 4, parallel: bool = False, **kwargs):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.parallel = parallel
+        self.shards: List[CentralService] = [
+            CentralService(**kwargs) for _ in range(n_shards)]
+        # one global Build-ID-keyed symbol store (see module docstring)
+        self.symbol_repo = self.shards[0].symbol_repo
+        for s in self.shards[1:]:
+            s.symbol_repo = self.symbol_repo
+        self._log_rr = 0
+
+    # -- routing -------------------------------------------------------------
+    def shard_for(self, group_id: str) -> CentralService:
+        return self.shards[shard_of(group_id, self.n_shards)]
+
+    # -- ingestion -----------------------------------------------------------
+    def ingest(self, profile: IterationProfile, job_id: str = "job-0") -> None:
+        self.shard_for(profile.group_id).ingest(profile, job_id=job_id)
+
+    def ingest_batch(self, batch: ProfileBatch) -> int:
+        """Split one agent upload by owning shard.  With ``parallel=True``
+        the per-shard sub-batches are ingested concurrently (safe: shards
+        are independent)."""
+        by_shard: Dict[int, List[IterationProfile]] = defaultdict(list)
+        for p in batch.profiles:
+            by_shard[shard_of(p.group_id, self.n_shards)].append(p)
+        if self.parallel and len(by_shard) > 1:
+            with ThreadPoolExecutor(max_workers=len(by_shard)) as ex:
+                list(ex.map(
+                    lambda kv: self.shards[kv[0]].ingest_batch(
+                        ProfileBatch(batch.job_id, kv[1], batch.node_id)),
+                    by_shard.items()))
+        else:
+            for idx, profiles in by_shard.items():
+                self.shards[idx].ingest_batch(
+                    ProfileBatch(batch.job_id, profiles, batch.node_id))
+        return len(batch.profiles)
+
+    def ingest_log_line(self, job_id: str, line: str
+                        ) -> Optional[DiagnosticEvent]:
+        # log lines carry no group; route round-robin so no shard becomes
+        # the de-facto log shard under a chatty job
+        shard = self.shards[self._log_rr % self.n_shards]
+        self._log_rr += 1
+        return shard.ingest_log_line(job_id, line)
+
+    def evict_group(self, group_id: str) -> None:
+        self.shard_for(group_id).evict_group(group_id)
+
+    # -- analysis ------------------------------------------------------------
+    def process(self) -> List[DiagnosticEvent]:
+        """Run one analysis cycle on every shard; merged new events."""
+        if self.parallel and self.n_shards > 1:
+            with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
+                results = list(ex.map(lambda s: s.process(), self.shards))
+        else:
+            results = [s.process() for s in self.shards]
+        merged: List[DiagnosticEvent] = []
+        for evs in results:
+            merged.extend(evs)
+        merged.sort(key=lambda e: e.detected_at)
+        return merged
+
+    # -- merged reporting view ----------------------------------------------
+    @property
+    def ingested(self) -> int:
+        return sum(s.ingested for s in self.shards)
+
+    @property
+    def events(self) -> List[DiagnosticEvent]:
+        out: List[DiagnosticEvent] = []
+        for s in self.shards:
+            out.extend(s.events)
+        out.sort(key=lambda e: e.detected_at)
+        return out
+
+    def event_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = defaultdict(int)
+        for s in self.shards:
+            for cat, n in s.event_counts().items():
+                counts[cat] += n
+        return dict(counts)
+
+    def stats(self) -> Dict[str, float]:
+        agg: Dict[str, float] = defaultdict(float)
+        for s in self.shards:
+            for k, v in s.stats().items():
+                agg[k] += v
+        agg["shards"] = self.n_shards
+        return dict(agg)

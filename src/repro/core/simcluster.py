@@ -278,3 +278,65 @@ class SimCluster:
                 events.extend(service.process())
         events.extend(service.process())
         return events
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale simulation: many communication groups, 1000+ ranks
+# ---------------------------------------------------------------------------
+
+
+class MultiGroupSimCluster:
+    """Dozens of independent communication groups stepped in lockstep —
+    the fleet shape the sharded service ingests (1,000+ ranks).  Each group
+    is one ``SimCluster`` with its own comm hash, clock skews, RNG stream
+    and (possibly concurrent, heterogeneous) fault injections.
+    """
+
+    def __init__(self, n_groups: int = 32, ranks_per_group: int = 32,
+                 seed: int = 0, samples_per_iter: int = 400,
+                 iter_time: float = 0.1, base_hash: int = 0x51A0_0000_0000_0001):
+        self.groups: List[SimCluster] = [
+            SimCluster(n_ranks=ranks_per_group,
+                       group_hash=(base_hash + 0x9E3779B97F4A7C15 * i)
+                       & 0xFFFFFFFFFFFFFFFF,
+                       seed=seed * 1000 + i,
+                       samples_per_iter=samples_per_iter,
+                       iter_time=iter_time)
+            for i in range(n_groups)
+        ]
+        self.n_groups = n_groups
+        self.ranks_per_group = ranks_per_group
+
+    @property
+    def n_ranks(self) -> int:
+        return self.n_groups * self.ranks_per_group
+
+    @property
+    def iteration(self) -> int:
+        return self.groups[0].iteration if self.groups else 0
+
+    def group_ids(self) -> List[str]:
+        return [g.group_id for g in self.groups]
+
+    def add_fault(self, group_index: int, fault: Fault) -> None:
+        """Inject ``fault`` into one group (ranks are group-local)."""
+        self.groups[group_index].add_fault(fault)
+
+    def step(self) -> List[IterationProfile]:
+        """One synchronous fleet iteration: profiles from every group."""
+        profiles: List[IterationProfile] = []
+        for g in self.groups:
+            profiles.extend(g.step())
+        return profiles
+
+    def run(self, service, iterations: int, job_id: str = "job-0",
+            process_every: int = 10) -> List:
+        """Drive the fleet into a (sharded or plain) service."""
+        events = []
+        for _ in range(iterations):
+            for p in self.step():
+                service.ingest(p, job_id=job_id)
+            if self.iteration % process_every == 0:
+                events.extend(service.process())
+        events.extend(service.process())
+        return events

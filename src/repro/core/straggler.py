@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import defaultdict, deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.events import CollectiveEvent
 
@@ -30,28 +30,52 @@ class StragglerAlert:
 
 
 class ClockAligner:
-    """Estimate per-rank clock skew from barrier exit residuals."""
+    """Estimate per-rank clock skew from barrier exit residuals.
 
-    def __init__(self, window: int = 100):
-        self._resid: Dict[int, Deque[float]] = defaultdict(
+    Residuals are keyed by (group, rank): the same rank index exists in
+    every communication group of a fleet, and mixing exit residuals across
+    groups corrupts both estimates (it also made diagnosis depend on which
+    groups happened to share a service instance — sharded and unsharded
+    deployments must agree).
+
+    Streaming shape: clock skew is quasi-static, so the median residual is
+    recomputed only every ``refresh_every`` observations per rank instead of
+    re-sorting the window on every aligned entry — O(1) amortized per event.
+    """
+
+    def __init__(self, window: int = 100, refresh_every: int = 8):
+        self._resid: Dict[Tuple[str, int], Deque[float]] = defaultdict(
             lambda: deque(maxlen=window))
+        self._refresh = max(1, refresh_every)
+        self._cached: Dict[Tuple[str, int], float] = {}
+        self._since_refresh: Dict[Tuple[str, int], int] = defaultdict(int)
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
         if len(events) < 2:
             return
         mean_exit = sum(e.exit for e in events) / len(events)
         for e in events:
-            self._resid[e.rank].append(e.exit - mean_exit)
+            self._resid[(e.group_id, e.rank)].append(e.exit - mean_exit)
+            self._since_refresh[(e.group_id, e.rank)] += 1
 
-    def skew(self, rank: int) -> float:
-        r = self._resid.get(rank)
+    def skew(self, rank: int, group_id: str) -> float:
+        key = (group_id, rank)
+        r = self._resid.get(key)
         if not r:
             return 0.0
-        s = sorted(r)
-        return s[len(s) // 2]  # median residual
+        if key not in self._cached or self._since_refresh[key] >= self._refresh:
+            s = sorted(r)
+            self._cached[key] = s[len(s) // 2]  # median residual
+            self._since_refresh[key] = 0
+        return self._cached[key]
 
     def align_entry(self, e: CollectiveEvent) -> float:
-        return e.entry - self.skew(e.rank)
+        return e.entry - self.skew(e.rank, e.group_id)
+
+    def forget_group(self, group_id: str) -> None:
+        for d in (self._resid, self._cached, self._since_refresh):
+            for key in [k for k in d if k[0] == group_id]:
+                del d[key]
 
 
 class StragglerDetector:
@@ -74,6 +98,9 @@ class StragglerDetector:
         # lateness[group][rank] = deque of per-instance entry lateness
         self._late: Dict[str, Dict[int, Deque[float]]] = defaultdict(
             lambda: defaultdict(lambda: deque(maxlen=window)))
+        # running window sums so check() never re-walks the deques
+        self._late_sum: Dict[str, Dict[int, float]] = defaultdict(
+            lambda: defaultdict(float))
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
         """Feed one matched collective instance (all ranks of one group)."""
@@ -84,7 +111,17 @@ class StragglerDetector:
         aligned = {e.rank: self.aligner.align_entry(e) for e in events}
         mean_entry = sum(aligned.values()) / len(aligned)
         for rank, t in aligned.items():
-            self._late[group][rank].append(t - mean_entry)
+            d = self._late[group][rank]
+            if len(d) == d.maxlen:          # evict oldest from the sum
+                self._late_sum[group][rank] -= d[0]
+            d.append(t - mean_entry)
+            self._late_sum[group][rank] += t - mean_entry
+
+    def forget_group(self, group_id: str) -> None:
+        """Drop all windowed state for a retired communication group."""
+        self._late.pop(group_id, None)
+        self._late_sum.pop(group_id, None)
+        self.aligner.forget_group(group_id)
 
     def check(self, group_id: Optional[str] = None) -> List[StragglerAlert]:
         alerts: List[StragglerAlert] = []
@@ -96,8 +133,9 @@ class StragglerDetector:
             n_inst = min((len(d) for d in ranks.values()), default=0)
             if n_inst < self.min_instances:
                 continue
-            # windowed mean lateness per rank
-            mean_late = {r: sum(d) / len(d) for r, d in ranks.items()}
+            # windowed mean lateness per rank, from the running sums
+            sums = self._late_sum[g]
+            mean_late = {r: sums[r] / len(d) for r, d in ranks.items()}
             vals = sorted(mean_late.values())
             if self.robust:
                 mu = vals[len(vals) // 2]                       # median

@@ -37,24 +37,36 @@ class CPUWaterline:
         # practical-significance floor on (v - mu), mirroring the paper's
         # temporal delta=0.5%: statistical outliers below it are noise
         self.min_excess = min_excess
-        # history[rank] = deque of {function: fraction} dicts (one per iter)
+        # history[rank] = deque of {function: fraction} dicts (one per iter);
+        # _acc[rank] = running sum over that window so observe() is O(|fns|)
+        # and check() never re-walks the window
         self._history: Dict[int, Deque[Dict[str, float]]] = defaultdict(
             lambda: deque(maxlen=window))
+        self._acc: Dict[int, Dict[str, float]] = defaultdict(
+            lambda: defaultdict(float))
 
     def observe(self, rank: int, profile: FlameGraph) -> None:
-        self._history[rank].append(profile.function_fractions())
+        fractions = profile.function_fractions()
+        hist = self._history[rank]
+        acc = self._acc[rank]
+        if len(hist) == hist.maxlen:        # evict oldest from the sums
+            for fn, fr in hist[0].items():
+                left = acc[fn] - fr
+                if left < 1e-12:
+                    del acc[fn]
+                else:
+                    acc[fn] = left
+        hist.append(fractions)
+        for fn, fr in fractions.items():
+            acc[fn] += fr
 
     # ------------------------------------------------------------------
     def _per_rank_means(self) -> Dict[int, Dict[str, float]]:
         """Windowed mean fraction per function per rank."""
         out = {}
         for rank, hist in self._history.items():
-            acc: Dict[str, float] = defaultdict(float)
-            for frame in hist:
-                for fn, fr in frame.items():
-                    acc[fn] += fr
             n = max(len(hist), 1)
-            out[rank] = {fn: v / n for fn, v in acc.items()}
+            out[rank] = {fn: v / n for fn, v in self._acc[rank].items()}
         return out
 
     def check(self) -> List[WaterlineAlert]:

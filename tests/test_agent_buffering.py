@@ -1,0 +1,113 @@
+"""NodeAgent local buffering semantics (§7: tolerate a down/unreachable
+central service): drop-oldest beyond the buffer bound, re-buffer on failed
+flush, and order preservation across a reconnect."""
+from repro.core.agent import AgentConfig, NodeAgent
+from repro.core.events import IterationProfile, ProfileBatch
+
+
+def _profile(i: int, group: str = "g0") -> IterationProfile:
+    return IterationProfile(rank=0, iteration=i, group_id=group,
+                            iter_time=0.1)
+
+
+class _RecordingService:
+    """Per-profile ingest only (no ingest_batch) — the §4 duck-type."""
+
+    def __init__(self):
+        self.seen = []
+
+    def ingest(self, profile, job_id="job-0"):
+        self.seen.append(profile.iteration)
+
+
+class _BatchService(_RecordingService):
+    def __init__(self):
+        super().__init__()
+        self.batches = []
+
+    def ingest_batch(self, batch: ProfileBatch) -> int:
+        self.batches.append(batch)
+        for p in batch.profiles:
+            self.seen.append(p.iteration)
+        return len(batch.profiles)
+
+
+def test_drop_oldest_beyond_buffer_limit():
+    agent = NodeAgent(AgentConfig(buffer_limit_s=5.0))
+    for i in range(12):
+        agent.submit(_profile(i))
+    assert agent.dropped == 7
+    assert [p.iteration for p in agent._buffer] == [7, 8, 9, 10, 11]
+
+
+def test_flush_rebuffers_when_service_down():
+    agent = NodeAgent(AgentConfig())
+    for i in range(3):
+        agent.submit(_profile(i))
+    assert agent.flush() == 0
+    assert agent.uploads == 0
+    # nothing lost, order intact
+    assert [p.iteration for p in agent._buffer] == [0, 1, 2]
+    # a second failed flush still does not drop or reorder
+    assert agent.flush() == 0
+    assert [p.iteration for p in agent._buffer] == [0, 1, 2]
+
+
+def test_flush_after_reconnect_preserves_submission_order():
+    agent = NodeAgent(AgentConfig())
+    agent.submit(_profile(0))
+    agent.submit(_profile(1))
+    agent.flush()                       # service down: re-buffered
+    agent.submit(_profile(2))           # submitted while disconnected
+    svc = _RecordingService()
+    agent.service = svc                 # reconnect
+    assert agent.flush() == 3
+    assert svc.seen == [0, 1, 2]
+    assert agent.uploads == 3
+    assert agent._buffer == []
+
+
+def test_flush_uses_batch_upload_when_available():
+    svc = _BatchService()
+    agent = NodeAgent(AgentConfig(job_id="job-7"), service=svc)
+    for i in range(4):
+        agent.submit(_profile(i))
+    assert agent.flush() == 4
+    assert len(svc.batches) == 1
+    assert svc.batches[0].job_id == "job-7"
+    assert svc.seen == [0, 1, 2, 3]
+
+
+def test_flush_rebuffers_remainder_when_service_raises():
+    class _Flaky(_RecordingService):
+        def __init__(self, fail_after):
+            super().__init__()
+            self.fail_after = fail_after
+
+        def ingest(self, profile, job_id="job-0"):
+            if len(self.seen) >= self.fail_after:
+                raise ConnectionError("service went away")
+            super().ingest(profile, job_id)
+
+    svc = _Flaky(fail_after=2)
+    agent = NodeAgent(AgentConfig(), service=svc)
+    for i in range(5):
+        agent.submit(_profile(i))
+    assert agent.flush() == 2                   # 2 made it, then the drop
+    assert agent.upload_failures == 1
+    assert svc.seen == [0, 1]
+    assert [p.iteration for p in agent._buffer] == [2, 3, 4]
+    svc.fail_after = 100                        # service recovers
+    assert agent.flush() == 3
+    assert svc.seen == [0, 1, 2, 3, 4]          # order preserved, no loss
+
+
+def test_drop_then_flush_keeps_newest():
+    svc = _RecordingService()
+    agent = NodeAgent(AgentConfig(buffer_limit_s=3.0))
+    for i in range(6):
+        agent.submit(_profile(i))
+    agent.service = svc
+    assert agent.flush() == 3
+    assert svc.seen == [3, 4, 5]
+    assert agent.dropped == 3

@@ -3,7 +3,12 @@ import math
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.aggregate import StackAggregator
 from repro.core.collective.instances import separate_instances

@@ -1,6 +1,7 @@
 """End-to-end system behaviour: real training with the observability stack
-attached, checkpoint/restart, and the full agent->service->diagnosis loop
-on real (not simulated) collective timings."""
+attached, checkpoint/restart, the full agent->service->diagnosis loop
+on real (not simulated) collective timings, and sharded-vs-unsharded
+service equivalence on the paper's five §5.4 case studies."""
 import dataclasses
 import tempfile
 
@@ -8,7 +9,9 @@ import jax
 import pytest
 
 from repro import configs
+from repro.core import simcluster as sc
 from repro.core.service import CentralService
+from repro.core.sharded import ShardedService
 from repro.data import DataPipeline, SyntheticCorpus
 from repro.models import build_model
 from repro.train.loop import LoopConfig, train_loop
@@ -72,3 +75,58 @@ def test_real_profiler_collects_from_training(tiny_model):
     assert stacks, "sampler collected nothing"
     assert agent.sampler.kept > 0
     assert agent.aggregator.stats.reduction >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# sharded front-end equivalence: hash-partitioning groups across shards must
+# not change any diagnosis — same five §5.4 case studies, same verdicts
+# ---------------------------------------------------------------------------
+
+CASE_FAULTS = {
+    "gpu_thermal_throttle": (lambda: sc.thermal_throttle(0, start=30), False),
+    "nic_softirq": (lambda: sc.nic_softirq(4, start=30), False),
+    "vfs_dentry_lock": (lambda: sc.vfs_lock_contention([2, 3], start=30), True),
+    "logging_overhead": (lambda: sc.logging_overhead(start=30), False),
+    "storage_io": (lambda: sc.io_bottleneck(start=30), False),
+}
+
+
+def _drive(service, fault_factory, seed=7):
+    cl = sc.SimCluster(n_ranks=8, seed=seed)
+    cl.run(service, 30)
+    cl.add_fault(fault_factory())
+    cl.run(service, 60)
+    return [(e.group_id, e.root_cause, e.category, e.straggler_rank)
+            for e in service.events]
+
+
+@pytest.mark.parametrize("case", sorted(CASE_FAULTS))
+def test_sharded_matches_unsharded_on_case_studies(case):
+    fault_factory, robust = CASE_FAULTS[case]
+    plain = _drive(CentralService(window=50, robust_detector=robust),
+                   fault_factory)
+    sharded = _drive(ShardedService(n_shards=4, window=50,
+                                    robust_detector=robust),
+                     fault_factory)
+    assert plain, f"case {case} produced no diagnosis"
+    assert sharded == plain
+
+
+def test_sharded_matches_unsharded_multi_group():
+    """Concurrent faults in different groups, groups spread over shards:
+    the merged sharded view reports exactly the unsharded diagnoses."""
+    def drive(svc):
+        fleet = sc.MultiGroupSimCluster(n_groups=6, ranks_per_group=8,
+                                        seed=11, samples_per_iter=100)
+        fleet.run(svc, 30)
+        fleet.add_fault(0, sc.nic_softirq(2, start=30))
+        fleet.add_fault(3, sc.thermal_throttle(5, start=30))
+        fleet.run(svc, 60)
+        return sorted((e.group_id, e.root_cause, e.straggler_rank)
+                      for e in svc.events)
+
+    plain = drive(CentralService(window=50))
+    sharded = drive(ShardedService(n_shards=4, window=50))
+    assert plain and sharded == plain
+    causes = {c for _, c, _ in plain}
+    assert {"nic_softirq_contention", "gpu_uniform_slowdown"} <= causes
