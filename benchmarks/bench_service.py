@@ -134,6 +134,21 @@ def run(out_lines: List[str]) -> Dict[str, float]:
     assert svc_new.stats()["iter_time_entries"] <= svc_new.window, \
         "streaming iteration-time history must be ring-buffered"
 
+    # encoded columnar batches vs. per-dataclass ingest on one identical
+    # fleet workload (same harness as bench_trace; see that module)
+    from benchmarks.bench_trace import INGEST_SPEEDUP_FLOOR, \
+        compare_fleet_ingest
+    cmp_ = compare_fleet_ingest(iters=3)
+    out_lines.append(f"service_ingest_encoded_columnar,"
+                     f"{1e6/cmp_['col_rate']:.1f},"
+                     f"{cmp_['col_rate']:.0f}_profiles_per_s")
+    out_lines.append(f"service_ingest_columnar_speedup,0,"
+                     f"{cmp_['speedup']:.2f}x_vs_dataclass")
+    res["ingest_columnar_speedup"] = cmp_["speedup"]
+    assert cmp_["speedup"] >= INGEST_SPEEDUP_FLOOR, (
+        f"encoded columnar fleet ingest fell under "
+        f"{INGEST_SPEEDUP_FLOOR}x: {cmp_}")
+
     fleet = _fleet()
     out_lines.append(f"service_fleet_ranks,0,{fleet['ranks']:.0f}")
     out_lines.append(f"service_fleet_ingest,{1e6/fleet['ingest_rate']:.1f},"

@@ -1,0 +1,219 @@
+"""Columnar trace pipeline benchmark (the PR 2 tentpole).
+
+Three measurements back the columnar refactor's claims at the 1,024-rank
+fleet scale (32 groups x 32 ranks, realistic stack diversity):
+
+  1. wire codec throughput: encode and decode profiles/s + MB/s for the
+     versioned columnar format (one agent batch per fleet iteration);
+  2. ingest throughput: wire-encoded columnar batches into an 8-shard
+     ``ShardedService`` vs. per-dataclass ``ingest`` of the same data.
+     Acceptance: >= 3x for the encoded columnar path;
+  3. vectorized ``gpu_diff`` per-kernel aggregation: interned-id bincount
+     over kernel columns vs. the per-event dict walk, same verdict.
+
+Timings are best-of-``REPEATS`` against a fresh service per repeat, with
+the two compared paths' repeats *interleaved* in time — a noisy-neighbor
+burst hits both paths' repeat sets, so their minima come from the same
+calm windows and the ratio cannot be faked (or hidden) by one-sided
+contention.  Emits ``name,us_per_call,derived`` CSV lines like every
+other module.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import simcluster as sc
+from repro.core.diffdiag import gpu_diff, per_kernel_means
+from repro.core.events import KernelEvent
+from repro.core.sharded import ShardedService
+from repro.core.trace import (ColumnarBatch, decode_batch, encode_batch,
+                              profile_to_columnar, to_dataclasses)
+
+N_GROUPS = 32
+RANKS_PER_GROUP = 32
+ITERS = 3
+SAMPLES_PER_ITER = 600
+STACK_VARIANTS = 8       # ~64 unique stacks/profile: production-ish windows
+REPEATS = 5
+INGEST_SPEEDUP_FLOOR = 3.0
+
+
+def _fleet_steps(columnar: bool, iters: int = ITERS):
+    fleet = sc.MultiGroupSimCluster(
+        n_groups=N_GROUPS, ranks_per_group=RANKS_PER_GROUP, seed=3,
+        samples_per_iter=SAMPLES_PER_ITER, columnar=columnar,
+        stack_variants=STACK_VARIANTS)
+    return fleet, [fleet.step() for _ in range(iters)]
+
+
+def _best_of(repeats: int, fn) -> float:
+    return min(fn() for _ in range(repeats))
+
+
+_INGEST_CACHE: Dict[tuple, Dict[str, float]] = {}
+
+
+def compare_fleet_ingest(iters: int = ITERS, repeats: int = REPEATS
+                         ) -> Dict[str, float]:
+    """Shared with bench_service: dataclass vs. encoded-columnar ingest of
+    one identical fleet workload; returns rates, sizes and the speedup.
+    Memoized per parameter set — one ``benchmarks.run`` invocation that
+    executes both modules measures this (slow) comparison only once."""
+    cached = _INGEST_CACHE.get((iters, repeats))
+    if cached is not None:
+        return cached
+    fleet, steps = _fleet_steps(False, iters)
+    n = sum(len(s) for s in steps)
+
+    def run_obj() -> float:
+        svc = ShardedService(n_shards=8, window=50)
+        t0 = time.perf_counter()
+        for profiles in steps:
+            for p in profiles:
+                svc.ingest(p)
+        return time.perf_counter() - t0
+
+    fleetc, stepsc = _fleet_steps(True, iters)
+    payloads = [encode_batch(ColumnarBatch("job-0", profiles, "node-0",
+                                           fleetc.tables))
+                for profiles in stepsc]
+
+    def run_col() -> float:
+        svc = ShardedService(n_shards=8, window=50)
+        t0 = time.perf_counter()
+        for data in payloads:
+            svc.ingest_encoded(data)
+        return time.perf_counter() - t0
+
+    # interleave so a contention burst cannot hit only one path's repeats
+    obj_times, col_times = [], []
+    for _ in range(repeats):
+        obj_times.append(run_obj())
+        col_times.append(run_col())
+    dt_obj, dt_col = min(obj_times), min(col_times)
+    result = {
+        "ranks": fleet.n_ranks,
+        "profiles": n,
+        "rows_per_profile": len(steps[0][0].cpu_samples),
+        "bytes_per_profile": sum(len(p) for p in payloads) / n,
+        "obj_rate": n / dt_obj,
+        "col_rate": n / dt_col,
+        "speedup": dt_obj / dt_col,
+    }
+    _INGEST_CACHE[(iters, repeats)] = result
+    return result
+
+
+def _codec_throughput(out_lines: List[str], res: Dict[str, float]) -> None:
+    fleetc, stepsc = _fleet_steps(True)
+    n = sum(len(s) for s in stepsc)
+    batches = [ColumnarBatch("job-0", profiles, "node-0", fleetc.tables)
+               for profiles in stepsc]
+
+    def run_enc() -> float:
+        t0 = time.perf_counter()
+        for b in batches:
+            encode_batch(b)
+        return time.perf_counter() - t0
+
+    payloads = [encode_batch(b) for b in batches]
+    nbytes = sum(len(p) for p in payloads)
+
+    def run_dec() -> float:
+        t0 = time.perf_counter()
+        for data in payloads:
+            decode_batch(data)
+        return time.perf_counter() - t0
+
+    dt_enc = _best_of(REPEATS, run_enc)
+    dt_dec = _best_of(REPEATS, run_dec)
+    out_lines.append(f"trace_encode,{dt_enc/n*1e6:.2f},"
+                     f"{nbytes/dt_enc/1e6:.0f}_MB_per_s")
+    out_lines.append(f"trace_decode,{dt_dec/n*1e6:.2f},"
+                     f"{nbytes/dt_dec/1e6:.0f}_MB_per_s")
+    out_lines.append(f"trace_wire_bytes_per_profile,0,{nbytes/n:.0f}")
+    res["encode_us_per_profile"] = dt_enc / n * 1e6
+    res["decode_us_per_profile"] = dt_dec / n * 1e6
+    # correctness spot check rides along: the wire format is lossless
+    rt = decode_batch(payloads[0])
+    ref_fleet, ref_steps = _fleet_steps(False, 1)
+    assert (to_dataclasses(rt).profiles == ref_steps[0]), \
+        "wire round-trip diverged from the dataclass representation"
+
+
+def _gpu_diff_vectorized(out_lines: List[str], res: Dict[str, float]) -> None:
+    def kernels(rank: int, factor: float) -> List[KernelEvent]:
+        return [KernelEvent(rank=rank, name=f"kern_{i % 64}", start=0.0,
+                            duration=(1 + i % 7) * 1e-3 * factor)
+                for i in range(3200)]
+
+    from repro.core.events import IterationProfile
+    slow_evs, fast_evs = kernels(0, 1.18), kernels(7, 1.0)
+    slow_col = profile_to_columnar(IterationProfile(
+        rank=0, iteration=0, group_id="g", iter_time=0.1,
+        kernel_events=slow_evs))
+    fast_col = profile_to_columnar(IterationProfile(
+        rank=7, iteration=0, group_id="g", iter_time=0.1,
+        kernel_events=fast_evs), slow_col.tables)
+
+    a, b = per_kernel_means(slow_evs), per_kernel_means(slow_col)
+    assert set(a) == set(b) and all(abs(a[k] - b[k]) < 1e-12 * (1 + abs(a[k]))
+                                    for k in a), \
+        "columnar per-kernel means diverge from the per-event walk"
+    va = gpu_diff(slow_evs, fast_evs)
+    vb = gpu_diff(slow_col, fast_col)
+    assert va and vb and va.root_cause == vb.root_cause, (va, vb)
+
+    def run_obj() -> float:
+        t0 = time.perf_counter()
+        for _ in range(20):
+            gpu_diff(slow_evs, fast_evs)
+        return time.perf_counter() - t0
+
+    def run_col() -> float:
+        t0 = time.perf_counter()
+        for _ in range(20):
+            gpu_diff(slow_col, fast_col)
+        return time.perf_counter() - t0
+
+    dt_obj = _best_of(REPEATS, run_obj) / 20
+    dt_col = _best_of(REPEATS, run_col) / 20
+    out_lines.append(f"trace_gpu_diff_objects,{dt_obj*1e6:.0f},"
+                     f"{len(slow_evs)}_events")
+    out_lines.append(f"trace_gpu_diff_columnar,{dt_col*1e6:.0f},"
+                     f"{dt_obj/dt_col:.1f}x_speedup")
+    res["gpu_diff_speedup"] = dt_obj / dt_col
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    out_lines.append("# columnar trace pipeline: codec + ingest + gpu_diff")
+    res: Dict[str, float] = {}
+
+    _codec_throughput(out_lines, res)
+
+    cmp_ = compare_fleet_ingest()
+    out_lines.append(f"trace_fleet_ranks,0,{cmp_['ranks']:.0f}")
+    out_lines.append(f"trace_ingest_dataclass,{1e6/cmp_['obj_rate']:.1f},"
+                     f"{cmp_['obj_rate']:.0f}_profiles_per_s")
+    out_lines.append(f"trace_ingest_encoded,{1e6/cmp_['col_rate']:.1f},"
+                     f"{cmp_['col_rate']:.0f}_profiles_per_s")
+    out_lines.append(f"trace_ingest_speedup,0,{cmp_['speedup']:.2f}x")
+    res.update({f"ingest_{k}": v for k, v in cmp_.items()})
+
+    _gpu_diff_vectorized(out_lines, res)
+
+    assert cmp_["ranks"] >= 1000, "fleet benchmark must cover 1000+ ranks"
+    assert cmp_["speedup"] >= INGEST_SPEEDUP_FLOOR, (
+        f"encoded columnar ingest must be >= {INGEST_SPEEDUP_FLOOR}x the "
+        f"per-dataclass path at fleet scale, got {cmp_['speedup']:.2f}x "
+        f"({cmp_})")
+    assert res["gpu_diff_speedup"] > 1.0, (
+        "interned-id bincount gpu_diff must beat the per-event dict walk")
+    return res
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

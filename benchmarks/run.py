@@ -8,6 +8,7 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
   bench_aggregation  — §4    (10–50x volume reduction)
   bench_cases        — §5.4  (five end-to-end case studies) + Fig 2
   bench_service      — streaming-vs-legacy service + 1k-rank sharded fleet
+  bench_trace        — columnar wire codec + encoded-vs-dataclass ingest
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
 
 Besides the CSV lines on stdout, every run writes ``BENCH_service.json``
@@ -30,6 +31,7 @@ MODULES = [
     "benchmarks.bench_aggregation",
     "benchmarks.bench_overhead",
     "benchmarks.bench_service",
+    "benchmarks.bench_trace",
     "benchmarks.bench_roofline",
 ]
 
@@ -87,13 +89,25 @@ def main() -> None:
         except (OSError, ValueError):
             merged = {}
     merged.update(lines_to_json(lines))
-    with open(JSON_PATH, "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-    print(f"[bench] wrote {JSON_PATH}", file=sys.stderr)
-    if failures:
-        print(f"{len(failures)} benchmark(s) failed: {failures}",
-              file=sys.stderr)
-        sys.exit(1)
+    # the failure count is part of the trajectory file itself, so a
+    # partial JSON from a red run can never be mistaken for a green one
+    # by anything consuming the uploaded artifact
+    merged["bench_run_failures"] = {
+        "us_per_call": None,
+        "derived": ";".join(f"{m}:{e}" for m, e in failures) or "none",
+        "count": len(failures),
+    }
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"[bench] wrote {JSON_PATH}", file=sys.stderr)
+    finally:
+        # a failing bench module must fail the run (and CI) even if the
+        # JSON write itself also blew up
+        if failures:
+            print(f"{len(failures)} benchmark(s) failed: {failures}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,9 @@
 Modules map 1:1 to the paper's mechanisms:
 
   events        — cross-layer event schema (CPU stacks, kernel timings,
-                  collective events, OS signals)
+                  collective events, OS signals) — the boundary types
+  trace         — columnar hot-path twin of events: interned structure-of-
+                  arrays columns + the versioned binary wire codec
   flamegraph    — folded-stack profiles, merge/diff
   waterline     — per-communication-group CPU waterline (§3.1)
   straggler     — slow-rank detection w/ barrier-semantics clock alignment (§3.1)

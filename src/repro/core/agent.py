@@ -18,12 +18,16 @@ from repro.core.collective.tracer import CollectiveTracer
 from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.samplers import SamplingProfiler
 from repro.core.symbols.resolver import CentralResolver
+from repro.core.trace import (ColumnarBatch, ColumnarProfile, RemapCache,
+                              TraceTables, encode_batch, profile_to_columnar,
+                              remap_profile)
 
 
 @dataclasses.dataclass
 class AgentConfig:
     rank: int = 0
     job_id: str = "job-0"
+    node_id: str = "node-0"
     hz: float = 99.0
     sampling_rate: float = 0.10
     drain_interval_s: float = 5.0
@@ -57,9 +61,15 @@ class NodeAgent:
         self._procs: Dict[int, RegisteredProcess] = {}
         self._buffer: List[IterationProfile] = []
         self._lock = threading.Lock()
+        # agent-lifetime interning tables: repeated stacks/kernel names
+        # across the job's 30 s upload cycles intern once, ever
+        self._tables = TraceTables()
+        self._remaps = RemapCache(self._tables)
         self.uploads = 0
         self.dropped = 0
         self.upload_failures = 0
+        self.encoded_uploads = 0
+        self.bytes_uploaded = 0
 
     # -- the SYSOM_SOCK_PATH handshake (§4) ----------------------------------
     def register_process(self, pid: int, rank: int, job_id: str,
@@ -89,6 +99,21 @@ class NodeAgent:
                 self.dropped += len(self._buffer) - limit
                 self._buffer = self._buffer[-limit:]
 
+    def _columnar_batch(self, profiles) -> ColumnarBatch:
+        """Build the upload as columns over the agent's lifetime tables;
+        foreign-table columnar profiles (e.g. simulator feeds) are
+        re-mapped, dataclass profiles are interned."""
+        cols = []
+        for p in profiles:
+            if isinstance(p, ColumnarProfile):
+                if p.tables is not self._tables:
+                    p = remap_profile(p, self._remaps.get(p.tables))
+            else:
+                p = profile_to_columnar(p, self._tables)
+            cols.append(p)
+        return ColumnarBatch(self.cfg.job_id, cols, self.cfg.node_id,
+                             self._tables)
+
     def flush(self) -> int:
         """Upload one batch to the central service (the 30 s cycle).
 
@@ -96,8 +121,10 @@ class NodeAgent:
         the not-yet-ingested remainder is re-buffered *in front of*
         anything submitted meanwhile, so a later flush preserves original
         submission order and nothing is lost.  Services exposing
-        ``ingest_batch`` (the sharded front-end) get the whole upload in
-        one call; plain services get per-profile ``ingest``.
+        ``ingest_encoded`` get the batch as wire-encoded columnar bytes;
+        services exposing only ``ingest_batch`` (legacy sharded
+        front-ends) get the dataclass batch in one call; plain services
+        get per-profile ``ingest``.
         """
         with self._lock:
             batch, self._buffer = self._buffer, []
@@ -107,7 +134,13 @@ class NodeAgent:
             return 0
         sent = 0
         try:
-            if hasattr(self.service, "ingest_batch"):
+            if hasattr(self.service, "ingest_encoded"):
+                data = encode_batch(self._columnar_batch(batch))
+                self.service.ingest_encoded(data)
+                sent = len(batch)
+                self.encoded_uploads += 1
+                self.bytes_uploaded += len(data)
+            elif hasattr(self.service, "ingest_batch"):
                 self.service.ingest_batch(
                     ProfileBatch(self.cfg.job_id, batch))
                 sent = len(batch)

@@ -21,6 +21,8 @@ import dataclasses
 import statistics
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.events import KernelEvent, OSSignals
 from repro.core.flamegraph import FlameGraph
 
@@ -66,16 +68,32 @@ def classify_functions(functions: Sequence[str]) -> Optional[Tuple[str, str]]:
 # ---------------------------------------------------------------------------
 
 
+def per_kernel_means(evs) -> Dict[str, float]:
+    """Mean duration per kernel name.  Accepts a sequence of
+    ``KernelEvent`` or anything with interned kernel columns
+    (``kern_name`` id array + ``kern_dur`` + ``tables`` — see
+    ``repro.core.trace.ColumnarProfile``); the columnar path aggregates
+    with one bincount over the interned-id space instead of a per-event
+    dict walk."""
+    names = getattr(evs, "kern_name", None)
+    if names is not None:
+        if names.shape[0] == 0:
+            return {}
+        sums = np.bincount(names, weights=evs.kern_dur)
+        counts = np.bincount(names)
+        get = evs.tables.strings.get
+        nz = np.nonzero(counts)[0]
+        return {get(int(i)): float(sums[i] / counts[i]) for i in nz}
+    acc: Dict[str, List[float]] = {}
+    for e in evs:
+        acc.setdefault(e.name, []).append(e.duration)
+    return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
 def gpu_diff(straggler: Sequence[KernelEvent], healthy: Sequence[KernelEvent],
              uniform_cv: float = 0.05, slow_ratio: float = 1.02
              ) -> Optional[Verdict]:
-    def per_kernel(evs):
-        acc: Dict[str, List[float]] = {}
-        for e in evs:
-            acc.setdefault(e.name, []).append(e.duration)
-        return {k: sum(v) / len(v) for k, v in acc.items()}
-
-    a, b = per_kernel(straggler), per_kernel(healthy)
+    a, b = per_kernel_means(straggler), per_kernel_means(healthy)
     common = sorted(set(a) & set(b))
     if not common:
         return None
@@ -128,27 +146,44 @@ def cpu_diff(straggler: FlameGraph, healthy: FlameGraph,
 
 
 def os_diff(straggler: OSSignals, healthy: OSSignals,
-            irq_ratio: float = 2.0, sched_ratio: float = 2.0
-            ) -> Optional[Verdict]:
+            irq_ratio: float = 2.0, sched_ratio: float = 2.0,
+            numa_ratio: float = 4.0) -> Optional[Verdict]:
+    """Compare OS counters; every divergent subsystem becomes a cause.
+
+    Co-occurring signals (an IRQ storm usually drags scheduler latency up
+    with it) are ALL reported, ranked by severity — the measured ratio
+    normalized by that signal's own detection threshold, so severities are
+    comparable across subsystems.  ``root_cause`` is the top-ranked cause;
+    ``evidence["causes"]`` carries the full ranking."""
     evidence: Dict[str, object] = {}
-    causes = []
+    scored: List[Tuple[float, str]] = []
+    worst_irq = 0.0
     for irq, cnt in straggler.interrupts.items():
         base = healthy.interrupts.get(irq, 0)
         if cnt > max(base, 1) * irq_ratio and cnt - base > 1000:
-            causes.append("irq_imbalance")
+            worst_irq = max(worst_irq, cnt / max(base, 1))
             evidence[f"irq:{irq}"] = (cnt, base)
-    if (straggler.sched_latency_p99
-            > max(healthy.sched_latency_p99, 1e-6) * sched_ratio):
-        causes.append("scheduler_contention")
+    if worst_irq:
+        scored.append((worst_irq / irq_ratio, "irq_imbalance"))
+    sched = straggler.sched_latency_p99
+    sched_base = max(healthy.sched_latency_p99, 1e-6)
+    if sched > sched_base * sched_ratio:
+        scored.append((sched / sched_base / sched_ratio,
+                       "scheduler_contention"))
         evidence["sched_latency_p99"] = (straggler.sched_latency_p99,
                                          healthy.sched_latency_p99)
-    if straggler.numa_migrations > max(healthy.numa_migrations, 1) * 4:
-        causes.append("numa_migration_storm")
+    numa_base = max(healthy.numa_migrations, 1)
+    if straggler.numa_migrations > numa_base * numa_ratio:
+        scored.append((straggler.numa_migrations / numa_base / numa_ratio,
+                       "numa_migration_storm"))
         evidence["numa_migrations"] = (straggler.numa_migrations,
                                        healthy.numa_migrations)
-    if not causes:
+    if not scored:
         return None
-    return Verdict(layer="os", root_cause=causes[0], confidence=0.7,
+    scored.sort(key=lambda sc: -sc[0])       # stable: ties keep walk order
+    evidence["causes"] = [
+        {"cause": cause, "severity": round(sev, 3)} for sev, cause in scored]
+    return Verdict(layer="os", root_cause=scored[0][1], confidence=0.7,
                    evidence=evidence,
                    action="inspect /proc/interrupts binding and cgroup shares")
 

@@ -3,6 +3,12 @@
 Every collector (real sampler, eBPF-analog sim, collective tracer) emits
 these types; the diagnosis pipeline consumes ONLY this schema — that is
 what makes the system framework-agnostic (§3.2).
+
+These dataclasses are the *boundary* representation.  The hot path
+between agent and diagnosis runs on their columnar twin
+(``repro.core.trace``): interned structure-of-arrays columns with a
+versioned binary wire codec; ``to_columnar``/``to_dataclasses`` round-trip
+this schema losslessly.
 """
 from __future__ import annotations
 

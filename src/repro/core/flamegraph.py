@@ -39,6 +39,20 @@ class FlameGraph:
         fg.add_samples(samples)
         return fg
 
+    def add_rows(self, rows: Iterable[Tuple[int, float]], resolve) -> None:
+        """Add pre-aggregated (interned stack id, weight) rows; ``resolve``
+        maps a stack id to its cached root..leaf frame tuple (see
+        ``repro.core.trace.TraceTables.stack_tuple``).  O(unique stacks)
+        instead of O(samples) — the columnar construction path."""
+        for sid, w in rows:
+            self.add(resolve(sid), w)
+
+    @staticmethod
+    def from_rows(rows: Iterable[Tuple[int, float]], resolve) -> "FlameGraph":
+        fg = FlameGraph()
+        fg.add_rows(rows, resolve)
+        return fg
+
     def merge(self, other: "FlameGraph") -> "FlameGraph":
         out = FlameGraph()
         for fg in (self, other):

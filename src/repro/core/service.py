@@ -36,6 +36,8 @@ from repro.core.events import (CollectiveEvent, IterationProfile,
 from repro.core.flamegraph import FlameGraph
 from repro.core.straggler import StragglerAlert, StragglerDetector
 from repro.core.symbols.repo import SymbolRepository
+from repro.core.trace import (ColumnFlameGraph, ColumnarProfile, RemapCache,
+                              TraceTables, decode_batch, remap_profile)
 from repro.core.waterline import CPUWaterline
 
 # Fig 2 taxonomy
@@ -87,10 +89,16 @@ class CentralService:
                  group_ttl_s: Optional[float] = 3600.0):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
+        # one global interning table set: every columnar batch is re-mapped
+        # into this id space at decode time, so flame graphs, waterlines and
+        # kernel diffs from different agents are directly comparable
+        self.tables = TraceTables()
+        self._remaps = RemapCache(self.tables)
         self.detector = StragglerDetector(window=window, k=k,
                                           robust=robust_detector)
         self.waterlines: Dict[str, CPUWaterline] = defaultdict(
-            lambda: CPUWaterline(window=window, k=k))
+            lambda: CPUWaterline(window=window, k=k,
+                                 names=self.tables.strings))
         self.window = window
         self.baseline_delta = baseline_delta
         self.iter_regression = iter_regression
@@ -115,6 +123,8 @@ class CentralService:
         else:
             self._group_iter_time = defaultdict(list)
         self._pending_collectives: List[CollectiveEvent] = []
+        # columnar profiles defer collective materialization to process()
+        self._pending_coll_profiles: List[ColumnarProfile] = []
         self._job_by_group: Dict[str, str] = {}
         # group -> live rank set, so per-group lookups never scan the
         # whole (group, rank) space at fleet scale
@@ -127,30 +137,72 @@ class CentralService:
         self.ingested = 0
 
     # -- ingestion -----------------------------------------------------------
-    def ingest(self, profile: IterationProfile, job_id: str = "job-0") -> None:
+    def _adopt(self, profile: ColumnarProfile) -> ColumnarProfile:
+        """Re-map a foreign-table profile into the service's global id
+        space (bounded cache of incremental gathers per source table)."""
+        return remap_profile(profile, self._remaps.get(profile.tables))
+
+    def ingest(self, profile, job_id: str = "job-0") -> None:
+        """Ingest one per-rank iteration — an ``IterationProfile``
+        (boundary schema) or a ``ColumnarProfile`` (hot path)."""
         self.ingested += 1
         g = profile.group_id
         self._job_by_group[g] = job_id
-        self._latest[(g, profile.rank)] = profile
         self._group_ranks[g].add(profile.rank)
         self._last_ingest[g] = time.monotonic()
         self._group_iter_time[g].append(profile.iter_time)
-        self._pending_collectives.extend(profile.collectives)
-        fg = FlameGraph.from_samples(profile.cpu_samples)
-        self.waterlines[g].observe(profile.rank, fg)
-        if self.streaming:
-            key = (g, profile.rank)
-            acc = self._rank_fg.get(key)
-            if acc is None:
-                acc = self._rank_fg[key] = FlameGraph()
-            acc.decay(self._fg_decay)
-            acc.add_graph(fg)
+        if isinstance(profile, ColumnarProfile):
+            if profile.tables is not self.tables:
+                profile = self._adopt(profile)
+            self._latest[(g, profile.rank)] = profile
+            if profile.coll_op.shape[0]:
+                self._pending_coll_profiles.append(profile)
+            ids, fracs = profile.function_fraction_sparse()
+            self.waterlines[g].observe_sparse(profile.rank, ids, fracs)
+            if self.streaming:
+                key = (g, profile.rank)
+                acc = self._rank_fg.get(key)
+                if acc is None:
+                    acc = self._rank_fg[key] = ColumnFlameGraph(self.tables)
+                acc.decay(self._fg_decay)
+                if isinstance(acc, ColumnFlameGraph):
+                    acc.add_sid_weights(profile.stack_id,
+                                        profile.stack_weight)
+                else:           # rank switched representations mid-stream
+                    acc.add_rows(zip(profile.stack_id.tolist(),
+                                     profile.stack_weight.tolist()),
+                                 self.tables.stack_tuple)
+        else:
+            self._latest[(g, profile.rank)] = profile
+            self._pending_collectives.extend(profile.collectives)
+            fg = FlameGraph.from_samples(profile.cpu_samples)
+            self.waterlines[g].observe(profile.rank, fg)
+            if self.streaming:
+                key = (g, profile.rank)
+                acc = self._rank_fg.get(key)
+                if acc is None:
+                    acc = self._rank_fg[key] = FlameGraph()
+                acc.decay(self._fg_decay)
+                if isinstance(acc, ColumnFlameGraph):
+                    # rank switched representations mid-stream: intern
+                    acc.add_id_rows(
+                        (self.tables.intern_stack(st), w)
+                        for st, w in fg.counts.items())
+                else:
+                    acc.add_graph(fg)
 
-    def ingest_batch(self, batch: ProfileBatch) -> int:
-        """One agent upload (§4's 30 s cycle) — profiles may span groups."""
+    def ingest_batch(self, batch) -> int:
+        """One agent upload (§4's 30 s cycle) — a ``ProfileBatch`` or
+        ``ColumnarBatch``; profiles may span groups."""
         for p in batch.profiles:
             self.ingest(p, job_id=batch.job_id)
         return len(batch.profiles)
+
+    def ingest_encoded(self, data: bytes) -> int:
+        """One wire-encoded columnar upload: decode straight into the
+        service's global tables (one vectorized id gather per column),
+        then ingest the column views."""
+        return self.ingest_batch(decode_batch(data, tables=self.tables))
 
     def ingest_log_line(self, job_id: str, line: str) -> Optional[DiagnosticEvent]:
         for pattern, cause in LOG_SOP_RULES:
@@ -197,6 +249,12 @@ class CentralService:
         new_events: List[DiagnosticEvent] = []
 
         # 1. instance separation + straggler detection
+        if self._pending_coll_profiles:
+            # deferred columnar collectives: materialized once per cycle,
+            # off the per-profile ingest hot path
+            for p in self._pending_coll_profiles:
+                self._pending_collectives.extend(p.collective_events())
+            self._pending_coll_profiles = []
         if self._pending_collectives:
             for inst in separate_instances(self._pending_collectives):
                 self.detector.observe_instance(inst)
@@ -223,13 +281,25 @@ class CentralService:
         return new_events
 
     # -- straggler path ---------------------------------------------------------
+    @staticmethod
+    def _profile_flamegraph(p) -> FlameGraph:
+        if isinstance(p, ColumnarProfile):
+            return p.flamegraph()
+        return FlameGraph.from_samples(p.cpu_samples)
+
+    @staticmethod
+    def _profile_kernels(p):
+        """What ``gpu_diff`` aggregates: the columnar profile itself (it
+        carries interned kernel columns) or the dataclass event list."""
+        return p if isinstance(p, ColumnarProfile) else p.kernel_events
+
     def _rank_flamegraph(self, g: str, rank: int) -> FlameGraph:
         """Windowed CPU profile of one rank: the decayed incremental graph
         (streaming) or a fresh rebuild from the latest raw samples (legacy)."""
         if self.streaming:
             fg = self._rank_fg.get((g, rank))
             return fg if fg is not None else FlameGraph()
-        return FlameGraph.from_samples(self._latest[(g, rank)].cpu_samples)
+        return self._profile_flamegraph(self._latest[(g, rank)])
 
     def _diagnose_straggler(self, alert: StragglerAlert,
                             t0: float) -> Optional[DiagnosticEvent]:
@@ -243,7 +313,7 @@ class CentralService:
         hp = self._latest[(g, healthy)]
 
         verdict = diagnose(
-            sp.kernel_events, hp.kernel_events,
+            self._profile_kernels(sp), self._profile_kernels(hp),
             self._rank_flamegraph(g, alert.rank),
             self._rank_flamegraph(g, healthy),
             sp.os_signals, hp.os_signals)
@@ -304,13 +374,21 @@ class CentralService:
             ranks = self._group_ranks.get(g)
             if not ranks:
                 return None
-            out = FlameGraph()
-            for r in ranks:
-                fg = self._rank_fg.get((g, r))
-                if fg is not None:
-                    out.add_graph(fg)
+            fgs = [fg for fg in (self._rank_fg.get((g, r)) for r in ranks)
+                   if fg is not None]
+            if not fgs:
+                return None
+            if all(isinstance(f, ColumnFlameGraph) for f in fgs):
+                out = ColumnFlameGraph(self.tables)
+                for f in fgs:
+                    out.add_graph(f)
+            else:
+                out = FlameGraph()
+                for f in fgs:
+                    out.add_graph(f.to_flamegraph()
+                                  if isinstance(f, ColumnFlameGraph) else f)
             return out if out.total else None
-        fgs = [FlameGraph.from_samples(p.cpu_samples)
+        fgs = [self._profile_flamegraph(p)
                for (gg, _r), p in self._latest.items() if gg == g]
         if not fgs:
             return None

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 
 from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.service import CentralService, DiagnosticEvent
+from repro.core.trace import decode_batch
 
 
 def shard_of(group_id: str, n_shards: int) -> int:
@@ -47,10 +48,15 @@ class ShardedService:
         self.parallel = parallel
         self.shards: List[CentralService] = [
             CentralService(**kwargs) for _ in range(n_shards)]
-        # one global Build-ID-keyed symbol store (see module docstring)
+        # one global Build-ID-keyed symbol store (see module docstring),
+        # and — same reasoning: append-only, content-addressed — one global
+        # interning table set, so an encoded batch is decoded exactly once
+        # and its column views route to shards without re-mapping
         self.symbol_repo = self.shards[0].symbol_repo
+        self.tables = self.shards[0].tables
         for s in self.shards[1:]:
             s.symbol_repo = self.symbol_repo
+            s.tables = self.tables
         self._log_rr = 0
 
     # -- routing -------------------------------------------------------------
@@ -61,10 +67,17 @@ class ShardedService:
     def ingest(self, profile: IterationProfile, job_id: str = "job-0") -> None:
         self.shard_for(profile.group_id).ingest(profile, job_id=job_id)
 
-    def ingest_batch(self, batch: ProfileBatch) -> int:
-        """Split one agent upload by owning shard.  With ``parallel=True``
-        the per-shard sub-batches are ingested concurrently (safe: shards
-        are independent)."""
+    def ingest_encoded(self, data: bytes) -> int:
+        """One wire-encoded columnar upload: decoded exactly once into the
+        shared tables, then the per-profile column views are routed to
+        their group's shard (no per-shard re-decode or re-map)."""
+        batch = decode_batch(data, tables=self.tables)
+        return self.ingest_batch(batch)
+
+    def ingest_batch(self, batch) -> int:
+        """Split one agent upload (``ProfileBatch`` or ``ColumnarBatch``)
+        by owning shard.  With ``parallel=True`` the per-shard sub-batches
+        are ingested concurrently (safe: shards are independent)."""
         by_shard: Dict[int, List[IterationProfile]] = defaultdict(list)
         for p in batch.profiles:
             by_shard[shard_of(p.group_id, self.n_shards)].append(p)

@@ -16,9 +16,12 @@ import dataclasses
 import random
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.collective.introspect import CommStructCodec
 from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
                                OSSignals, StackSample)
+from repro.core.trace import ColumnarProfile, TraceTables
 
 # ---------------------------------------------------------------------------
 # baseline workload model (Fig 6's python/c++ mixed stacks)
@@ -138,7 +141,10 @@ def io_bottleneck(start: int = 0, fraction: float = 0.12) -> Fault:
 class SimCluster:
     def __init__(self, n_ranks: int = 8, group_hash: int = 0xAB54A98CEB1F0AD2,
                  comm_version: str = "nccl-2.18", seed: int = 0,
-                 samples_per_iter: int = 400, iter_time: float = 0.1):
+                 samples_per_iter: int = 400, iter_time: float = 0.1,
+                 columnar: bool = False,
+                 tables: Optional[TraceTables] = None,
+                 stack_variants: int = 1):
         self.n_ranks = n_ranks
         self.rng = random.Random(seed)
         self.samples_per_iter = samples_per_iter
@@ -150,6 +156,25 @@ class SimCluster:
         # per-rank clock skew (us-scale) — exercised by ClockAligner
         self.skew = {r: self.rng.uniform(-2e-4, 2e-4) for r in range(n_ranks)}
         self.group_id = f"{group_hash:016x}"
+        # columnar mode: step() emits ColumnarProfiles natively — the same
+        # RNG stream and values, interned against `tables` (shareable
+        # across the groups of a fleet, like one node agent's tables)
+        self.columnar = columnar
+        self.tables = tables if tables is not None else TraceTables()
+        self._sid_cache: Dict[Tuple[str, ...], int] = {}
+        self._fid_cache: Dict[str, int] = {}
+        # stack diversity: production 30 s windows carry dozens-to-hundreds
+        # of unique stacks, not the 8 canonical Fig 6 paths — variants
+        # split each base path into per-leaf specializations (e.g. shape-
+        # specialized kernels) so benches can ingest realistic row counts.
+        # Default 1 reproduces the base workload exactly.
+        if stack_variants > 1:
+            self._base_stacks = [
+                (stack[:-1] + (f"{stack[-1]}#v{v}",), w / stack_variants)
+                for stack, w in _BASE_STACKS
+                for v in range(stack_variants)]
+        else:
+            self._base_stacks = list(_BASE_STACKS)
 
     # -- registration handshake payloads --------------------------------------
     def comm_snapshots(self, rank: int) -> List[bytes]:
@@ -161,8 +186,10 @@ class SimCluster:
         self.faults.append(fault)
 
     # -- one iteration ---------------------------------------------------------
-    def _cpu_samples(self, rank: int, t: float) -> List[StackSample]:
-        stacks = list(_BASE_STACKS)
+    def _cpu_rows(self, rank: int) -> List[Tuple[Tuple[str, ...], int]]:
+        """(stack, count) rows for one rank-iteration — the single source
+        of truth for both the dataclass and columnar materializations."""
+        stacks = list(self._base_stacks)
         for f in self.faults:
             if not f.applies(rank, self.iteration):
                 continue
@@ -179,30 +206,51 @@ class SimCluster:
                 frac = f.fraction  # type: ignore[attr-defined]
                 stacks += [(s, w * frac / (1 - frac)) for s, w in _IO_STACKS]
         total = sum(w for _, w in stacks)
-        samples = []
+        rows = []
         n = self.samples_per_iter
         for stack, w in stacks:
             cnt = round(n * w / total)
             # Poisson-ish jitter so sigma is non-degenerate
             cnt = max(0, cnt + self.rng.randint(-2, 2))
             if cnt:
-                samples.append(StackSample(rank=rank, timestamp=t,
-                                           frames=stack, weight=cnt))
-        return samples
+                rows.append((stack, cnt))
+        return rows
 
-    def _kernels(self, rank: int, t: float) -> Tuple[List[KernelEvent], float]:
+    def _cpu_samples(self, rank: int, t: float) -> List[StackSample]:
+        return [StackSample(rank=rank, timestamp=t, frames=stack, weight=cnt)
+                for stack, cnt in self._cpu_rows(rank)]
+
+    def _sid(self, stack: Tuple[str, ...]) -> int:
+        sid = self._sid_cache.get(stack)
+        if sid is None:
+            sid = self._sid_cache[stack] = self.tables.intern_stack(stack)
+        return sid
+
+    def _fid(self, name: str) -> int:
+        fid = self._fid_cache.get(name)
+        if fid is None:
+            fid = self._fid_cache[name] = self.tables.strings.intern(name)
+        return fid
+
+    def _kernel_rows(self, rank: int, t: float
+                     ) -> Tuple[List[Tuple[str, float, float]], float]:
         factor = 1.0
         for f in self.faults:
             if f.name == "gpu_thermal_throttle" and f.applies(rank, self.iteration):
                 factor *= f.factor  # type: ignore[attr-defined]
-        evs, extra = [], 0.0
+        rows, extra = [], 0.0
         cursor = t
         for name, dur in _BASE_KERNELS:
             d = dur * factor * self.rng.uniform(0.995, 1.005)
-            evs.append(KernelEvent(rank=rank, name=name, start=cursor, duration=d))
+            rows.append((name, cursor, d))
             cursor += d
             extra += d - dur
-        return evs, extra
+        return rows, extra
+
+    def _kernels(self, rank: int, t: float) -> Tuple[List[KernelEvent], float]:
+        rows, extra = self._kernel_rows(rank, t)
+        return [KernelEvent(rank=rank, name=n, start=s, duration=d)
+                for n, s, d in rows], extra
 
     def _os_signals(self, rank: int, t: float) -> OSSignals:
         irqs = {"LOC": 100_000 + self.rng.randint(-500, 500),
@@ -219,16 +267,44 @@ class SimCluster:
         return OSSignals(rank=rank, timestamp=t, interrupts=irqs,
                          softirq_residency={}, sched_latency_p99=sched_p99)
 
+    def _columnar_profile(self, rank: int, t0: float, iter_time: float,
+                          cpu_rows, kernel_rows, entry: float, exit_v: float,
+                          coll_dur: float, sig: OSSignals) -> ColumnarProfile:
+        n = len(cpu_rows)
+        return ColumnarProfile(
+            rank=rank, iteration=self.iteration, group_id=self.group_id,
+            iter_time=iter_time, tables=self.tables,
+            stack_ts=np.full(n, t0),
+            stack_weight=np.array([c for _, c in cpu_rows], dtype=np.int64),
+            stack_kind=np.full(n, self._fid("cpu"), dtype=np.int64),
+            stack_id=np.array([self._sid(s) for s, _ in cpu_rows],
+                              dtype=np.int64),
+            kern_name=np.array([self._fid(nm) for nm, _, _ in kernel_rows],
+                               dtype=np.int64),
+            kern_start=np.array([s for _, s, _ in kernel_rows]),
+            kern_dur=np.array([d for _, _, d in kernel_rows]),
+            kern_stream=np.zeros(len(kernel_rows), dtype=np.int64),
+            coll_op=np.array([self._fid("ReduceScatter")], dtype=np.int64),
+            coll_group=np.array([self._fid(self.group_id)], dtype=np.int64),
+            coll_entry=np.array([entry]), coll_exit=np.array([exit_v]),
+            coll_nbytes=np.array([512 * 1024 * 1024], dtype=np.int64),
+            coll_dev_dur=np.array([coll_dur]),
+            coll_instance=np.array([-1], dtype=np.int64),
+            coll_seq=np.array([-1], dtype=np.int64),
+            os_signals=sig)
+
     def step(self) -> List[IterationProfile]:
-        """Simulate one synchronous iteration across all ranks."""
+        """Simulate one synchronous iteration across all ranks.  Emits
+        ``IterationProfile``s, or native ``ColumnarProfile``s in columnar
+        mode — same RNG stream, same values, different representation."""
         t0 = self.iteration * self.base_iter_time
         profiles = []
         # per-rank compute time before entering the gradient collective
         entry_delay: Dict[int, float] = {}
-        kernel_evs: Dict[int, List[KernelEvent]] = {}
+        kernel_rows: Dict[int, List[Tuple[str, float, float]]] = {}
         for r in range(self.n_ranks):
-            evs, gpu_extra = self._kernels(r, t0)
-            kernel_evs[r] = evs
+            rows, gpu_extra = self._kernel_rows(r, t0)
+            kernel_rows[r] = rows
             delay = gpu_extra + self.rng.gauss(0, 12e-6)
             for f in self.faults:
                 if not f.applies(r, self.iteration):
@@ -252,18 +328,30 @@ class SimCluster:
         iter_end = exit_t + 0.05 * self.base_iter_time
 
         for r in range(self.n_ranks):
-            ev = CollectiveEvent(
-                rank=r, group_id=self.group_id, op="ReduceScatter",
-                entry=entries[r] + self.skew[r],
-                exit=exit_t + self.skew[r] + self.rng.gauss(0, 3e-6),
-                nbytes=512 * 1024 * 1024, device_duration=coll_dur)
-            profiles.append(IterationProfile(
-                rank=r, iteration=self.iteration, group_id=self.group_id,
-                iter_time=iter_end - t0,
-                cpu_samples=self._cpu_samples(r, t0),
-                kernel_events=kernel_evs[r],
-                collectives=[ev],
-                os_signals=self._os_signals(r, t0)))
+            entry = entries[r] + self.skew[r]
+            exit_v = exit_t + self.skew[r] + self.rng.gauss(0, 3e-6)
+            cpu_rows = self._cpu_rows(r)
+            sig = self._os_signals(r, t0)
+            if self.columnar:
+                profiles.append(self._columnar_profile(
+                    r, t0, iter_end - t0, cpu_rows, kernel_rows[r],
+                    entry, exit_v, coll_dur, sig))
+            else:
+                ev = CollectiveEvent(
+                    rank=r, group_id=self.group_id, op="ReduceScatter",
+                    entry=entry, exit=exit_v,
+                    nbytes=512 * 1024 * 1024, device_duration=coll_dur)
+                profiles.append(IterationProfile(
+                    rank=r, iteration=self.iteration, group_id=self.group_id,
+                    iter_time=iter_end - t0,
+                    cpu_samples=[StackSample(rank=r, timestamp=t0,
+                                             frames=stack, weight=cnt)
+                                 for stack, cnt in cpu_rows],
+                    kernel_events=[KernelEvent(rank=r, name=nm, start=s,
+                                               duration=d)
+                                   for nm, s, d in kernel_rows[r]],
+                    collectives=[ev],
+                    os_signals=sig))
         self.iteration += 1
         return profiles
 
@@ -294,18 +382,27 @@ class MultiGroupSimCluster:
 
     def __init__(self, n_groups: int = 32, ranks_per_group: int = 32,
                  seed: int = 0, samples_per_iter: int = 400,
-                 iter_time: float = 0.1, base_hash: int = 0x51A0_0000_0000_0001):
+                 iter_time: float = 0.1, base_hash: int = 0x51A0_0000_0000_0001,
+                 columnar: bool = False,
+                 tables: Optional[TraceTables] = None,
+                 stack_variants: int = 1):
+        # columnar mode shares ONE table set fleet-wide: the groups run the
+        # same workload, so their stacks/kernel names intern once, ever
+        self.tables = tables if tables is not None else TraceTables()
         self.groups: List[SimCluster] = [
             SimCluster(n_ranks=ranks_per_group,
                        group_hash=(base_hash + 0x9E3779B97F4A7C15 * i)
                        & 0xFFFFFFFFFFFFFFFF,
                        seed=seed * 1000 + i,
                        samples_per_iter=samples_per_iter,
-                       iter_time=iter_time)
+                       iter_time=iter_time,
+                       columnar=columnar, tables=self.tables,
+                       stack_variants=stack_variants)
             for i in range(n_groups)
         ]
         self.n_groups = n_groups
         self.ranks_per_group = ranks_per_group
+        self.columnar = columnar
 
     @property
     def n_ranks(self) -> int:

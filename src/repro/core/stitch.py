@@ -58,24 +58,74 @@ def stitch(native: Sequence[NativeFrame], python: Sequence[PyFrame],
     root..leaf stack.  Each evaluator frame in the native stack is REPLACED
     by the Python frame whose native_sp joins there; other native frames
     pass through.  Falls back to appending leftover Python frames at their
-    SP-ordered position."""
-    py = list(python)
+    SP-ordered position.
+
+    Matching is a single two-pointer pass: Python frames are pre-sorted by
+    ``native_sp`` once (ties keep original order on top), and because a
+    leaf..root native walk visits evaluator SPs in non-decreasing order,
+    the candidate set only ever grows — the nearest ``native_sp <= sp``
+    match is the top of an availability stack.  O((N + P log P)) instead
+    of the old O(N_evaluator * P) rescan.
+    """
+    n_py = len(python)
     merged: List[str] = []
+    if n_py == 0:
+        for nf in native:
+            merged.append(nf.name)
+        return tuple(reversed(merged))
+
+    # ascending native_sp; among equal SPs the EARLIER original frame must
+    # be matched first, so it is pushed last (sort index descending)
+    order = sorted(range(n_py),
+                   key=lambda i: (python[i].native_sp, -i))
+    used = [False] * n_py
+    avail: List[int] = []        # unused indices with native_sp <= cover,
+    ptr = 0                      # SP-ascending; `order[ptr:]` not yet pushed
+    cover: Optional[int] = None  # SP threshold avail currently covers
+    fallback = 0                 # lowest original index possibly unused
+    remaining = n_py
+
     for nf in native:  # leaf..root
-        if nf.name in evaluator_names and py:
-            # the evaluator executes exactly one python frame: match by
-            # nearest native_sp <= evaluator sp
-            best_i, best_sp = None, None
-            for i, pf in enumerate(py):
-                if pf.native_sp <= nf.sp and (best_sp is None
-                                              or pf.native_sp > best_sp):
-                    best_i, best_sp = i, pf.native_sp
-            if best_i is None:
-                best_i = 0
-            merged.append(py.pop(best_i).label)
+        if nf.name in evaluator_names and remaining:
+            sp = nf.sp
+            i = None
+            if cover is not None and sp < cover:
+                # out-of-order native walk (corrupt unwind): this SP is
+                # behind the two-pointer frontier — match by direct scan,
+                # leaving avail's coverage invariant intact (the matched
+                # frame is skipped lazily later).  Degenerate path only.
+                best_sp = None
+                for j in range(ptr):
+                    c = order[j]
+                    c_sp = python[c].native_sp
+                    if used[c] or c_sp > sp:
+                        continue
+                    # >= so the last ascending-order hit wins: the lowest
+                    # original index among equal SPs (old tie-break)
+                    if best_sp is None or c_sp >= best_sp:
+                        i, best_sp = c, c_sp
+            else:
+                while ptr < n_py and python[order[ptr]].native_sp <= sp:
+                    avail.append(order[ptr])
+                    ptr += 1
+                cover = sp
+                while avail and used[avail[-1]]:
+                    avail.pop()
+                if avail:
+                    i = avail.pop()
+            if i is None:
+                # no frame joins at/below this SP: take the lowest-index
+                # remaining frame (degenerate input; preserves old output)
+                while used[fallback]:
+                    fallback += 1
+                i = fallback
+            used[i] = True
+            remaining -= 1
+            merged.append(python[i].label)
         else:
             merged.append(nf.name)
     # any remaining python frames are outermost interpreter frames
-    for pf in py:
-        merged.append(pf.label)
+    for i in range(n_py):
+        if not used[i]:
+            merged.append(python[i].label)
     return tuple(reversed(merged))  # root..leaf

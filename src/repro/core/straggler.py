@@ -15,6 +15,8 @@ import math
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.events import CollectiveEvent
 
 
@@ -51,11 +53,14 @@ class ClockAligner:
         self._since_refresh: Dict[Tuple[str, int], int] = defaultdict(int)
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
-        if len(events) < 2:
+        n = len(events)
+        if n < 2:
             return
-        mean_exit = sum(e.exit for e in events) / len(events)
-        for e in events:
-            self._resid[(e.group_id, e.rank)].append(e.exit - mean_exit)
+        # exit-residual update, vectorized over the instance's ranks
+        exits = np.fromiter((e.exit for e in events), np.float64, n)
+        resid = exits - exits.mean()
+        for e, rv in zip(events, resid.tolist()):
+            self._resid[(e.group_id, e.rank)].append(rv)
             self._since_refresh[(e.group_id, e.rank)] += 1
 
     def skew(self, rank: int, group_id: str) -> float:
@@ -64,8 +69,9 @@ class ClockAligner:
         if not r:
             return 0.0
         if key not in self._cached or self._since_refresh[key] >= self._refresh:
-            s = sorted(r)
-            self._cached[key] = s[len(s) // 2]  # median residual
+            arr = np.fromiter(r, np.float64, len(r))
+            k = arr.shape[0] // 2
+            self._cached[key] = float(np.partition(arr, k)[k])  # median
             self._since_refresh[key] = 0
         return self._cached[key]
 
@@ -104,18 +110,25 @@ class StragglerDetector:
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
         """Feed one matched collective instance (all ranks of one group)."""
-        if len(events) < 2:
+        n = len(events)
+        if n < 2:
             return
         self.aligner.observe_instance(events)
         group = events[0].group_id
-        aligned = {e.rank: self.aligner.align_entry(e) for e in events}
-        mean_entry = sum(aligned.values()) / len(aligned)
-        for rank, t in aligned.items():
-            d = self._late[group][rank]
+        # aligned-entry lateness, vectorized over the instance's ranks
+        entries = np.fromiter((e.entry for e in events), np.float64, n)
+        skew = self.aligner.skew
+        skews = np.fromiter((skew(e.rank, group) for e in events),
+                            np.float64, n)
+        aligned = entries - skews
+        lateness = aligned - aligned.mean()
+        late_g, sum_g = self._late[group], self._late_sum[group]
+        for e, lv in zip(events, lateness.tolist()):
+            d = late_g[e.rank]
             if len(d) == d.maxlen:          # evict oldest from the sum
-                self._late_sum[group][rank] -= d[0]
-            d.append(t - mean_entry)
-            self._late_sum[group][rank] += t - mean_entry
+                sum_g[e.rank] -= d[0]
+            d.append(lv)
+            sum_g[e.rank] += lv
 
     def forget_group(self, group_id: str) -> None:
         """Drop all windowed state for a retired communication group."""

@@ -5,15 +5,26 @@ fraction across all ranks over a sliding window of W iterations.  A rank is
 flagged when any function exceeds mu + k*sigma (defaults W=100, k=2).  The
 waterline is computed over ALL ranks simultaneously — no healthy/unhealthy
 pre-partitioning; a single outlier among N>=8 ranks shifts mu by only 1/N.
-"""
+
+Internally the waterline runs on *interned function ids*: an observation
+is a sparse (fn_id array, fraction array) pair, per-rank windowed sums
+live in dense numpy accumulators indexed by function id (two fancy-indexed
+vector ops per observation), and ``check()`` is one vectorized mu/sigma
+pass over the rank x function matrix.  The columnar ingest path
+(``repro.core.trace``) slices batch-precomputed fraction vectors straight
+into ``observe_sparse``; ``observe`` keeps the legacy FlameGraph interface
+and interns on the way in.  Both paths share one id space when constructed
+with the service's global string table."""
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections import defaultdict, deque
-from typing import Deque, Dict, List, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.flamegraph import FlameGraph
+from repro.core.trace import StringTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,69 +41,120 @@ class CPUWaterline:
     """Sliding-window per-function baseline for one communication group."""
 
     def __init__(self, window: int = 100, k: float = 2.0,
-                 min_fraction: float = 0.002, min_excess: float = 0.01):
+                 min_fraction: float = 0.002, min_excess: float = 0.01,
+                 names: Optional[StringTable] = None):
         self.window = window
         self.k = k
         self.min_fraction = min_fraction  # ignore sub-noise functions
         # practical-significance floor on (v - mu), mirroring the paper's
         # temporal delta=0.5%: statistical outliers below it are noise
         self.min_excess = min_excess
-        # history[rank] = deque of {function: fraction} dicts (one per iter);
-        # _acc[rank] = running sum over that window so observe() is O(|fns|)
-        # and check() never re-walks the window
-        self._history: Dict[int, Deque[Dict[str, float]]] = defaultdict(
-            lambda: deque(maxlen=window))
-        self._acc: Dict[int, Dict[str, float]] = defaultdict(
-            lambda: defaultdict(float))
+        # shared id space (the service passes its global table so legacy
+        # and columnar observations land on the same ids)
+        self.names = names if names is not None else StringTable()
+        # global fn ids are compacted into a per-group local id space, so
+        # the dense accumulators stay as wide as THIS group's vocabulary —
+        # not the fleet-wide string table (which also holds kernel names,
+        # ops and every other group's frames)
+        self._fns: List[int] = []            # local idx -> global fn id
+        self._g2l: np.ndarray = np.full(0, -1, dtype=np.int64)
+        # history[rank] = deque of sparse (local ids, fractions) pairs
+        # (one per iter); _acc[rank] = dense windowed sum over local ids
+        # so observe() is two vector ops and check() never re-walks
+        self._history: Dict[int, Deque[Tuple[np.ndarray, np.ndarray]]] = \
+            defaultdict(lambda: deque(maxlen=window))
+        self._acc: Dict[int, np.ndarray] = {}
+
+    def _localize(self, fn_ids: np.ndarray) -> np.ndarray:
+        """Map ascending global fn ids to compact per-group local ids,
+        assigning new locals on first sight."""
+        if fn_ids.shape[0] == 0:
+            return fn_ids
+        g2l = self._g2l
+        hi = int(fn_ids[-1])                 # ids are ascending
+        if g2l.shape[0] <= hi:
+            grown = np.full(max(hi + 1, g2l.shape[0] * 2, 256), -1,
+                            dtype=np.int64)
+            grown[:g2l.shape[0]] = g2l
+            g2l = self._g2l = grown
+        loc = g2l[fn_ids]
+        if (loc < 0).any():
+            fns = self._fns
+            for pos in np.nonzero(loc < 0)[0].tolist():
+                gid = int(fn_ids[pos])
+                local = len(fns)
+                fns.append(gid)
+                g2l[gid] = local
+                loc[pos] = local
+        return loc
+
+    def _acc_for(self, rank: int, need: int) -> np.ndarray:
+        acc = self._acc.get(rank)
+        if acc is None:
+            acc = self._acc[rank] = np.zeros(max(need, 64))
+        elif acc.shape[0] < need:
+            grown = np.zeros(max(need, acc.shape[0] * 2))
+            grown[:acc.shape[0]] = acc
+            acc = self._acc[rank] = grown
+        return acc
+
+    def observe_sparse(self, rank: int, fn_ids: np.ndarray,
+                       fractions: np.ndarray) -> None:
+        """One iteration's inclusive fractions as parallel (fn_id,
+        fraction) arrays — ids must be unique and ascending within the
+        observation and belong to ``self.names``.  The columnar hot
+        path."""
+        loc = self._localize(fn_ids)
+        hist = self._history[rank]
+        acc = self._acc_for(rank, len(self._fns))
+        if len(hist) == hist.maxlen:        # evict oldest from the sums
+            old_loc, old_fr = hist[0]
+            acc[old_loc] -= old_fr
+        hist.append((loc, fractions))
+        acc[loc] += fractions
 
     def observe(self, rank: int, profile: FlameGraph) -> None:
-        fractions = profile.function_fractions()
-        hist = self._history[rank]
-        acc = self._acc[rank]
-        if len(hist) == hist.maxlen:        # evict oldest from the sums
-            for fn, fr in hist[0].items():
-                left = acc[fn] - fr
-                if left < 1e-12:
-                    del acc[fn]
-                else:
-                    acc[fn] = left
-        hist.append(fractions)
-        for fn, fr in fractions.items():
-            acc[fn] += fr
+        """Legacy interface: a per-iteration flame graph; fractions are
+        interned into the shared id space on the way in."""
+        fr = profile.function_fractions()
+        intern = self.names.intern
+        ids = np.fromiter((intern(fn) for fn in fr), np.int64, len(fr))
+        vals = np.fromiter(fr.values(), np.float64, len(fr))
+        if ids.shape[0]:
+            order = np.argsort(ids)
+            ids, vals = ids[order], vals[order]
+        self.observe_sparse(rank, ids, vals)
 
     # ------------------------------------------------------------------
-    def _per_rank_means(self) -> Dict[int, Dict[str, float]]:
-        """Windowed mean fraction per function per rank."""
-        out = {}
-        for rank, hist in self._history.items():
-            n = max(len(hist), 1)
-            out[rank] = {fn: v / n for fn, v in self._acc[rank].items()}
-        return out
-
     def check(self) -> List[WaterlineAlert]:
         """Flag ranks whose windowed fraction exceeds the group waterline."""
-        per_rank = self._per_rank_means()
-        if len(per_rank) < 2:
+        ranks = list(self._history)
+        n = len(ranks)
+        if n < 2:
             return []
-        functions = set()
-        for fr in per_rank.values():
-            functions |= set(fr)
-
+        width = max((self._acc[r].shape[0] for r in ranks
+                     if r in self._acc), default=0)
+        if width == 0:
+            return []
+        m = np.zeros((n, width))
+        for i, r in enumerate(ranks):
+            acc = self._acc.get(r)
+            if acc is not None:
+                m[i, :acc.shape[0]] = acc / max(len(self._history[r]), 1)
+        mu = m.mean(axis=0)
+        sigma = m.std(axis=0)
+        sig = np.maximum(sigma, 1e-9)
+        floor = max(self.min_fraction, 1e-9)
+        excess = m - mu
+        mask = ((m >= floor) & (m > mu + self.k * sig)
+                & (excess > max(floor, self.min_excess)))
         alerts: List[WaterlineAlert] = []
-        n = len(per_rank)
-        for fn in functions:
-            vals = [(r, fr.get(fn, 0.0)) for r, fr in per_rank.items()]
-            mu = sum(v for _, v in vals) / n
-            var = sum((v - mu) ** 2 for _, v in vals) / n
-            sigma = math.sqrt(var)
-            floor = max(self.min_fraction, 1e-9)
-            for r, v in vals:
-                if v < floor:
-                    continue
-                if (v > mu + self.k * max(sigma, 1e-9)
-                        and v - mu > max(floor, self.min_excess)):
-                    z = (v - mu) / max(sigma, 1e-9)
-                    alerts.append(WaterlineAlert(r, fn, v, mu, sigma, z))
+        get = self.names.get
+        fns = self._fns
+        for i, j in zip(*np.nonzero(mask)):
+            alerts.append(WaterlineAlert(
+                ranks[i], get(fns[int(j)]), float(m[i, j]), float(mu[j]),
+                float(sigma[j]), float(excess[i, j] / sig[j])))
         alerts.sort(key=lambda a: -a.zscore)
         return alerts
 

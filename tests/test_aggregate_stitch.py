@@ -63,6 +63,76 @@ def test_stitch_pure_native_passthrough():
     assert stitch(native, []) == ("b", "a")
 
 
+def _stitch_reference(native, python,
+                      evaluator_names=("_PyEval_EvalFrameDefault",)):
+    """The pre-refactor O(native x python) matcher, kept as the oracle."""
+    py = list(python)
+    merged = []
+    for nf in native:
+        if nf.name in evaluator_names and py:
+            best_i, best_sp = None, None
+            for i, pf in enumerate(py):
+                if pf.native_sp <= nf.sp and (best_sp is None
+                                              or pf.native_sp > best_sp):
+                    best_i, best_sp = i, pf.native_sp
+            if best_i is None:
+                best_i = 0
+            merged.append(py.pop(best_i).label)
+        else:
+            merged.append(nf.name)
+    for pf in py:
+        merged.append(pf.label)
+    return tuple(reversed(merged))
+
+
+def test_stitch_interleaved_evaluator_frames():
+    """Evaluator frames interleaved with native frames at every depth;
+    the two-pointer matcher must reproduce the old evaluator-by-evaluator
+    rescan exactly."""
+    ev = "_PyEval_EvalFrameDefault"
+    native = [  # leaf..root, SPs ascending as a real unwind produces
+        NativeFrame("memcpy", sp=50),
+        NativeFrame(ev, sp=100),
+        NativeFrame("at::softmax", sp=150),
+        NativeFrame(ev, sp=200),
+        NativeFrame("launch_kernel", sp=250),
+        NativeFrame(ev, sp=300),
+        NativeFrame(ev, sp=400),
+        NativeFrame("Py_RunMain", sp=500),
+    ]
+    python = [  # leaf..root
+        PyFrame("leaf_fn", "a.py", 1, native_sp=90),
+        PyFrame("mid_fn", "a.py", 2, native_sp=190),
+        PyFrame("outer_fn", "b.py", 3, native_sp=290),
+        PyFrame("main_fn", "b.py", 4, native_sp=390),
+    ]
+    merged = stitch(native, python)
+    assert merged == ("Py_RunMain", "py::main_fn", "py::outer_fn",
+                      "launch_kernel", "py::mid_fn", "at::softmax",
+                      "py::leaf_fn", "memcpy")
+    assert merged == _stitch_reference(native, python)
+
+
+def test_stitch_two_pointer_matches_reference_randomized():
+    """Randomized equivalence incl. degenerate inputs: unmatched python
+    frames, equal SPs, out-of-order native walks, leftover frames."""
+    import random
+    rng = random.Random(1234)
+    ev = "_PyEval_EvalFrameDefault"
+    for trial in range(400):
+        n_native = rng.randint(0, 8)
+        monotone = rng.random() < 0.7
+        native, sp = [], 0
+        for k in range(n_native):
+            sp = sp + rng.randint(1, 40) if monotone else rng.randint(0, 300)
+            native.append(NativeFrame(
+                ev if rng.random() < 0.5 else f"n{k}", sp))
+        python = [PyFrame(f"f{j}", "x.py", j, rng.randint(0, 300))
+                  for j in range(rng.randint(0, 5))]
+        assert stitch(native, python) == _stitch_reference(native, python), \
+            (trial, native, python)
+
+
 def test_walk_real_python_frames():
     def inner():
         return walk_pyframes(sys._getframe())

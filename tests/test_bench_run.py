@@ -1,0 +1,74 @@
+"""benchmarks/run.py harness contract: a raising bench module must exit
+non-zero and must mark the failure inside the emitted JSON, so CI can
+never upload a partial trajectory as green."""
+import json
+import sys
+import types
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import benchmarks.run as runmod  # noqa: E402
+
+
+def _module(name: str, run):
+    mod = types.ModuleType(name)
+    mod.run = run
+    return mod
+
+
+def _patch(monkeypatch, tmp_path, modules):
+    names = []
+    for name, fn in modules:
+        full = f"benchmarks.{name}"
+        monkeypatch.setitem(sys.modules, full, _module(full, fn))
+        names.append(full)
+    monkeypatch.setattr(runmod, "MODULES", names)
+    monkeypatch.setattr(runmod, "JSON_PATH", str(tmp_path / "bench.json"))
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    return tmp_path / "bench.json"
+
+
+def test_run_exits_nonzero_when_a_module_raises(monkeypatch, tmp_path):
+    def ok(lines):
+        lines.append("ok_metric,2,fine")
+
+    def boom(lines):
+        lines.append("partial_metric,1,emitted-before-crash")
+        raise RuntimeError("kaboom")
+
+    json_path = _patch(monkeypatch, tmp_path,
+                       [("_ok", ok), ("_boom", boom)])
+    with pytest.raises(SystemExit) as exc:
+        runmod.main()
+    assert exc.value.code == 1
+    data = json.loads(json_path.read_text())
+    # the partial JSON is still written (the trajectory survives) ...
+    assert data["ok_metric"]["derived"] == "fine"
+    assert data["partial_metric"]["derived"] == "emitted-before-crash"
+    # ... but it is self-describing about the failure
+    assert data["_boom_wall"]["derived"].startswith("FAILED")
+    assert data["bench_run_failures"]["count"] == 1
+    assert "_boom" in data["bench_run_failures"]["derived"]
+
+
+def test_run_exits_zero_and_marks_no_failures_when_green(monkeypatch,
+                                                         tmp_path):
+    def ok(lines):
+        lines.append("ok_metric,2,fine")
+
+    json_path = _patch(monkeypatch, tmp_path, [("_ok", ok)])
+    runmod.main()                       # no SystemExit
+    data = json.loads(json_path.read_text())
+    assert data["bench_run_failures"]["count"] == 0
+    assert data["ok_metric"]["us_per_call"] == 2.0
+
+
+def test_run_rejects_unknown_selection(monkeypatch, tmp_path):
+    _patch(monkeypatch, tmp_path, [("_ok", lambda lines: None)])
+    monkeypatch.setattr(sys, "argv", ["run.py", "no_such_bench"])
+    with pytest.raises(SystemExit) as exc:
+        runmod.main()
+    assert exc.value.code == 2

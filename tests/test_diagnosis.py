@@ -125,6 +125,50 @@ def test_os_diff_irq_imbalance():
     assert v and v.root_cause in ("irq_imbalance", "scheduler_contention")
 
 
+def test_os_diff_reports_all_cooccurring_causes_ranked():
+    """An IRQ storm, scheduler contention and a NUMA migration storm at
+    once: every cause appears in the evidence, ranked by severity, and
+    root_cause is the top-ranked one (not just the first detected)."""
+    s = OSSignals(rank=0, timestamp=0,
+                  interrupts={"NET_RX": 12000},          # 6x baseline
+                  sched_latency_p99=800e-6,              # 10x baseline
+                  numa_migrations=90)                    # 9x baseline
+    h = OSSignals(rank=7, timestamp=0, interrupts={"NET_RX": 2000},
+                  sched_latency_p99=80e-6, numa_migrations=10)
+    v = os_diff(s, h)
+    assert v is not None
+    causes = [c["cause"] for c in v.evidence["causes"]]
+    assert set(causes) == {"irq_imbalance", "scheduler_contention",
+                           "numa_migration_storm"}
+    sev = [c["severity"] for c in v.evidence["causes"]]
+    assert sev == sorted(sev, reverse=True)
+    # sched: 10x over a 2x threshold (5.0) outranks irq 6x/2x (3.0) and
+    # numa 9x/4x (2.25)
+    assert v.root_cause == "scheduler_contention" == causes[0]
+    # per-signal measurements still attached
+    assert v.evidence["irq:NET_RX"] == (12000, 2000)
+    assert v.evidence["sched_latency_p99"] == (800e-6, 80e-6)
+    assert v.evidence["numa_migrations"] == (90, 10)
+
+
+def test_os_diff_single_cause_keeps_shape():
+    s = OSSignals(rank=0, timestamp=0, interrupts={"NET_RX": 95000},
+                  sched_latency_p99=80e-6)
+    h = OSSignals(rank=7, timestamp=0, interrupts={"NET_RX": 2000},
+                  sched_latency_p99=80e-6)
+    v = os_diff(s, h)
+    assert v and v.root_cause == "irq_imbalance"
+    assert [c["cause"] for c in v.evidence["causes"]] == ["irq_imbalance"]
+
+
+def test_os_diff_quiet_when_matched():
+    s = OSSignals(rank=0, timestamp=0, interrupts={"NET_RX": 2100},
+                  sched_latency_p99=82e-6, numa_migrations=10)
+    h = OSSignals(rank=7, timestamp=0, interrupts={"NET_RX": 2000},
+                  sched_latency_p99=80e-6, numa_migrations=9)
+    assert os_diff(s, h) is None
+
+
 # -- layered walk -------------------------------------------------------------------
 
 def test_layered_order_gpu_first():

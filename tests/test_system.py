@@ -91,11 +91,31 @@ CASE_FAULTS = {
 }
 
 
-def _drive(service, fault_factory, seed=7):
-    cl = sc.SimCluster(n_ranks=8, seed=seed)
-    cl.run(service, 30)
+def _drive(service, fault_factory, seed=7, columnar=False, encoded=False):
+    """Run the §5.4 scenario into ``service`` over one of the three ingest
+    representations: dataclass objects, native columnar profiles, or
+    wire-encoded columnar batches (one per fleet iteration, as an agent
+    would upload)."""
+    from repro.core.trace import ColumnarBatch, encode_batch
+
+    cl = sc.SimCluster(n_ranks=8, seed=seed, columnar=columnar)
+
+    def run(iterations):
+        for _ in range(iterations):
+            profiles = cl.step()
+            if encoded:
+                service.ingest_encoded(encode_batch(
+                    ColumnarBatch("job-0", profiles, "node-0", cl.tables)))
+            else:
+                for p in profiles:
+                    service.ingest(p)
+            if cl.iteration % 10 == 0:
+                service.process()
+        service.process()
+
+    run(30)
     cl.add_fault(fault_factory())
-    cl.run(service, 60)
+    run(60)
     return [(e.group_id, e.root_cause, e.category, e.straggler_rank)
             for e in service.events]
 
@@ -110,6 +130,23 @@ def test_sharded_matches_unsharded_on_case_studies(case):
                      fault_factory)
     assert plain, f"case {case} produced no diagnosis"
     assert sharded == plain
+
+
+@pytest.mark.parametrize("case", sorted(CASE_FAULTS))
+def test_case_studies_identical_on_legacy_streaming_columnar_paths(case):
+    """The tentpole invariant: the legacy batch path, the streaming object
+    path and the wire-encoded columnar path reach the same diagnoses on
+    every §5.4 case study."""
+    fault_factory, robust = CASE_FAULTS[case]
+    legacy = _drive(CentralService(window=50, robust_detector=robust,
+                                   streaming=False), fault_factory)
+    streaming = _drive(CentralService(window=50, robust_detector=robust),
+                       fault_factory)
+    columnar = _drive(CentralService(window=50, robust_detector=robust),
+                      fault_factory, columnar=True, encoded=True)
+    assert streaming, f"case {case} produced no diagnosis"
+    assert columnar == streaming
+    assert legacy == streaming
 
 
 def test_sharded_matches_unsharded_multi_group():

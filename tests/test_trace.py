@@ -1,0 +1,334 @@
+"""Columnar trace pipeline: interning tables, lossless adapters, the
+versioned wire codec, table re-mapping, and the agent's encoded-upload
+path.  Deterministic tests run everywhere; hypothesis property tests ride
+along when dev extras are installed."""
+import numpy as np
+import pytest
+
+from repro.core import simcluster as sc
+from repro.core.agent import AgentConfig, NodeAgent
+from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
+                               OSSignals, ProfileBatch, StackSample)
+from repro.core.flamegraph import FlameGraph
+from repro.core.service import CentralService
+from repro.core.sharded import ShardedService
+from repro.core.trace import (ColumnFlameGraph, ColumnarBatch,
+                              ColumnarProfile, TableRemap, TraceTables,
+                              WIRE_VERSION, WireFormatError,
+                              batch_fraction_rows, decode_batch, encode_batch,
+                              profile_to_columnar, remap_profile,
+                              to_columnar, to_dataclasses)
+
+
+def _profile(rank=0, iteration=0, group="g0", with_os=True,
+             frames=(("main", "forward", "softmax"),
+                     ("main", "backward", "matmul"))):
+    samples = [StackSample(rank=rank, timestamp=1.5 + i, frames=f,
+                           weight=3 + i, kind="cpu")
+               for i, f in enumerate(frames)]
+    kernels = [KernelEvent(rank=rank, name="gemm", start=0.1, duration=0.02),
+               KernelEvent(rank=rank, name="softmax", start=0.12,
+                           duration=0.005, stream=3)]
+    colls = [CollectiveEvent(rank=rank, group_id=group, op="AllReduce",
+                             entry=1.0, exit=1.1, nbytes=1 << 20,
+                             device_duration=0.05, instance=2, seq=7)]
+    sig = OSSignals(rank=rank, timestamp=2.0,
+                    interrupts={"LOC": 1000, "NET_RX": 50},
+                    softirq_residency={"NET_RX": 0.125},
+                    sched_latency_p99=80e-6, numa_migrations=3,
+                    cpu_steal=0.01) if with_os else None
+    return IterationProfile(rank=rank, iteration=iteration, group_id=group,
+                            iter_time=0.25, cpu_samples=samples,
+                            kernel_events=kernels, collectives=colls,
+                            os_signals=sig)
+
+
+# -- interning ----------------------------------------------------------------
+
+def test_string_and_stack_interning_dedups():
+    t = TraceTables()
+    a = t.intern_stack(("main", "f", "g"))
+    b = t.intern_stack(("main", "f", "g"))
+    c = t.intern_stack(("main", "f"))
+    assert a == b != c
+    assert t.stack_tuple(a) == ("main", "f", "g")
+    assert len(t.strings) == 3                 # frames dedup'd
+    # cached unique-fn view covers repeated frames once
+    d = t.intern_stack(("main", "main", "f"))
+    fns = t.stack_fns(d)
+    assert sorted(fns) == fns and len(fns) == 2
+
+
+# -- adapters -----------------------------------------------------------------
+
+def test_adapter_round_trip_is_lossless():
+    batch = ProfileBatch("job-1", [_profile(0), _profile(1, 4, "g1"),
+                                   _profile(2, with_os=False)], "node-3")
+    assert to_dataclasses(to_columnar(batch)) == batch
+
+
+def test_adapter_preserves_kinds_and_unicode():
+    p = IterationProfile(
+        rank=0, iteration=0, group_id="grüppe-θ", iter_time=0.1,
+        cpu_samples=[StackSample(rank=0, timestamp=0.0,
+                                 frames=("päth", "λeaf"), weight=2,
+                                 kind="pythön")])
+    cp = profile_to_columnar(p)
+    assert cp.to_dataclasses() == p
+
+
+def test_columnar_flamegraph_matches_from_samples():
+    p = _profile()
+    cp = profile_to_columnar(p)
+    assert cp.flamegraph().counts == FlameGraph.from_samples(
+        p.cpu_samples).counts
+
+
+def test_function_fraction_sparse_matches_flamegraph():
+    p = _profile(frames=(("main", "a", "b"), ("main", "a"),
+                         ("main", "c", "a")))
+    cp = profile_to_columnar(p)
+    ids, fracs = cp.function_fraction_sparse()
+    got = {cp.tables.strings.get(int(i)): float(f)
+           for i, f in zip(ids, fracs)}
+    ref = FlameGraph.from_samples(p.cpu_samples).function_fractions()
+    assert set(got) == set(ref)
+    for fn in ref:
+        assert got[fn] == pytest.approx(ref[fn])
+    assert ids.tolist() == sorted(ids.tolist())
+
+
+# -- wire codec ---------------------------------------------------------------
+
+def test_wire_round_trip_multi_group_batch():
+    batch = ProfileBatch("job-7", [_profile(r, it, g)
+                                   for g in ("g0", "g1", "g2")
+                                   for it in range(2)
+                                   for r in range(3)], "node-9")
+    out = decode_batch(encode_batch(batch))
+    assert out.job_id == "job-7" and out.node_id == "node-9"
+    assert out.to_dataclasses() == batch
+
+
+def test_wire_round_trip_empty_batch_and_empty_profiles():
+    empty = ProfileBatch("j", [], "n")
+    assert decode_batch(encode_batch(empty)).to_dataclasses() == empty
+    bare = ProfileBatch("j", [IterationProfile(
+        rank=0, iteration=0, group_id="g", iter_time=0.0)])
+    assert decode_batch(encode_batch(bare)).to_dataclasses() == bare
+
+
+def test_wire_round_trip_unicode_everywhere():
+    p = IterationProfile(
+        rank=1, iteration=2, group_id="グループ", iter_time=0.5,
+        cpu_samples=[StackSample(rank=1, timestamp=0.0,
+                                 frames=("рамка", "🔥"), weight=1,
+                                 kind="mixed")],
+        kernel_events=[KernelEvent(rank=1, name="gemm_ß", start=0.0,
+                                   duration=1e-3)],
+        collectives=[CollectiveEvent(rank=1, group_id="グループ",
+                                     op="AllGather", entry=0.0, exit=0.1)],
+        os_signals=OSSignals(rank=1, timestamp=0.0,
+                             interrupts={"ИРК": 5000}))
+    b = ProfileBatch("jöb", [p], "nøde")
+    assert decode_batch(encode_batch(b)).to_dataclasses() == b
+
+
+def test_wire_rejects_bad_magic_and_future_version():
+    data = encode_batch(ProfileBatch("j", [_profile()]))
+    with pytest.raises(WireFormatError):
+        decode_batch(b"XXXX" + data[4:])
+    bumped = bytearray(data)
+    bumped[4] = WIRE_VERSION + 1
+    with pytest.raises(WireFormatError):
+        decode_batch(bytes(bumped))
+    with pytest.raises(WireFormatError):
+        decode_batch(data[: len(data) // 2])
+
+
+def test_wire_decode_into_foreign_tables_remaps_ids():
+    batch = ProfileBatch("j", [_profile(r) for r in range(3)])
+    data = encode_batch(batch)
+    target = TraceTables()
+    # pre-populate so ids cannot accidentally line up
+    for s in ("zzz", "yyy", "xxx"):
+        target.strings.intern(s)
+    target.intern_stack(("zzz", "yyy"))
+    out = decode_batch(data, tables=target)
+    assert out.tables is target
+    assert out.to_dataclasses() == batch
+
+
+def test_encode_rejects_mixed_table_batches():
+    a = profile_to_columnar(_profile(0))
+    b = profile_to_columnar(_profile(1))        # different fresh tables
+    with pytest.raises(ValueError):
+        encode_batch(ColumnarBatch("j", [a, b], "n", a.tables))
+
+
+def test_batch_fraction_rows_matches_per_profile():
+    batch = to_columnar(ProfileBatch("j", [
+        _profile(0, frames=(("m", "a"), ("m", "b", "c"))),
+        IterationProfile(rank=1, iteration=0, group_id="g", iter_time=0.1),
+        _profile(2, frames=(("m", "a", "a"),)),
+    ]))
+    t = batch.tables
+    sids = np.concatenate([p.stack_id for p in batch.profiles])
+    ws = np.concatenate([p.stack_weight for p in batch.profiles])
+    off = np.cumsum([0] + [p.stack_id.shape[0] for p in batch.profiles])
+    ids, vals, bounds = batch_fraction_rows(t, sids, ws, off)
+    for i, p in enumerate(batch.profiles):
+        got = dict(zip(ids[bounds[i]:bounds[i + 1]].tolist(),
+                       vals[bounds[i]:bounds[i + 1]].tolist()))
+        want = p.function_fraction_dict()
+        assert set(got) == set(want)
+        for k in want:
+            assert got[k] == pytest.approx(want[k])
+
+
+# -- table re-mapping ---------------------------------------------------------
+
+def test_remap_is_incremental_and_value_preserving():
+    src, dst = TraceTables(), TraceTables()
+    p1 = profile_to_columnar(_profile(0), src)
+    remap = TableRemap(src, dst)
+    q1 = remap_profile(p1, remap)
+    assert q1.tables is dst
+    assert q1.to_dataclasses() == p1.to_dataclasses()
+    # source keeps growing; remap only translates the tail
+    p2 = profile_to_columnar(_profile(1, frames=(("new", "path"),)), src)
+    q2 = remap_profile(p2, remap)
+    assert q2.to_dataclasses() == p2.to_dataclasses()
+
+
+# -- ColumnFlameGraph ---------------------------------------------------------
+
+def test_column_flamegraph_mirrors_flamegraph():
+    t = TraceTables()
+    rows = [(t.intern_stack(("m", "a")), 3.0),
+            (t.intern_stack(("m", "b", "c")), 1.0)]
+    cfg = ColumnFlameGraph(t)
+    cfg.add_id_rows(rows)
+    fg = FlameGraph.from_rows(rows, t.stack_tuple)
+    assert cfg.total == fg.total
+    assert cfg.function_fractions() == fg.function_fractions()
+    assert cfg.diff(fg) == {fn: 0.0 for fn in fg.function_fractions()}
+    cfg2 = cfg.copy()
+    cfg2.decay(0.5)
+    fg.decay(0.5)
+    assert cfg2.function_fractions() == fg.function_fractions()
+    assert cfg2.to_flamegraph().counts == fg.counts
+    assert cfg.total == 4.0                     # copy was independent
+
+
+# -- service / agent integration ---------------------------------------------
+
+def test_service_ingests_encoded_batches():
+    svc = CentralService(window=20)
+    cl = sc.SimCluster(n_ranks=4, seed=5, columnar=True)
+    profiles = [p for _ in range(3) for p in cl.step()]
+    data = encode_batch(ColumnarBatch("job-e", profiles, "n0", cl.tables))
+    assert svc.ingest_encoded(data) == 12
+    assert svc.ingested == 12
+    st = svc.stats()
+    assert st["ranks"] == 4
+
+
+def test_sharded_service_ingests_encoded_batches_once_decoded():
+    svc = ShardedService(n_shards=4, window=20)
+    fleet = sc.MultiGroupSimCluster(n_groups=4, ranks_per_group=4, seed=5,
+                                    columnar=True, samples_per_iter=50)
+    profiles = [p for _ in range(2) for p in fleet.step()]
+    data = encode_batch(ColumnarBatch("job-e", profiles, "n0", fleet.tables))
+    assert svc.ingest_encoded(data) == 32
+    # every group's state lives on exactly its routed shard
+    for g in fleet.group_ids():
+        owner = svc.shard_for(g)
+        for s in svc.shards:
+            assert (g in s._group_ranks) == (s is owner)
+    # shards share the decode tables: no shard grew a private id space
+    assert all(s.tables is svc.tables for s in svc.shards)
+
+
+def test_agent_uploads_encoded_when_service_supports_it():
+    svc = CentralService(window=20)
+    agent = NodeAgent(AgentConfig(job_id="job-9", node_id="node-4"),
+                      service=svc)
+    cl = sc.SimCluster(n_ranks=2, seed=1)
+    for p in cl.step():
+        agent.submit(p)
+    assert agent.flush() == 2
+    assert agent.encoded_uploads == 1
+    assert agent.bytes_uploaded > 0
+    assert svc.ingested == 2
+
+
+def test_agent_falls_back_to_dataclasses_for_legacy_service():
+    class _Legacy:
+        def __init__(self):
+            self.profiles = []
+
+        def ingest(self, p, job_id="job-0"):
+            self.profiles.append(p)
+
+    svc = _Legacy()
+    agent = NodeAgent(AgentConfig(), service=svc)
+    cl = sc.SimCluster(n_ranks=2, seed=1)
+    originals = cl.step()
+    for p in originals:
+        agent.submit(p)
+    assert agent.flush() == 2
+    assert agent.encoded_uploads == 0
+    assert svc.profiles == originals            # untouched dataclasses
+
+
+def test_agent_reencode_failure_rebuffers():
+    class _Flaky:
+        def __init__(self):
+            self.calls = 0
+
+        def ingest_encoded(self, data):
+            self.calls += 1
+            raise ConnectionError("link down")
+
+    svc = _Flaky()
+    agent = NodeAgent(AgentConfig(), service=svc)
+    cl = sc.SimCluster(n_ranks=2, seed=1)
+    for p in cl.step():
+        agent.submit(p)
+    assert agent.flush() == 0
+    assert agent.upload_failures == 1
+    assert len(agent._buffer) == 2              # nothing lost
+
+
+def test_agent_encodes_columnar_submissions_from_foreign_tables():
+    svc = CentralService(window=20)
+    agent = NodeAgent(AgentConfig(job_id="job-c"), service=svc)
+    cl = sc.SimCluster(n_ranks=2, seed=1, columnar=True)
+    for p in cl.step():                         # sim tables != agent tables
+        agent.submit(p)
+    assert agent.flush() == 2
+    assert agent.encoded_uploads == 1
+    assert svc.ingested == 2
+
+
+def test_mixed_representation_group_still_diagnoses():
+    """One rank uploads columnar, the rest legacy dataclasses — the group
+    state stays coherent and the straggler is still diagnosed."""
+    svc = CentralService(window=50)
+    cl_obj = sc.SimCluster(n_ranks=8, seed=7)
+    cl_col = sc.SimCluster(n_ranks=8, seed=7, columnar=True)
+    cl_obj.add_fault(sc.nic_softirq(4, start=30))
+    cl_col.add_fault(sc.nic_softirq(4, start=30))
+    for it in range(90):
+        obj_profiles = cl_obj.step()
+        col_profiles = cl_col.step()
+        for r in range(8):
+            svc.ingest(col_profiles[r] if r % 2 else obj_profiles[r])
+        if (it + 1) % 10 == 0:
+            svc.process()
+    svc.process()
+    causes = {e.root_cause for e in svc.events}
+    assert "nic_softirq_contention" in causes
+    assert {e.straggler_rank for e in svc.events
+            if e.root_cause == "nic_softirq_contention"} == {4}

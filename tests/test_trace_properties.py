@@ -1,0 +1,76 @@
+"""Hypothesis property tests for the columnar wire codec and the
+to_columnar/to_dataclasses adapters: decode(encode(batch)) == batch over
+arbitrary batches — empty profiles, unicode frame names, multi-group
+batches, extreme ints/floats."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
+                               OSSignals, ProfileBatch, StackSample)
+from repro.core.trace import (TraceTables, decode_batch, encode_batch,
+                              to_columnar, to_dataclasses)
+
+settings.register_profile("trace", max_examples=40, deadline=None)
+settings.load_profile("trace")
+
+_name = st.text(min_size=1, max_size=12)
+_floats = st.floats(allow_nan=False, allow_infinity=False,
+                    min_value=-1e12, max_value=1e12)
+_i64 = st.integers(min_value=-(1 << 62), max_value=1 << 62)
+_small = st.integers(min_value=0, max_value=1 << 40)
+
+
+@st.composite
+def _profiles(draw):
+    rank = draw(st.integers(0, 1 << 20))
+    group = draw(_name)
+    samples = draw(st.lists(st.builds(
+        StackSample, rank=st.just(rank), timestamp=_floats,
+        frames=st.lists(_name, min_size=0, max_size=5).map(tuple),
+        weight=_i64, kind=_name), max_size=6))
+    kernels = draw(st.lists(st.builds(
+        KernelEvent, rank=st.just(rank), name=_name, start=_floats,
+        duration=_floats, stream=_i64), max_size=5))
+    colls = draw(st.lists(st.builds(
+        CollectiveEvent, rank=st.just(rank), group_id=_name, op=_name,
+        entry=_floats, exit=_floats, nbytes=_i64, device_duration=_floats,
+        instance=_i64, seq=_i64), max_size=4))
+    sig = draw(st.none() | st.builds(
+        OSSignals, rank=st.just(rank), timestamp=_floats,
+        interrupts=st.dictionaries(_name, _small, max_size=4),
+        softirq_residency=st.dictionaries(_name, _floats, max_size=3),
+        sched_latency_p99=_floats, numa_migrations=_small,
+        cpu_steal=_floats))
+    return IterationProfile(
+        rank=rank, iteration=draw(st.integers(0, 1 << 40)), group_id=group,
+        iter_time=draw(_floats), cpu_samples=samples, kernel_events=kernels,
+        collectives=colls, os_signals=sig)
+
+
+@given(st.builds(ProfileBatch, job_id=_name,
+                 profiles=st.lists(_profiles(), max_size=5),
+                 node_id=_name))
+def test_wire_codec_round_trip_property(batch):
+    assert decode_batch(encode_batch(batch)).to_dataclasses() == batch
+
+
+@given(st.builds(ProfileBatch, job_id=_name,
+                 profiles=st.lists(_profiles(), max_size=4),
+                 node_id=_name))
+def test_adapter_round_trip_property(batch):
+    assert to_dataclasses(to_columnar(batch)) == batch
+
+
+@given(st.lists(_profiles(), min_size=1, max_size=4))
+def test_decode_into_shared_tables_property(profiles):
+    """Re-mapping into a growing service table set never changes values."""
+    tables = TraceTables()
+    tables.strings.intern("pre")
+    for p in profiles:
+        out = decode_batch(encode_batch(ProfileBatch("j", [p])),
+                           tables=tables)
+        assert out.to_dataclasses().profiles[0] == p
