@@ -7,6 +7,8 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
   bench_straggler    — Fig 5  (slow-rank detection sweep)
   bench_aggregation  — §4    (10–50x volume reduction)
   bench_cases        — §5.4  (five end-to-end case studies) + Fig 2
+  bench_scenarios    — full scenario-registry matrix (every registered
+                       scenario x legacy/streaming/columnar/sharded)
   bench_service      — streaming-vs-legacy service + 1k-rank sharded fleet
   bench_trace        — columnar wire codec + encoded-vs-dataclass ingest
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
@@ -25,6 +27,7 @@ import time
 
 MODULES = [
     "benchmarks.bench_cases",
+    "benchmarks.bench_scenarios",
     "benchmarks.bench_straggler",
     "benchmarks.bench_unwind",
     "benchmarks.bench_symbols",

@@ -1,44 +1,37 @@
-"""Operator's view: run all five §5.4 production incidents through the
+"""Operator's view: run registered production incidents through the
 diagnosis pipeline and print the report an on-call engineer would read.
 
-Run:  PYTHONPATH=src python examples/diagnose_cluster.py [--case N]
+Scenarios come from the registry (`repro.core.scenarios`) — the five
+§5.4 case studies plus every production scenario registered since; see
+docs/SCENARIOS.md for the generated catalog.
+
+Run:  PYTHONPATH=src python examples/diagnose_cluster.py [--scenario NAME]
 """
 import argparse
 
 from repro.core import simcluster as sc
+from repro.core.scenarios import default_registry
 from repro.core.service import CentralService
 from repro.ft import MitigationPlanner
 
-CASES = {
-    1: ("GPU thermal throttling (rank 0 clocks down)",
-        lambda: sc.thermal_throttle(0, start=30), False),
-    2: ("NIC soft-interrupt contention (rank 4 shares a core with NET_RX)",
-        lambda: sc.nic_softirq(4, start=30), False),
-    3: ("VFS dentry-lock contention (daemon-reload on 2 nodes)",
-        lambda: sc.vfs_lock_contention([2, 3], start=30), True),
-    4: ("SLS logging verbosity DEBUG (uniform 10% slowdown)",
-        lambda: sc.logging_overhead(start=30), False),
-    5: ("Data-ingestion bottleneck (storage tier saturated)",
-        lambda: sc.io_bottleneck(start=30), False),
-}
 
-
-def run_case(n: int) -> None:
-    desc, make_fault, robust = CASES[n]
-    print(f"\n=== Case {n}: {desc} ===")
-    svc = CentralService(window=50, robust_detector=robust)
+def run_scenario(scen) -> None:
+    print(f"\n=== {scen.name}: {scen.description} ===")
+    svc = CentralService(window=50, robust_detector=scen.robust_detector)
     planner = MitigationPlanner(straggler_patience=2)
     cluster = sc.SimCluster(n_ranks=8, seed=7)
     cluster.run(svc, 30)
-    cluster.add_fault(make_fault())
+    cluster.add_fault(scen.make_fault())
     events = cluster.run(svc, 60)
     if not events:
         print("  no diagnosis produced (unexpected)")
         return
     e = events[0]
-    print(f"  detection : {'straggler rank ' + str(e.straggler_rank) if e.straggler_rank is not None else 'uniform degradation (temporal baseline)'}")
+    print(f"  detection : "
+          f"{'straggler rank ' + str(e.straggler_rank) if e.straggler_rank is not None else 'uniform degradation (temporal baseline)'}")
     print(f"  layer     : {e.verdict.layer if e.verdict else '-'}")
-    print(f"  root cause: {e.root_cause}  [{e.category}]")
+    print(f"  root cause: {e.root_cause}  [{e.category}]"
+          f"{'' if e.root_cause == scen.expected_cause else '  (EXPECTED ' + scen.expected_cause + ')'}")
     if e.verdict:
         print(f"  action    : {e.verdict.action}")
         ev = e.verdict.evidence
@@ -48,18 +41,24 @@ def run_case(n: int) -> None:
         if "per_kernel_ratio" in ev:
             for k, r in list(ev["per_kernel_ratio"].items())[:5]:
                 print(f"     x{r:.3f}  {k}")
+        if "causes" in ev:
+            for c in ev["causes"]:
+                print(f"     severity {c['severity']:6.2f}  {c['cause']}")
     for act in planner.on_diagnosis(e):
         print(f"  mitigation: {act.kind} -> nodes {list(act.target_nodes)} "
               f"({act.reason})")
 
 
 def main() -> None:
+    reg = default_registry()
+    names = [s.name for s in reg]
     ap = argparse.ArgumentParser()
-    ap.add_argument("--case", type=int, default=0,
-                    choices=[0, *sorted(CASES)], help="0 = all five")
+    ap.add_argument("--scenario", default="all", choices=["all", *names],
+                    help="one registered scenario, or all of them")
     args = ap.parse_args()
-    for n in ([args.case] if args.case else sorted(CASES)):
-        run_case(n)
+    for scen in (reg if args.scenario == "all"
+                 else [reg.get(args.scenario)]):
+        run_scenario(scen)
 
 
 if __name__ == "__main__":

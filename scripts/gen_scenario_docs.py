@@ -1,0 +1,196 @@
+#!/usr/bin/env python
+"""Generate docs/SCENARIOS.md from the scenario registry — and, with
+``--check``, act as the docs CI gate:
+
+  * regenerate and diff against the committed docs/SCENARIOS.md, so the
+    catalog can never drift from ``repro.core.scenarios``;
+  * verify every known root-cause string (registry category map + the
+    log-based SOP causes) appears in docs/RUNBOOK.md;
+  * fail on broken relative links in docs/*.md and README.md (http(s)/
+    mailto and pure-anchor links are skipped; links that resolve outside
+    the repo — e.g. GitHub UI badge paths — cannot be validated and are
+    skipped too).
+
+Usage:
+  PYTHONPATH=src python scripts/gen_scenario_docs.py          # (re)write
+  PYTHONPATH=src python scripts/gen_scenario_docs.py --check  # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core.scenarios import default_registry            # noqa: E402
+from repro.core.service import LOG_SOP_RULES                 # noqa: E402
+from repro.core.simcluster import SERVICE_PATHS              # noqa: E402
+
+SCENARIOS_MD = REPO / "docs" / "SCENARIOS.md"
+RUNBOOK_MD = REPO / "docs" / "RUNBOOK.md"
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def render() -> str:
+    reg = default_registry()
+    lines = [
+        "# Scenario catalog",
+        "",
+        "<!-- GENERATED FILE — do not edit by hand. -->",
+        "<!-- Regenerate: PYTHONPATH=src python scripts/gen_scenario_docs.py -->",
+        "",
+        "Generated from `repro.core.scenarios.default_registry()`; CI",
+        "(`scripts/gen_scenario_docs.py --check`) fails when this file",
+        "drifts from the registry.  Every scenario below is driven through",
+        f"all service paths ({', '.join(SERVICE_PATHS)}) by",
+        "`simcluster.run_scenario_matrix`, which asserts the expected",
+        "verdict per path (see `tests/test_scenarios.py` and",
+        "`benchmarks/bench_scenarios.py`).  Operator actions per verdict:",
+        "[RUNBOOK.md](RUNBOOK.md).",
+        "",
+        f"## Registered scenarios ({len(reg)})",
+        "",
+        "| scenario | fault / injected signals | layer | expected verdict "
+        "| category | straggler | remediation |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for s in reg:
+        rank = f"rank {s.expected_rank}" if s.expected_rank is not None \
+            else "none (uniform)"
+        detector = " (robust detector)" if s.robust_detector else ""
+        lines.append(
+            f"| `{s.name}` | {s.description}. *Signals:* "
+            f"{s.injected_signals or '—'} | {s.expected_layer}{detector} "
+            f"| `{s.expected_cause}` | {s.category} | {rank} "
+            f"| {reg.remediation_for(s) or '—'} |")
+
+    lines += [
+        "",
+        f"## SOP signature rules ({len(reg.sop_rules)}) — CPU-diff layer",
+        "",
+        "A rule classifies a CPU diff when *every* pattern element",
+        "substring-matches some hot function.",
+        "",
+        "| pattern | root cause | category | action |",
+        "|---|---|---|---|",
+    ]
+    for r in reg.sop_rules:
+        pat = " + ".join(f"`{p}`" for p in r.pattern)
+        lines.append(f"| {pat} | `{r.cause}` | {r.category} | {r.action} |")
+
+    lines += [
+        "",
+        f"## OS counter rules ({len(reg.os_rules)}) — OS-diff layer",
+        "",
+        "Thresholds are data on the rule, not inline constants.  A rule",
+        "fires when the straggler's counter diverges from the healthy",
+        "rank's by more than `ratio` (relative) and `min_abs_delta`",
+        "(absolute); `direction` marks gauges where degradation is a drop.",
+        "`min valid` gates on both sides reporting at least that value",
+        "(0-means-unreported gauges, e.g. a v1 agent's `cpu_freq_mhz`).",
+        "Severity = observed ratio / threshold ratio, comparable across",
+        "subsystems; all co-occurring causes are reported, ranked.",
+        "",
+        "| counter (`OSSignals` field) | ratio | min abs delta "
+        "| baseline floor | min valid | direction | root cause | category |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reg.os_rules:
+        direction = "lower is worse" if r.lower_is_worse else "higher is worse"
+        lines.append(
+            f"| `{r.field}` | {r.ratio:g}x | {r.min_abs_delta:g} "
+            f"| {r.baseline_floor:g} | {r.min_valid:g} | {direction} "
+            f"| `{r.cause}` | {r.category} |")
+
+    g, c = reg.gpu_rules, reg.cpu_rules
+    lines += [
+        "",
+        "## Layer thresholds",
+        "",
+        "| layer | threshold | value | meaning |",
+        "|---|---|---|---|",
+        f"| GPU | `slow_ratio` | {g.slow_ratio:g} | min per-kernel slowdown "
+        f"ratio to flag |",
+        f"| GPU | `uniform_cv` | {g.uniform_cv:g} | max ratio-CV for "
+        f"`{g.uniform_cause}` (above: `{g.specific_cause}`) |",
+        f"| CPU | `min_delta` | {c.min_delta:g} | min inclusive-fraction "
+        f"delta for a hot function |",
+        f"| CPU | `unclassified_min` | {c.unclassified_min:g} | min top "
+        f"delta for an unclassified `{c.fallback_cause}` verdict |",
+        f"| CPU | `confidence_scale` | {c.confidence_scale:g} | delta at "
+        f"which verdict confidence saturates to 1.0 |",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def iter_md_files():
+    yield REPO / "README.md"
+    yield from sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links() -> list:
+    errors = []
+    for md in iter_md_files():
+        text = md.read_text()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            try:
+                path.relative_to(REPO)
+            except ValueError:
+                continue        # escapes the repo (e.g. GitHub badge URLs)
+            if not path.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_runbook() -> list:
+    if not RUNBOOK_MD.exists():
+        return [f"{RUNBOOK_MD.relative_to(REPO)} missing"]
+    text = RUNBOOK_MD.read_text()
+    causes = sorted(set(default_registry().categories())
+                    | {cause for _pat, cause in LOG_SOP_RULES})
+    return [f"docs/RUNBOOK.md: no entry for root cause `{c}`"
+            for c in causes if f"`{c}`" not in text]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify generated docs + links instead of writing")
+    args = ap.parse_args()
+
+    content = render()
+    if not args.check:
+        SCENARIOS_MD.parent.mkdir(exist_ok=True)
+        SCENARIOS_MD.write_text(content)
+        print(f"wrote {SCENARIOS_MD.relative_to(REPO)}")
+        return 0
+
+    errors = []
+    if not SCENARIOS_MD.exists():
+        errors.append("docs/SCENARIOS.md missing — run "
+                      "scripts/gen_scenario_docs.py")
+    elif SCENARIOS_MD.read_text() != content:
+        errors.append("docs/SCENARIOS.md is stale — regenerate with "
+                      "PYTHONPATH=src python scripts/gen_scenario_docs.py")
+    errors += check_runbook()
+    errors += check_links()
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"docs check OK ({len(default_registry())} scenarios, "
+          f"{sum(1 for _ in iter_md_files())} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

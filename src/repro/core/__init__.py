@@ -18,7 +18,11 @@ Modules map 1:1 to the paper's mechanisms:
   stitch        — Python↔native stack stitching (§4)
   samplers      — real in-process sampling profiler (overhead benchmark)
   agent         — node agent (collection, aggregation, upload)
+  scenarios     — pluggable scenario + diagnosis-rule registry (SOP
+                  signatures, OS thresholds, fault bundles; docs are
+                  generated from it)
   service       — central analysis service (streaming, bounded state)
   sharded       — group-partitioned multi-shard ingestion front-end
-  simcluster    — multi-rank simulation + fault injection (case studies §5.4)
+  simcluster    — multi-rank simulation + pluggable fault injection
+                  (§5.4 case studies and beyond; run_scenario_matrix)
 """

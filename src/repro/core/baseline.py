@@ -73,14 +73,17 @@ class BaselineStore:
 
 
 def compare_to_baseline(current: FlameGraph, baseline: FlameGraph,
-                        delta: float = 0.005) -> List[DegradationCandidate]:
+                        delta: float = 0.005,
+                        sop_rules=None) -> List[DegradationCandidate]:
+    """``sop_rules`` overrides the signature set (a service passes its
+    pinned registry snapshot's rules); default is the live registry."""
     now = current.function_fractions()
     base = baseline.function_fractions()
     out: List[DegradationCandidate] = []
     for fn, fr in now.items():
         d = fr - base.get(fn, 0.0)
         if d > delta:
-            cls = classify_functions([fn])
+            cls = classify_functions([fn], sop_rules)
             cause, action = cls if cls else ("", "")
             out.append(DegradationCandidate(fn, fr, base.get(fn, 0.0), d,
                                             cause, action))

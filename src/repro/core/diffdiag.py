@@ -7,13 +7,25 @@ layer-by-layer differential profiles and walk them in order:
                    specific-kernel slowdown => software (operator change).
   (2) CPU diff   — if GPU matches, diff flame graphs; new hot paths reveal
                    host-side interference, classified by SOP signature rules.
-  (3) OS diff    — if CPU profiles match, compare interrupt counts,
-                   scheduler latency, NUMA migrations (signals too brief to
-                   appear in sampled flame graphs).
+  (3) OS diff    — if CPU profiles match, compare OS/node counters
+                   (interrupts, scheduler latency, NUMA migrations, major
+                   faults, link replays, core frequency, ...) — signals too
+                   brief to appear in sampled flame graphs.
+
+Every threshold and signature is *data* from the scenario registry
+(``repro.core.scenarios``): SOP signatures, per-counter OS severity
+thresholds and the GPU/CPU layer thresholds all live on registered rule
+objects; each layer function takes an optional rules override and falls
+back to ``default_registry()``.  ``SOP_RULES`` remains as the legacy
+tuple view of the default SOP set for backwards compatibility.
+
+Invariant: the walk is deterministic in its inputs and rule set — a
+service diagnoses with the frozen registry snapshot it pinned at
+construction, so verdicts are reproducible after later registrations.
 
 Each verdict carries the evidence that produced it, mirroring the paper's
-case studies (§5.4): the same inputs reproduce Cases 1–3; Cases 4–5 go
-through the temporal-baseline path (baseline.py).
+case studies (§5.4); uniform degradations go through the temporal-baseline
+path (baseline.py).
 """
 from __future__ import annotations
 
@@ -25,26 +37,23 @@ import numpy as np
 
 from repro.core.events import KernelEvent, OSSignals
 from repro.core.flamegraph import FlameGraph
+from repro.core.scenarios import (CPURules, EXTENDED_SOP_RULES, GPURules,
+                                  LEGACY_SOP_RULES, OSRule, SOPRule,
+                                  default_registry)
 
-# SOP signature rules: hot-function patterns -> root-cause class + action.
-# These mirror the paper's production rule set (§5, "log-based SOP rule
-# matching") for the CPU-diff layer.
-SOP_RULES: List[Tuple[Tuple[str, ...], str, str]] = [
-    (("net_rx_action", "napi_poll"), "nic_softirq_contention",
-     "isolate NIC interrupts from training cores via /proc/irq/*/smp_affinity"),
-    (("queued_spin_lock_slowpath",), "vfs_dentry_lock_contention",
-     "locate the dcache-invalidating service (e.g. systemctl daemon-reload)"),
-    (("SLS::LogClient::Send",), "logging_overhead",
-     "revert log verbosity (serialization on training threads)"),
-    (("protobuf::Serialize",), "logging_overhead",
-     "revert log verbosity (serialization on training threads)"),
-    (("cpfs", ), "storage_io_bottleneck",
-     "upgrade storage tier / increase data-loader parallelism"),
-    (("ossutils",), "storage_io_bottleneck",
-     "upgrade storage tier / increase data-loader parallelism"),
-    (("do_sys_openat2",), "vfs_dentry_lock_contention",
-     "locate the dcache-invalidating service"),
+__all__ = [
+    "Verdict", "SOP_RULES", "classify_functions", "per_kernel_means",
+    "gpu_diff", "cpu_diff", "os_diff", "diagnose",
 ]
+
+# Backwards-compatible tuple view of the *default* SOP registration set
+# (the paper's production rule set, §5 "log-based SOP rule matching") —
+# built from the pure constants, so its value never depends on what was
+# registered on the live registry before this module imported.  New
+# rules belong in the registry, not here.
+SOP_RULES: List[Tuple[Tuple[str, ...], str, str]] = [
+    (r.pattern, r.cause, r.action)
+    for r in LEGACY_SOP_RULES + EXTENDED_SOP_RULES]
 
 
 @dataclasses.dataclass
@@ -56,10 +65,16 @@ class Verdict:
     action: str = ""
 
 
-def classify_functions(functions: Sequence[str]) -> Optional[Tuple[str, str]]:
-    for pattern, cause, action in SOP_RULES:
-        if all(any(p in fn for fn in functions) for p in pattern):
-            return cause, action
+def classify_functions(functions: Sequence[str],
+                       rules: Optional[Sequence[SOPRule]] = None
+                       ) -> Optional[Tuple[str, str]]:
+    """First SOP rule whose every pattern element substring-matches some
+    hot function -> (cause, action); None when nothing matches."""
+    if rules is None:
+        rules = default_registry().sop_rules
+    for rule in rules:
+        if all(any(p in fn for fn in functions) for p in rule.pattern):
+            return rule.cause, rule.action
     return None
 
 
@@ -91,8 +106,9 @@ def per_kernel_means(evs) -> Dict[str, float]:
 
 
 def gpu_diff(straggler: Sequence[KernelEvent], healthy: Sequence[KernelEvent],
-             uniform_cv: float = 0.05, slow_ratio: float = 1.02
-             ) -> Optional[Verdict]:
+             rules: Optional[GPURules] = None) -> Optional[Verdict]:
+    if rules is None:
+        rules = default_registry().gpu_rules
     a, b = per_kernel_means(straggler), per_kernel_means(healthy)
     common = sorted(set(a) & set(b))
     if not common:
@@ -102,20 +118,20 @@ def gpu_diff(straggler: Sequence[KernelEvent], healthy: Sequence[KernelEvent],
     med = statistics.median(vals)
     cv = (statistics.pstdev(vals) / med) if med > 0 else 0.0
 
-    if med >= slow_ratio and cv <= uniform_cv:
+    if med >= rules.slow_ratio and cv <= rules.uniform_cv:
         return Verdict(
-            layer="gpu", root_cause="gpu_uniform_slowdown",
+            layer="gpu", root_cause=rules.uniform_cause,
             confidence=min(1.0, (med - 1) * 20),
             evidence={"median_ratio": med, "ratio_cv": cv,
                       "kernels": len(common), "per_kernel_ratio": ratios},
-            action="check DCGM clocks/thermals (frequency reduction)")
-    slow = {k: r for k, r in ratios.items() if r >= slow_ratio}
-    if slow and med < slow_ratio:
+            action=rules.uniform_action)
+    slow = {k: r for k, r in ratios.items() if r >= rules.slow_ratio}
+    if slow and med < rules.slow_ratio:
         return Verdict(
-            layer="gpu", root_cause="gpu_specific_kernels_slow",
+            layer="gpu", root_cause=rules.specific_cause,
             confidence=0.8,
             evidence={"slow_kernels": slow, "median_ratio": med},
-            action="inspect recent operator/kernel changes")
+            action=rules.specific_action)
     return None  # GPU profiles match -> descend to CPU layer
 
 
@@ -125,17 +141,28 @@ def gpu_diff(straggler: Sequence[KernelEvent], healthy: Sequence[KernelEvent],
 
 
 def cpu_diff(straggler: FlameGraph, healthy: FlameGraph,
-             min_delta: float = 0.005) -> Optional[Verdict]:
+             rules: Optional[CPURules] = None,
+             sop_rules: Optional[Sequence[SOPRule]] = None
+             ) -> Optional[Verdict]:
+    if rules is None:
+        rules = default_registry().cpu_rules
     deltas = straggler.diff(healthy)
-    hot = {fn: d for fn, d in deltas.items() if d >= min_delta}
+    hot = {fn: d for fn, d in deltas.items() if d >= rules.min_delta}
     if not hot:
         return None
-    cls = classify_functions(list(hot))
-    cause, action = cls if cls else (
-        "cpu_host_interference", "inspect divergent host-side code paths")
+    cls = classify_functions(list(hot), sop_rules)
+    if cls:
+        cause, action = cls
+    else:
+        # unexplained diffuse deltas: only a real CPU-layer diagnosis
+        # above the (higher) unclassified floor; below it the walk
+        # descends to the OS layer instead of crying wolf on noise
+        if max(hot.values()) < rules.unclassified_min:
+            return None
+        cause, action = rules.fallback_cause, rules.fallback_action
     return Verdict(
         layer="cpu", root_cause=cause,
-        confidence=min(1.0, max(hot.values()) / 0.02),
+        confidence=min(1.0, max(hot.values()) / rules.confidence_scale),
         evidence={"hot_deltas": dict(sorted(hot.items(), key=lambda kv: -kv[1])[:12])},
         action=action)
 
@@ -145,47 +172,74 @@ def cpu_diff(straggler: FlameGraph, healthy: FlameGraph,
 # ---------------------------------------------------------------------------
 
 
-def os_diff(straggler: OSSignals, healthy: OSSignals,
-            irq_ratio: float = 2.0, sched_ratio: float = 2.0,
-            numa_ratio: float = 4.0) -> Optional[Verdict]:
-    """Compare OS counters; every divergent subsystem becomes a cause.
+def _eval_scalar(rule: OSRule, s: float, h: float
+                 ) -> Optional[Tuple[float, Tuple[float, float]]]:
+    """(severity, (straggler, healthy)) when the rule fires, else None."""
+    if s < rule.min_valid or h < rule.min_valid:
+        return None     # one side unreported (schema default): no verdict
+    if rule.lower_is_worse:
+        worse, base = h, s
+    else:
+        worse, base = s, h
+    floor = max(base, rule.baseline_floor)
+    if worse > floor * rule.ratio and worse - base > rule.min_abs_delta:
+        return worse / floor / rule.ratio, (s, h)
+    return None
 
-    Co-occurring signals (an IRQ storm usually drags scheduler latency up
-    with it) are ALL reported, ranked by severity — the measured ratio
-    normalized by that signal's own detection threshold, so severities are
-    comparable across subsystems.  ``root_cause`` is the top-ranked cause;
-    ``evidence["causes"]`` carries the full ranking."""
+
+def os_diff(straggler: OSSignals, healthy: OSSignals,
+            rules: Optional[Sequence[OSRule]] = None) -> Optional[Verdict]:
+    """Compare OS/node counters; every divergent subsystem becomes a cause.
+
+    Each registered :class:`~repro.core.scenarios.OSRule` carries its own
+    thresholds (ratio, absolute floor, direction).  Co-occurring signals
+    (an IRQ storm usually drags scheduler latency up with it) are ALL
+    reported, ranked by severity — the measured ratio normalized by that
+    rule's own threshold, so severities are comparable across subsystems.
+    ``root_cause`` is the top-ranked cause; ``evidence["causes"]`` carries
+    the full ranking."""
+    if rules is None:
+        rules = default_registry().os_rules
     evidence: Dict[str, object] = {}
-    scored: List[Tuple[float, str]] = []
-    worst_irq = 0.0
-    for irq, cnt in straggler.interrupts.items():
-        base = healthy.interrupts.get(irq, 0)
-        if cnt > max(base, 1) * irq_ratio and cnt - base > 1000:
-            worst_irq = max(worst_irq, cnt / max(base, 1))
-            evidence[f"irq:{irq}"] = (cnt, base)
-    if worst_irq:
-        scored.append((worst_irq / irq_ratio, "irq_imbalance"))
-    sched = straggler.sched_latency_p99
-    sched_base = max(healthy.sched_latency_p99, 1e-6)
-    if sched > sched_base * sched_ratio:
-        scored.append((sched / sched_base / sched_ratio,
-                       "scheduler_contention"))
-        evidence["sched_latency_p99"] = (straggler.sched_latency_p99,
-                                         healthy.sched_latency_p99)
-    numa_base = max(healthy.numa_migrations, 1)
-    if straggler.numa_migrations > numa_base * numa_ratio:
-        scored.append((straggler.numa_migrations / numa_base / numa_ratio,
-                       "numa_migration_storm"))
-        evidence["numa_migrations"] = (straggler.numa_migrations,
-                                       healthy.numa_migrations)
+    scored: List[Tuple[float, OSRule]] = []
+    for rule in rules:
+        s = getattr(straggler, rule.field, None)
+        h = getattr(healthy, rule.field, None)
+        if s is None or h is None:
+            continue
+        key = rule.evidence_key or rule.field
+        if isinstance(s, dict):
+            worst = 0.0
+            # union of keys, straggler order first: a counter that exists
+            # only on the healthy side is the *extreme* case for a
+            # lower-is-worse rule (the signal vanished) and must still
+            # evaluate; for higher-is-worse rules a missing straggler key
+            # can never fire, so legacy behaviour is unchanged
+            counters = list(s) + [c for c in h if c not in s]
+            for counter in counters:
+                hit = _eval_scalar(rule, s.get(counter, 0),
+                                   h.get(counter, 0))
+                if hit is not None:
+                    severity, pair = hit
+                    worst = max(worst, severity)
+                    evidence[f"{key}:{counter}"] = pair
+            if worst:
+                scored.append((worst, rule))
+        else:
+            hit = _eval_scalar(rule, s, h)
+            if hit is not None:
+                severity, pair = hit
+                scored.append((severity, rule))
+                evidence[key] = pair
     if not scored:
         return None
-    scored.sort(key=lambda sc: -sc[0])       # stable: ties keep walk order
+    scored.sort(key=lambda sc: -sc[0])       # stable: ties keep rule order
     evidence["causes"] = [
-        {"cause": cause, "severity": round(sev, 3)} for sev, cause in scored]
-    return Verdict(layer="os", root_cause=scored[0][1], confidence=0.7,
-                   evidence=evidence,
-                   action="inspect /proc/interrupts binding and cgroup shares")
+        {"cause": rule.cause, "severity": round(sev, 3)}
+        for sev, rule in scored]
+    top = scored[0][1]
+    return Verdict(layer="os", root_cause=top.cause, confidence=0.7,
+                   evidence=evidence, action=top.action)
 
 
 # ---------------------------------------------------------------------------
@@ -196,15 +250,23 @@ def os_diff(straggler: OSSignals, healthy: OSSignals,
 def diagnose(straggler_kernels, healthy_kernels,
              straggler_cpu: FlameGraph, healthy_cpu: FlameGraph,
              straggler_os: Optional[OSSignals] = None,
-             healthy_os: Optional[OSSignals] = None) -> Verdict:
-    v = gpu_diff(straggler_kernels, healthy_kernels)
+             healthy_os: Optional[OSSignals] = None,
+             registry=None) -> Verdict:
+    """Walk the layers in order with one rule source.  ``registry`` is
+    any object exposing ``gpu_rules``/``cpu_rules``/``os_rules``/
+    ``sop_rules`` (a ``ScenarioRegistry`` or a frozen snapshot); default
+    is the process-wide registry."""
+    if registry is None:
+        registry = default_registry()
+    v = gpu_diff(straggler_kernels, healthy_kernels, registry.gpu_rules)
     if v:
         return v
-    v = cpu_diff(straggler_cpu, healthy_cpu)
+    v = cpu_diff(straggler_cpu, healthy_cpu, registry.cpu_rules,
+                 registry.sop_rules)
     if v:
         return v
     if straggler_os and healthy_os:
-        v = os_diff(straggler_os, healthy_os)
+        v = os_diff(straggler_os, healthy_os, registry.os_rules)
         if v:
             return v
     return Verdict(layer="inconclusive", root_cause="unknown", confidence=0.0,

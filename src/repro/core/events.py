@@ -64,7 +64,13 @@ class CollectiveEvent:
 @dataclasses.dataclass(frozen=True)
 class OSSignals:
     """OS-subsystem counters for the OS-diff layer (§3.1): brief,
-    high-frequency events that sampled flame graphs miss."""
+    high-frequency events that sampled flame graphs miss.
+
+    The extended node-level counters (``major_faults`` through
+    ``numa_remote_ratio``) ride the same collection path: host-visible
+    gauges a node exporter reads per window (vmstat, cpufreq, DCGM/PCIe
+    error counters, numastat).  They default to zero/absent so SYTC-v1
+    wire payloads — which predate them — decode losslessly."""
     rank: int
     timestamp: float
     interrupts: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -72,6 +78,12 @@ class OSSignals:
     sched_latency_p99: float = 0.0
     numa_migrations: int = 0
     cpu_steal: float = 0.0
+    # extended counters (SYTC-v2): see docs/WIRE_FORMAT.md
+    major_faults: int = 0            # major page faults (swap-in) per window
+    cpu_freq_mhz: float = 0.0        # effective core frequency (0 = unknown)
+    pcie_replays: int = 0            # PCIe/NVLink replay + CRC error count
+    ecc_remapped_rows: int = 0       # GPU ECC row-remap events observed
+    numa_remote_ratio: float = 0.0   # fraction of remote-node memory accesses
 
 
 @dataclasses.dataclass

@@ -1,0 +1,543 @@
+"""Pluggable scenario + diagnosis-rule registry.
+
+SysOM-AI's production value came from covering *many* failure modes (94
+confirmed issues), far beyond the five §5.4 case studies — coverage grew
+by adding signatures and scenarios incrementally, which demands an
+extensible registry rather than baked-in constants.  This module is that
+registry:
+
+  * :class:`SOPRule` — CPU-diff hot-function signature -> root cause +
+    remediation (the paper's "log-based SOP rule matching" for §3.1's
+    CPU layer and the temporal-baseline path).
+  * :class:`OSRule` — one OS/node counter with its *own* severity
+    thresholds (divergence ratio, absolute floor, direction) as data,
+    not inline magic numbers; drives ``diffdiag.os_diff``.
+  * :class:`GPURules` / :class:`CPURules` — threshold sets for the GPU-
+    and CPU-diff layers.
+  * :class:`Scenario` — a fault injector bundled with the verdict it
+    must produce (expected root cause, layer, category, straggler rank)
+    plus the catalog/runbook prose; driven end-to-end by
+    ``simcluster.run_scenario_matrix``.
+  * :class:`ScenarioRegistry` — holds all of the above plus the root
+    cause -> Fig 2 category map.  ``default_registry()`` ships the five
+    §5.4 case studies and six further production scenarios.
+
+Invariants:
+
+  * Registration is validated eagerly: duplicate scenario names, empty
+    SOP signatures, empty rule fields and conflicting cause->category
+    mappings raise :class:`RegistryError` at registration time, never at
+    diagnosis time.
+  * A running service is isolated from later registrations: services
+    take an immutable :meth:`ScenarioRegistry.snapshot` at construction,
+    so the rule set that produced a diagnosis is fixed for the service's
+    lifetime (register scenarios first, then start services).
+  * The default registry is a process-wide singleton; ``snapshot()``
+    copies are frozen (``register_*`` raises).
+
+Docs are generated from this registry (``scripts/gen_scenario_docs.py``
+renders ``docs/SCENARIOS.md``; CI fails if the two drift).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.events import OSSignals
+
+if TYPE_CHECKING:               # the rule layer must be importable without
+    from repro.core import simcluster as sc   # pulling in the simulator
+
+__all__ = [
+    "SOPRule", "OSRule", "GPURules", "CPURules", "Scenario",
+    "RegistryError", "ScenarioRegistry", "build_default_registry",
+    "default_registry", "LEGACY_CATEGORIES",
+    "LEGACY_SOP_RULES", "EXTENDED_SOP_RULES",
+    "LEGACY_OS_RULES", "EXTENDED_OS_RULES",
+]
+
+
+class RegistryError(ValueError):
+    """Invalid registration: duplicate name, empty signature/field, or a
+    conflicting cause->category mapping; also raised on mutation of a
+    frozen snapshot."""
+
+
+# ---------------------------------------------------------------------------
+# rule types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SOPRule:
+    """CPU-diff signature: every ``pattern`` element must appear as a
+    substring of some hot function for the rule to classify the diff."""
+    pattern: Tuple[str, ...]
+    cause: str
+    action: str
+    category: str = "software"
+
+
+@dataclasses.dataclass(frozen=True)
+class OSRule:
+    """One OS/node counter comparison with its severity thresholds as
+    data (the former inline magic numbers of ``os_diff``).
+
+    A rule fires when the straggler's counter diverges from the healthy
+    rank's by more than ``ratio`` (relative) *and* ``min_abs_delta``
+    (absolute).  ``baseline_floor`` guards the ratio against ~zero
+    healthy baselines; ``lower_is_worse`` inverts the comparison for
+    gauges where degradation shows as a *drop* (e.g. core frequency).
+    ``min_valid`` gates the comparison on BOTH sides reporting at least
+    that value — gauges whose schema default (0) means "unreported"
+    (e.g. ``cpu_freq_mhz`` from a v1 agent) must set it, or a missing
+    reading would read as an extreme divergence.  Dict-valued fields
+    (``interrupts``) are compared per key.  Severity is the observed
+    ratio normalized by ``ratio``, so severities are comparable across
+    subsystems.
+    """
+    cause: str
+    field: str                       # OSSignals attribute name
+    ratio: float
+    min_abs_delta: float = 0.0
+    baseline_floor: float = 1.0
+    lower_is_worse: bool = False
+    min_valid: float = 0.0           # both sides must report >= this
+    evidence_key: str = ""           # evidence prefix; defaults to field
+    action: str = ""
+    category: str = "os_interference"
+
+
+@dataclasses.dataclass(frozen=True)
+class GPURules:
+    """GPU-diff layer thresholds (§3.1 layer 1)."""
+    uniform_cv: float = 0.05         # max ratio-CV for "uniform" slowdown
+    slow_ratio: float = 1.02         # min per-kernel slowdown ratio
+    uniform_cause: str = "gpu_uniform_slowdown"
+    uniform_action: str = "check DCGM clocks/thermals (frequency reduction)"
+    specific_cause: str = "gpu_specific_kernels_slow"
+    specific_action: str = "inspect recent operator/kernel changes"
+
+
+@dataclasses.dataclass(frozen=True)
+class CPURules:
+    """CPU-diff layer thresholds (§3.1 layer 2).
+
+    ``min_delta`` admits a function into the hot set; an *unclassified*
+    diff (no SOP rule matches) additionally needs one delta >=
+    ``unclassified_min`` — diffuse sampling noise below that is not a
+    CPU-layer diagnosis and the walk descends to the OS layer.
+    ``confidence_scale`` is the delta at which a verdict saturates to
+    confidence 1.0 (independent of the noise floor, so raising
+    ``unclassified_min`` does not deflate SOP-classified verdicts)."""
+    min_delta: float = 0.005
+    unclassified_min: float = 0.02
+    confidence_scale: float = 0.02
+    fallback_cause: str = "cpu_host_interference"
+    fallback_action: str = "inspect divergent host-side code paths"
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A fault injector bundled with the diagnosis it must produce."""
+    name: str
+    description: str
+    make_fault: Callable[[], "sc.Fault"]
+    expected_cause: str
+    expected_layer: str              # gpu | cpu | os | temporal
+    category: str                    # Fig 2 taxonomy bucket
+    expected_rank: Optional[int] = None   # None = no pinned straggler
+    robust_detector: bool = False
+    injected_signals: str = ""       # catalog: what the fault perturbs
+    # runbook: first operator action; "" derives it from the detecting
+    # rule's action via ScenarioRegistry.remediation_for
+    remediation: str = ""
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+# Fig 2 taxonomy for causes not introduced by a rule or scenario (kept as
+# the seed set every registry starts from; service.CATEGORY_BY_CAUSE is a
+# backwards-compatible alias).
+LEGACY_CATEGORIES: Dict[str, str] = {
+    "gpu_uniform_slowdown": "gpu_hardware",
+    "gpu_specific_kernels_slow": "software",
+    "nic_softirq_contention": "os_interference",
+    "vfs_dentry_lock_contention": "os_interference",
+    "scheduler_contention": "os_interference",
+    "irq_imbalance": "os_interference",
+    "numa_migration_storm": "os_interference",
+    "logging_overhead": "software",
+    "storage_io_bottleneck": "software",
+    "network_slow_collective": "network",
+    "cpu_host_interference": "os_interference",
+    "unknown": "unknown",
+}
+
+
+class ScenarioRegistry:
+    """Scenarios + the rule sets that diagnose them, with eager
+    validation (see module docstring for the registration invariants)."""
+
+    def __init__(self):
+        self._scenarios: "Dict[str, Scenario]" = {}
+        self._sop_rules: List[SOPRule] = []
+        self._os_rules: List[OSRule] = []
+        self._gpu_rules = GPURules()
+        self._cpu_rules = CPURules()
+        self._categories: Dict[str, str] = dict(LEGACY_CATEGORIES)
+        self._frozen = False
+
+    # -- registration -------------------------------------------------------
+    def _check_mutable(self) -> None:
+        if self._frozen:
+            raise RegistryError(
+                "registry snapshot is frozen (services snapshot their "
+                "registry at construction); register on the live registry "
+                "before starting services")
+
+    def _merge_category(self, cause: str, category: str) -> None:
+        prev = self._categories.get(cause)
+        if prev is not None and prev != category:
+            raise RegistryError(
+                f"cause {cause!r} already mapped to category {prev!r}, "
+                f"refusing to remap to {category!r}")
+        self._categories[cause] = category
+
+    def register_scenario(self, scenario: Scenario) -> Scenario:
+        self._check_mutable()
+        if not scenario.name:
+            raise RegistryError("scenario name must be non-empty")
+        if scenario.name in self._scenarios:
+            raise RegistryError(
+                f"duplicate scenario name {scenario.name!r}")
+        if not scenario.expected_cause:
+            raise RegistryError(
+                f"scenario {scenario.name!r} needs an expected_cause")
+        self._merge_category(scenario.expected_cause, scenario.category)
+        self._scenarios[scenario.name] = scenario
+        return scenario
+
+    def register_sop_rule(self, rule: SOPRule) -> SOPRule:
+        self._check_mutable()
+        if not rule.pattern or any(not p for p in rule.pattern):
+            raise RegistryError(
+                f"SOP rule for {rule.cause!r} has an empty signature")
+        if not rule.cause:
+            raise RegistryError("SOP rule needs a non-empty cause")
+        self._merge_category(rule.cause, rule.category)
+        self._sop_rules.append(rule)
+        return rule
+
+    def register_os_rule(self, rule: OSRule) -> OSRule:
+        self._check_mutable()
+        if not rule.field or not rule.cause:
+            raise RegistryError("OS rule needs non-empty field and cause")
+        if rule.ratio <= 0:
+            raise RegistryError(
+                f"OS rule {rule.cause!r} needs a positive ratio")
+        if rule.field not in OSSignals.__dataclass_fields__:
+            raise RegistryError(
+                f"OS rule {rule.cause!r} targets unknown OSSignals field "
+                f"{rule.field!r} (a typo would be silently skipped at "
+                f"diagnosis time)")
+        self._merge_category(rule.cause, rule.category)
+        self._os_rules.append(rule)
+        return rule
+
+    def set_gpu_rules(self, rules: GPURules) -> None:
+        self._check_mutable()
+        self._gpu_rules = rules
+
+    def set_cpu_rules(self, rules: CPURules) -> None:
+        self._check_mutable()
+        self._cpu_rules = rules
+
+    # -- views --------------------------------------------------------------
+    @property
+    def scenarios(self) -> Tuple[Scenario, ...]:
+        return tuple(self._scenarios.values())
+
+    @property
+    def sop_rules(self) -> Tuple[SOPRule, ...]:
+        return tuple(self._sop_rules)
+
+    @property
+    def os_rules(self) -> Tuple[OSRule, ...]:
+        return tuple(self._os_rules)
+
+    @property
+    def gpu_rules(self) -> GPURules:
+        return self._gpu_rules
+
+    @property
+    def cpu_rules(self) -> CPURules:
+        return self._cpu_rules
+
+    def get(self, name: str) -> Optional[Scenario]:
+        return self._scenarios.get(name)
+
+    def category_for(self, cause: str) -> str:
+        return self._categories.get(cause, "unknown")
+
+    def remediation_for(self, scenario: Scenario) -> str:
+        """Operator action for a scenario: its own ``remediation`` when
+        set, else derived from the rule that detects its expected cause —
+        so catalog/runbook prose can never desynchronize from the action
+        the live ``Verdict`` actually carries."""
+        if scenario.remediation:
+            return scenario.remediation
+        cause = scenario.expected_cause
+        for rules in (self._sop_rules, self._os_rules):
+            for r in rules:
+                if r.cause == cause and r.action:
+                    return r.action
+        g = self._gpu_rules
+        if cause == g.uniform_cause:
+            return g.uniform_action
+        if cause == g.specific_cause:
+            return g.specific_action
+        if cause == self._cpu_rules.fallback_cause:
+            return self._cpu_rules.fallback_action
+        return ""
+
+    def categories(self) -> Dict[str, str]:
+        return dict(self._categories)
+
+    def __iter__(self) -> Iterator[Scenario]:
+        return iter(self._scenarios.values())
+
+    def __len__(self) -> int:
+        return len(self._scenarios)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._scenarios
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    def snapshot(self) -> "ScenarioRegistry":
+        """Frozen copy: what a service pins at construction.  Later
+        registrations on the source never reach the copy."""
+        out = ScenarioRegistry()
+        out._scenarios = dict(self._scenarios)
+        out._sop_rules = list(self._sop_rules)
+        out._os_rules = list(self._os_rules)
+        out._gpu_rules = self._gpu_rules
+        out._cpu_rules = self._cpu_rules
+        out._categories = dict(self._categories)
+        out._frozen = True
+        return out
+
+
+# ---------------------------------------------------------------------------
+# default registration set
+# ---------------------------------------------------------------------------
+
+#: The frozen SOP_RULES list of the pre-registry diffdiag, verbatim.
+LEGACY_SOP_RULES: Tuple[SOPRule, ...] = (
+    SOPRule(("net_rx_action", "napi_poll"), "nic_softirq_contention",
+            "isolate NIC interrupts from training cores via "
+            "/proc/irq/*/smp_affinity", category="os_interference"),
+    SOPRule(("queued_spin_lock_slowpath",), "vfs_dentry_lock_contention",
+            "locate the dcache-invalidating service "
+            "(e.g. systemctl daemon-reload)", category="os_interference"),
+    SOPRule(("SLS::LogClient::Send",), "logging_overhead",
+            "revert log verbosity (serialization on training threads)"),
+    SOPRule(("protobuf::Serialize",), "logging_overhead",
+            "revert log verbosity (serialization on training threads)"),
+    SOPRule(("cpfs",), "storage_io_bottleneck",
+            "upgrade storage tier / increase data-loader parallelism"),
+    SOPRule(("ossutils",), "storage_io_bottleneck",
+            "upgrade storage tier / increase data-loader parallelism"),
+    SOPRule(("do_sys_openat2",), "vfs_dentry_lock_contention",
+            "locate the dcache-invalidating service",
+            category="os_interference"),
+)
+
+#: The former inline thresholds of ``os_diff`` as data, verbatim:
+#: irq 2x + 1000 absolute, scheduler 2x, NUMA migrations 4x.
+_LEGACY_OS_ACTION = "inspect /proc/interrupts binding and cgroup shares"
+LEGACY_OS_RULES: Tuple[OSRule, ...] = (
+    OSRule(cause="irq_imbalance", field="interrupts", ratio=2.0,
+           min_abs_delta=1000, evidence_key="irq",
+           action=_LEGACY_OS_ACTION),
+    OSRule(cause="scheduler_contention", field="sched_latency_p99",
+           ratio=2.0, baseline_floor=1e-6, action=_LEGACY_OS_ACTION),
+    OSRule(cause="numa_migration_storm", field="numa_migrations",
+           ratio=4.0, action=_LEGACY_OS_ACTION),
+)
+
+#: Rules for the extended (SYTC-v2) node counters.
+EXTENDED_OS_RULES: Tuple[OSRule, ...] = (
+    OSRule(cause="memory_pressure_swap", field="major_faults",
+           ratio=8.0, min_abs_delta=100,
+           action="raise the memory cgroup limit / evict the co-located "
+                  "memory hog; verify swap is disabled on training nodes"),
+    OSRule(cause="pcie_link_degradation", field="pcie_replays",
+           ratio=4.0, min_abs_delta=50, category="gpu_hardware",
+           action="drain the node and reseat/replace the PCIe riser or "
+                  "NVLink bridge; check nvidia-smi link width/speed"),
+    OSRule(cause="cpu_frequency_downclock", field="cpu_freq_mhz",
+           ratio=1.4, min_abs_delta=200, lower_is_worse=True,
+           min_valid=100.0,   # 0 means "frequency unreported" (v1 agents)
+           action="set the cpufreq governor to performance; check BIOS "
+                  "power profile and PSU/thermal events"),
+    OSRule(cause="ecc_row_remap_stall", field="ecc_remapped_rows",
+           ratio=4.0, min_abs_delta=4, category="gpu_hardware",
+           action="schedule GPU replacement; drain the rank at the next "
+                  "checkpoint before the remap budget is exhausted"),
+    OSRule(cause="numa_remote_allocation", field="numa_remote_ratio",
+           ratio=5.0, min_abs_delta=0.2, baseline_floor=0.01,
+           action="bind dataloader workers and pinned buffers to the "
+                  "GPU-local NUMA node (numactl --membind)"),
+)
+
+#: SOP signatures beyond the paper's frozen list.
+EXTENDED_SOP_RULES: Tuple[SOPRule, ...] = (
+    SOPRule(("py::_worker_queue_get",), "dataloader_starvation",
+            "raise dataloader worker count / prefetch depth; check input "
+            "storage throughput"),
+)
+
+
+def _default_scenarios() -> Tuple[Scenario, ...]:
+    # imported here, not at module level: the rule layer (diffdiag ->
+    # scenarios) stays importable without the simulator; only *building*
+    # the default registry touches the fault factories
+    from repro.core import simcluster as sc
+    return (
+        # -- the five §5.4 case studies ------------------------------------
+        Scenario(
+            name="gpu_thermal_throttle",
+            description="One GPU clocks down ~7.5% under a thermal/power "
+                        "cap (§5.4 Case 1)",
+            make_fault=lambda: sc.thermal_throttle(0),
+            expected_cause="gpu_uniform_slowdown", expected_layer="gpu",
+            category="gpu_hardware", expected_rank=0,
+            injected_signals="all kernel durations x1.075 on the rank"),
+        Scenario(
+            name="nic_softirq_contention",
+            description="NET_RX soft interrupts share the training cores "
+                        "of one rank (§5.4 Case 2)",
+            make_fault=lambda: sc.nic_softirq(4),
+            expected_cause="nic_softirq_contention", expected_layer="cpu",
+            category="os_interference", expected_rank=4,
+            injected_signals="net_rx_action/napi_poll stacks (~1.7% CPU), "
+                             "NET_RX irq count x~45, sched latency x4"),
+        Scenario(
+            name="vfs_dentry_lock_contention",
+            description="A daemon-reload invalidates the dcache; opens "
+                        "serialize on the dentry lock on two nodes "
+                        "(§5.4 Case 3)",
+            make_fault=lambda: sc.vfs_lock_contention([2, 3]),
+            expected_cause="vfs_dentry_lock_contention", expected_layer="cpu",
+            category="os_interference", expected_rank=None,
+            robust_detector=True,
+            injected_signals="queued_spin_lock_slowpath stacks dominate, "
+                             "sched latency x8, iteration x1.6"),
+        Scenario(
+            name="logging_overhead",
+            description="DEBUG log verbosity serializes protobufs on every "
+                        "training thread (§5.4 Case 4)",
+            make_fault=lambda: sc.logging_overhead(),
+            expected_cause="logging_overhead", expected_layer="temporal",
+            category="software", expected_rank=None,
+            injected_signals="SLS::LogClient::Send stacks (~10% CPU) on "
+                             "every rank, uniform +10% iteration time"),
+        Scenario(
+            name="storage_io_bottleneck",
+            description="Saturated storage tier stalls every data loader "
+                        "(§5.4 Case 5)",
+            make_fault=lambda: sc.io_bottleneck(),
+            expected_cause="storage_io_bottleneck", expected_layer="temporal",
+            category="software", expected_rank=None,
+            injected_signals="cpfs/ossutils client stacks (~12% CPU) on "
+                             "every rank, uniform +30% iteration time"),
+        # -- production scenarios beyond the case studies ------------------
+        Scenario(
+            name="dataloader_starvation",
+            description="Input pipeline starves the step: every rank "
+                        "blocks on an empty prefetch queue",
+            make_fault=lambda: sc.dataloader_starvation(),
+            expected_cause="dataloader_starvation", expected_layer="temporal",
+            category="software", expected_rank=None,
+            injected_signals="py::_worker_queue_get/pthread_cond_timedwait "
+                             "stacks (~10% CPU), uniform +20% iteration time"),
+        Scenario(
+            name="memory_pressure_swap",
+            description="A co-located process pushes one node into swap; "
+                        "the trainer takes major page faults",
+            make_fault=lambda: sc.swap_thrash(1),
+            expected_cause="memory_pressure_swap", expected_layer="os",
+            category="os_interference", expected_rank=1,
+            injected_signals="major_faults ~6000/window (healthy <5), "
+                             "+1.5ms collective entry delay"),
+        Scenario(
+            name="pcie_link_degradation",
+            description="One GPU's PCIe/NVLink link retrains at reduced "
+                        "width; transfers replay",
+            make_fault=lambda: sc.pcie_link_degradation(3),
+            expected_cause="pcie_link_degradation", expected_layer="os",
+            category="gpu_hardware", expected_rank=3,
+            injected_signals="pcie_replays ~600/window (healthy <3), "
+                             "+1.2ms collective entry delay"),
+        Scenario(
+            name="cpu_frequency_downclock",
+            description="Frequency governor drops one node's cores to "
+                        "1.2GHz (powersave / failed turbo)",
+            make_fault=lambda: sc.cpu_downclock(5),
+            expected_cause="cpu_frequency_downclock", expected_layer="os",
+            category="os_interference", expected_rank=5,
+            injected_signals="cpu_freq_mhz 2600 -> ~1200, +2ms collective "
+                             "entry delay"),
+        Scenario(
+            name="ecc_row_remap_stall",
+            description="GPU ECC row-remap events stall one rank between "
+                        "kernels; kernel timings stay clean",
+            make_fault=lambda: sc.ecc_row_remap(6),
+            expected_cause="ecc_row_remap_stall", expected_layer="os",
+            category="gpu_hardware", expected_rank=6,
+            injected_signals="ecc_remapped_rows 0 -> 8, +1ms collective "
+                             "entry delay"),
+        Scenario(
+            name="numa_remote_allocation",
+            description="Dataloader workers pinned to the wrong socket; "
+                        "memory traffic crosses the interconnect",
+            make_fault=lambda: sc.numa_remote_alloc(2),
+            expected_cause="numa_remote_allocation", expected_layer="os",
+            category="os_interference", expected_rank=2,
+            injected_signals="numa_remote_ratio ~0.03 -> ~0.6, +0.8ms "
+                             "collective entry delay"),
+    )
+
+
+def build_default_registry() -> ScenarioRegistry:
+    """A fresh registry seeded with the full default registration set:
+    legacy + extended rules, five §5.4 case studies, six production
+    scenarios."""
+    reg = ScenarioRegistry()
+    for rule in LEGACY_SOP_RULES + EXTENDED_SOP_RULES:
+        reg.register_sop_rule(rule)
+    for os_rule in LEGACY_OS_RULES + EXTENDED_OS_RULES:
+        reg.register_os_rule(os_rule)
+    for scen in _default_scenarios():
+        reg.register_scenario(scen)
+    return reg
+
+
+_DEFAULT: Optional[ScenarioRegistry] = None
+
+
+def default_registry() -> ScenarioRegistry:
+    """The process-wide registry (built on first use).  Live — downstream
+    users may register additional scenarios/rules *before* starting
+    services; every service pins a frozen snapshot at construction."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = build_default_registry()
+    return _DEFAULT

@@ -20,6 +20,22 @@ do (§5: 80k+ GPUs, minutes-not-days).  ``streaming=False`` preserves the
 original batch shape (grow-forever history, per-cycle
 ``FlameGraph.from_samples`` rebuilds) for the old-vs-new benchmark in
 ``benchmarks/bench_service.py``.
+
+Invariants:
+
+  * Ingest-representation equivalence: a profile produces the same
+    diagnoses whether ingested as an ``IterationProfile`` dataclass, a
+    native ``ColumnarProfile``, or a wire-encoded batch via
+    ``ingest_encoded`` — asserted for every registered scenario across
+    the legacy/streaming/columnar/sharded paths
+    (``simcluster.run_scenario_matrix``).
+  * Registry immutability after service start: the service pins a frozen
+    ``ScenarioRegistry.snapshot()`` at construction (``self.rules``);
+    scenarios or rules registered later in the process never change what
+    a running service diagnoses.
+  * Bounded state: per-group state is evicted after ``group_ttl_s`` idle,
+    baselines are LRU-bounded, and streaming accumulators are decayed —
+    memory tracks the *live* fleet, not ingest history.
 """
 from __future__ import annotations
 
@@ -34,27 +50,20 @@ from repro.core.diffdiag import Verdict, diagnose
 from repro.core.events import (CollectiveEvent, IterationProfile,
                                ProfileBatch)
 from repro.core.flamegraph import FlameGraph
+from repro.core.scenarios import (LEGACY_CATEGORIES, ScenarioRegistry,
+                                  default_registry)
 from repro.core.straggler import StragglerAlert, StragglerDetector
 from repro.core.symbols.repo import SymbolRepository
 from repro.core.trace import (ColumnFlameGraph, ColumnarProfile, RemapCache,
                               TraceTables, decode_batch, remap_profile)
 from repro.core.waterline import CPUWaterline
 
-# Fig 2 taxonomy
-CATEGORY_BY_CAUSE = {
-    "gpu_uniform_slowdown": "gpu_hardware",
-    "gpu_specific_kernels_slow": "software",
-    "nic_softirq_contention": "os_interference",
-    "vfs_dentry_lock_contention": "os_interference",
-    "scheduler_contention": "os_interference",
-    "irq_imbalance": "os_interference",
-    "numa_migration_storm": "os_interference",
-    "logging_overhead": "software",
-    "storage_io_bottleneck": "software",
-    "network_slow_collective": "network",
-    "cpu_host_interference": "os_interference",
-    "unknown": "unknown",
-}
+__all__ = ["CATEGORY_BY_CAUSE", "LOG_SOP_RULES", "DiagnosticEvent",
+           "CentralService"]
+
+# Fig 2 taxonomy — backwards-compatible alias; the live mapping (which
+# grows with registered scenarios/rules) is the registry's category map.
+CATEGORY_BY_CAUSE = dict(LEGACY_CATEGORIES)
 
 # log-based SOP rules (the paper's 1,454 "software" events, median 1 min)
 LOG_SOP_RULES: List[Tuple[str, str]] = [
@@ -86,9 +95,15 @@ class CentralService:
                  robust_detector: bool = False,
                  streaming: bool = True,
                  fg_window: int = 16,
-                 group_ttl_s: Optional[float] = 3600.0):
+                 group_ttl_s: Optional[float] = 3600.0,
+                 registry: Optional[ScenarioRegistry] = None):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
+        # rule-set immutability after service start: pin a frozen snapshot
+        # of the scenario registry, so diagnoses stay reproducible even if
+        # scenarios/rules are registered later in the process
+        self.rules = (registry if registry is not None
+                      else default_registry()).snapshot()
         # one global interning table set: every columnar batch is re-mapped
         # into this id space at decode time, so flame graphs, waterlines and
         # kernel diffs from different agents are directly comparable
@@ -316,7 +331,7 @@ class CentralService:
             self._profile_kernels(sp), self._profile_kernels(hp),
             self._rank_flamegraph(g, alert.rank),
             self._rank_flamegraph(g, healthy),
-            sp.os_signals, hp.os_signals)
+            sp.os_signals, hp.os_signals, registry=self.rules)
         if verdict.layer == "inconclusive" and alert.lateness > 1e-4:
             # timing says slow but no layer diverges -> network path (§7)
             verdict = Verdict(layer="network",
@@ -326,7 +341,7 @@ class CentralService:
                               action="inspect fabric counters / RDMA stats")
         return DiagnosticEvent(
             job_id=self._job_by_group.get(g, "job-0"), group_id=g,
-            category=CATEGORY_BY_CAUSE.get(verdict.root_cause, "unknown"),
+            category=self.rules.category_for(verdict.root_cause),
             root_cause=verdict.root_cause, verdict=verdict,
             straggler_rank=alert.rank, detected_at=t0,
             diagnosis_latency_s=time.monotonic() - t0,
@@ -352,19 +367,22 @@ class CentralService:
         if baseline_fg is None or current_fg is None:
             return None
         cands = compare_to_baseline(current_fg, baseline_fg,
-                                    self.baseline_delta)
+                                    self.baseline_delta,
+                                    sop_rules=self.rules.sop_rules)
         if not cands:
             return None
         top = next((c for c in cands if c.root_cause), cands[0])
-        cause = top.root_cause or "cpu_host_interference"
+        cause = top.root_cause or self.rules.cpu_rules.fallback_cause
         verdict = Verdict(layer="cpu", root_cause=cause,
-                          confidence=min(1.0, top.delta / 0.01),
+                          confidence=min(1.0, top.delta /
+                                         max(2 * self.baseline_delta,
+                                             1e-12)),
                           evidence={"candidates": [
                               dataclasses.asdict(c) for c in cands[:8]]},
                           action=top.action)
         return DiagnosticEvent(
             job_id=job, group_id=g,
-            category=CATEGORY_BY_CAUSE.get(cause, "unknown"),
+            category=self.rules.category_for(cause),
             root_cause=cause, verdict=verdict, straggler_rank=None,
             detected_at=t0, diagnosis_latency_s=time.monotonic() - t0,
             evidence={"iter_time": (base_time, recent)})

@@ -13,8 +13,8 @@ One deliberate capacity difference: the per-cycle straggler-alert cap
 diagnose up to N*8 concurrent incidents per cycle where a single service
 defers the overflow to later cycles.  Sharding never diagnoses *fewer*
 or *different* incidents per group — under <= 8 concurrent alerts the
-outputs are identical (asserted on the §5.4 case studies in
-tests/test_system.py).
+outputs are identical (asserted over every registered scenario by the
+``run_scenario_matrix`` tests in tests/test_scenarios.py).
 
 The symbol repository is intentionally *shared* across shards — Build-ID
 keyed symbolization is global, content-addressed, append-only state (§3.4)
@@ -30,6 +30,8 @@ from typing import Dict, List, Optional
 from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.service import CentralService, DiagnosticEvent
 from repro.core.trace import decode_batch
+
+__all__ = ["shard_of", "ShardedService"]
 
 
 def shard_of(group_id: str, n_shards: int) -> int:
@@ -54,9 +56,14 @@ class ShardedService:
         # and its column views route to shards without re-mapping
         self.symbol_repo = self.shards[0].symbol_repo
         self.tables = self.shards[0].tables
+        # every shard already pinned an identical frozen registry snapshot
+        # at construction (same source registry); share shard 0's so the
+        # facade exposes one rule set and diagnoses stay shard-invariant
+        self.rules = self.shards[0].rules
         for s in self.shards[1:]:
             s.symbol_repo = self.symbol_repo
             s.tables = self.tables
+            s.rules = self.rules
         self._log_rr = 0
 
     # -- routing -------------------------------------------------------------

@@ -4,8 +4,17 @@ Generates per-iteration IterationProfiles for an N-rank communication
 group running a synchronous training loop: realistic CPU flame graphs
 (the Fig 6 forward/softmax/dropout paths), per-kernel GPU timings, NCCL
 collective entry/exit events with per-rank clock skew and jitter, and OS
-signal counters.  Fault injectors reproduce the paper's five production
-case studies; the CentralService must recover each root cause.
+signal counters.
+
+Faults are *pluggable*: a :class:`Fault` describes an incident by its
+per-layer effects (kernel slowdown factor, CPU-stack rewrite, OS-counter
+perturbation, collective entry delay) rather than by name, so a new
+production scenario is one factory function plus a registry entry
+(``repro.core.scenarios``) — no simulator edits.  The factories below
+cover the paper's five §5.4 case studies plus six further production
+incidents; :func:`run_scenario_matrix` drives every registered scenario
+through the legacy, streaming, columnar and sharded service paths and
+checks the expected diagnosis.
 
 Wall-clock here is simulated (the cluster "runs" at arbitrary speed), so
 diagnosis latency is measured in iterations + real analysis time.
@@ -22,6 +31,16 @@ from repro.core.collective.introspect import CommStructCodec
 from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
                                OSSignals, StackSample)
 from repro.core.trace import ColumnarProfile, TraceTables
+
+__all__ = [
+    "Fault", "StackRow",
+    "thermal_throttle", "nic_softirq", "vfs_lock_contention",
+    "logging_overhead", "io_bottleneck", "dataloader_starvation",
+    "swap_thrash", "pcie_link_degradation", "cpu_downclock",
+    "ecc_row_remap", "numa_remote_alloc",
+    "SimCluster", "MultiGroupSimCluster",
+    "SERVICE_PATHS", "ScenarioResult", "run_scenario_matrix",
+]
 
 # ---------------------------------------------------------------------------
 # baseline workload model (Fig 6's python/c++ mixed stacks)
@@ -89,12 +108,37 @@ _IO_STACKS = [
 # fault injectors
 # ---------------------------------------------------------------------------
 
+# (stack, weight) rows as produced by SimCluster._cpu_rows
+StackRow = Tuple[Tuple[str, ...], float]
+
 
 @dataclasses.dataclass
 class Fault:
+    """One injected incident, described by its per-layer *effects*.
+
+    Each hook perturbs one layer of the simulated iteration; ``None``
+    (or 1.0 for ``kernel_factor``) means "no effect at that layer".  The
+    simulator applies every active fault generically — adding a scenario
+    never requires editing ``SimCluster`` itself:
+
+      kernel_factor  multiplies every GPU kernel duration (thermal caps,
+                     ECC-induced downclocks, MIG contention, ...)
+      stack_effect   rewrites the (stack, weight) rows a rank samples
+                     (host-side interference visible in flame graphs)
+      os_effect      mutates the draft OS-counter dict *in place* before
+                     ``OSSignals`` is built (events too brief to sample)
+      entry_delay    seconds of extra compute before the gradient
+                     collective, as a function of the base iteration time
+                     (what makes the rank a straggler at the barrier)
+    """
     name: str
     ranks: Sequence[int]               # affected ranks ([] = all)
     start_iteration: int = 0
+    kernel_factor: float = 1.0
+    stack_effect: Optional[Callable[[List[StackRow]], List[StackRow]]] = None
+    os_effect: Optional[
+        Callable[[Dict[str, object], random.Random], None]] = None
+    entry_delay: Optional[Callable[[float], float]] = None
 
     def applies(self, rank: int, iteration: int) -> bool:
         if iteration < self.start_iteration:
@@ -103,34 +147,123 @@ class Fault:
 
 
 def thermal_throttle(rank: int, start: int = 0, factor: float = 1.075) -> Fault:
-    f = Fault("gpu_thermal_throttle", [rank], start)
-    f.factor = factor  # type: ignore[attr-defined]
-    return f
+    """§5.4 Case 1: one GPU clocks down — uniform kernel slowdown."""
+    return Fault("gpu_thermal_throttle", [rank], start, kernel_factor=factor)
 
 
 def nic_softirq(rank: int, start: int = 0, fraction: float = 0.0174) -> Fault:
-    f = Fault("nic_softirq_contention", [rank], start)
-    f.fraction = fraction  # type: ignore[attr-defined]
-    return f
+    """§5.4 Case 2: NET_RX softirqs share the training cores of one rank."""
+    def stacks(rows: List[StackRow]) -> List[StackRow]:
+        return rows + [(_NIC_SOFTIRQ_STACK, fraction / (1 - fraction))]
+
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["interrupts"]["NET_RX"] = 95_000 + rng.randint(-2000, 2000)
+        sig["sched_latency_p99"] *= 4.0
+
+    return Fault("nic_softirq_contention", [rank], start,
+                 stack_effect=stacks, os_effect=os_fx,
+                 entry_delay=lambda base: 0.6e-3)
 
 
 def vfs_lock_contention(ranks: Sequence[int], start: int = 0,
                         slow: float = 1.6) -> Fault:
-    f = Fault("vfs_dentry_lock_contention", list(ranks), start)
-    f.slow = slow  # type: ignore[attr-defined]
-    return f
+    """§5.4 Case 3: dcache invalidation serializes opens on some nodes."""
+    def stacks(rows: List[StackRow]) -> List[StackRow]:
+        rows = [(s, w * 0.25) for s, w in rows]
+        return rows + [(s, w * 3.0) for s, w in _VFS_STACKS]
+
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["sched_latency_p99"] *= 8.0
+
+    return Fault("vfs_dentry_lock_contention", list(ranks), start,
+                 stack_effect=stacks, os_effect=os_fx,
+                 entry_delay=lambda base: (slow - 1) * base)
 
 
 def logging_overhead(start: int = 0, fraction: float = 0.10) -> Fault:
-    f = Fault("logging_overhead", [], start)
-    f.fraction = fraction  # type: ignore[attr-defined]
-    return f
+    """§5.4 Case 4: DEBUG logging serializes on every training thread."""
+    return Fault(
+        "logging_overhead", [], start,
+        stack_effect=lambda rows: rows + [(_LOGGING_STACK,
+                                           fraction / (1 - fraction))],
+        entry_delay=lambda base: fraction * base)
 
 
 def io_bottleneck(start: int = 0, fraction: float = 0.12) -> Fault:
-    f = Fault("storage_io_bottleneck", [], start)
-    f.fraction = fraction  # type: ignore[attr-defined]
-    return f
+    """§5.4 Case 5: saturated storage tier stalls every data loader."""
+    def stacks(rows: List[StackRow]) -> List[StackRow]:
+        return rows + [(s, w * fraction / (1 - fraction)) for s, w in _IO_STACKS]
+
+    return Fault("storage_io_bottleneck", [], start, stack_effect=stacks,
+                 entry_delay=lambda base: fraction * base * 2.5)
+
+
+# -- production scenarios beyond the five case studies -----------------------
+
+_DATALOADER_STACK = ("py::train_loop", "py::data_next",
+                     "py::_worker_queue_get", "pthread_cond_timedwait")
+
+
+def dataloader_starvation(start: int = 0, fraction: float = 0.10) -> Fault:
+    """Input-pipeline starvation: every rank blocks on an empty prefetch
+    queue — uniform slowdown, new wait stacks under ``py::data_next``."""
+    return Fault(
+        "dataloader_starvation", [], start,
+        stack_effect=lambda rows: rows + [(_DATALOADER_STACK,
+                                           fraction / (1 - fraction))],
+        entry_delay=lambda base: fraction * base * 2.0)
+
+
+def swap_thrash(rank: int, start: int = 0,
+                faults_per_window: int = 6000) -> Fault:
+    """Memory pressure on one node: the training process takes major page
+    faults (swap-in) — too brief for sampled stacks, loud in vmstat."""
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["major_faults"] = faults_per_window + rng.randint(-500, 500)
+
+    return Fault("memory_pressure_swap", [rank], start, os_effect=os_fx,
+                 entry_delay=lambda base: 1.5e-3)
+
+
+def pcie_link_degradation(rank: int, start: int = 0, replays: int = 600) -> Fault:
+    """One GPU's PCIe/NVLink link retrains: replay/CRC error counters climb
+    while CPU and kernel profiles stay clean."""
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["pcie_replays"] = replays + rng.randint(-50, 50)
+
+    return Fault("pcie_link_degradation", [rank], start, os_effect=os_fx,
+                 entry_delay=lambda base: 1.2e-3)
+
+
+def cpu_downclock(rank: int, start: int = 0, mhz: float = 1200.0) -> Fault:
+    """Frequency-governor downclock (powersave / failed turbo) on one
+    node's cores — visible only as a lower effective frequency."""
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["cpu_freq_mhz"] = mhz + rng.uniform(-25.0, 25.0)
+
+    return Fault("cpu_frequency_downclock", [rank], start, os_effect=os_fx,
+                 entry_delay=lambda base: 2.0e-3)
+
+
+def ecc_row_remap(rank: int, start: int = 0, rows: int = 8) -> Fault:
+    """GPU ECC row-remap events stall one rank between kernels: kernel
+    timings match the fleet, the remap counter does not."""
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["ecc_remapped_rows"] = rows
+
+    return Fault("ecc_row_remap_stall", [rank], start, os_effect=os_fx,
+                 entry_delay=lambda base: 1.0e-3)
+
+
+def numa_remote_alloc(rank: int, start: int = 0,
+                      remote_ratio: float = 0.6) -> Fault:
+    """Dataloader workers pinned to the wrong socket: most memory traffic
+    crosses the interconnect, no new code paths appear."""
+    def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
+        sig["numa_remote_ratio"] = remote_ratio + rng.uniform(-0.05, 0.05)
+
+    return Fault("numa_remote_allocation", [rank], start, os_effect=os_fx,
+                 entry_delay=lambda base: 0.8e-3)
 
 
 # ---------------------------------------------------------------------------
@@ -191,20 +324,8 @@ class SimCluster:
         of truth for both the dataclass and columnar materializations."""
         stacks = list(self._base_stacks)
         for f in self.faults:
-            if not f.applies(rank, self.iteration):
-                continue
-            if f.name == "nic_softirq_contention":
-                frac = f.fraction  # type: ignore[attr-defined]
-                stacks.append((_NIC_SOFTIRQ_STACK, frac / (1 - frac)))
-            elif f.name == "vfs_dentry_lock_contention":
-                stacks = [(s, w * 0.25) for s, w in stacks]
-                stacks += [(s, w * 3.0) for s, w in _VFS_STACKS]
-            elif f.name == "logging_overhead":
-                frac = f.fraction  # type: ignore[attr-defined]
-                stacks.append((_LOGGING_STACK, frac / (1 - frac)))
-            elif f.name == "storage_io_bottleneck":
-                frac = f.fraction  # type: ignore[attr-defined]
-                stacks += [(s, w * frac / (1 - frac)) for s, w in _IO_STACKS]
+            if f.stack_effect is not None and f.applies(rank, self.iteration):
+                stacks = f.stack_effect(stacks)
         total = sum(w for _, w in stacks)
         rows = []
         n = self.samples_per_iter
@@ -236,8 +357,8 @@ class SimCluster:
                      ) -> Tuple[List[Tuple[str, float, float]], float]:
         factor = 1.0
         for f in self.faults:
-            if f.name == "gpu_thermal_throttle" and f.applies(rank, self.iteration):
-                factor *= f.factor  # type: ignore[attr-defined]
+            if f.applies(rank, self.iteration):
+                factor *= f.kernel_factor
         rows, extra = [], 0.0
         cursor = t
         for name, dur in _BASE_KERNELS:
@@ -253,19 +374,27 @@ class SimCluster:
                 for n, s, d in rows], extra
 
     def _os_signals(self, rank: int, t: float) -> OSSignals:
-        irqs = {"LOC": 100_000 + self.rng.randint(-500, 500),
-                "NET_RX": 2_000 + self.rng.randint(-100, 100)}
-        sched_p99 = 80e-6 * self.rng.uniform(0.9, 1.1)
+        """Healthy-node baseline counters, then every active fault's
+        ``os_effect`` mutates the draft in place."""
+        rng = self.rng
+        draft: Dict[str, object] = {
+            "rank": rank, "timestamp": t,
+            "interrupts": {"LOC": 100_000 + rng.randint(-500, 500),
+                           "NET_RX": 2_000 + rng.randint(-100, 100)},
+            "softirq_residency": {},
+            "sched_latency_p99": 80e-6 * rng.uniform(0.9, 1.1),
+            "numa_migrations": 0,
+            "cpu_steal": 0.0,
+            "major_faults": rng.randint(0, 3),
+            "cpu_freq_mhz": 2600.0 + rng.uniform(-20.0, 20.0),
+            "pcie_replays": rng.randint(0, 2),
+            "ecc_remapped_rows": 0,
+            "numa_remote_ratio": 0.02 + rng.uniform(0.0, 0.02),
+        }
         for f in self.faults:
-            if not f.applies(rank, self.iteration):
-                continue
-            if f.name == "nic_softirq_contention":
-                irqs["NET_RX"] = 95_000 + self.rng.randint(-2000, 2000)
-                sched_p99 *= 4.0
-            if f.name == "vfs_dentry_lock_contention":
-                sched_p99 *= 8.0
-        return OSSignals(rank=rank, timestamp=t, interrupts=irqs,
-                         softirq_residency={}, sched_latency_p99=sched_p99)
+            if f.os_effect is not None and f.applies(rank, self.iteration):
+                f.os_effect(draft, rng)
+        return OSSignals(**draft)  # type: ignore[arg-type]
 
     def _columnar_profile(self, rank: int, t0: float, iter_time: float,
                           cpu_rows, kernel_rows, entry: float, exit_v: float,
@@ -307,16 +436,8 @@ class SimCluster:
             kernel_rows[r] = rows
             delay = gpu_extra + self.rng.gauss(0, 12e-6)
             for f in self.faults:
-                if not f.applies(r, self.iteration):
-                    continue
-                if f.name == "nic_softirq_contention":
-                    delay += 0.6e-3
-                elif f.name == "vfs_dentry_lock_contention":
-                    delay += (f.slow - 1) * self.base_iter_time  # type: ignore[attr-defined]
-                elif f.name == "logging_overhead":
-                    delay += f.fraction * self.base_iter_time  # type: ignore[attr-defined]
-                elif f.name == "storage_io_bottleneck":
-                    delay += f.fraction * self.base_iter_time * 2.5  # type: ignore[attr-defined]
+                if f.entry_delay is not None and f.applies(r, self.iteration):
+                    delay += f.entry_delay(self.base_iter_time)
             entry_delay[r] = max(0.0, delay)
 
         # blocking collective: starts when the last rank arrives
@@ -437,3 +558,143 @@ class MultiGroupSimCluster:
                 events.extend(service.process())
         events.extend(service.process())
         return events
+
+
+# ---------------------------------------------------------------------------
+# scenario matrix: every registered scenario x every service path
+# ---------------------------------------------------------------------------
+
+#: The four ingest/analysis paths a diagnosis must survive unchanged:
+#: legacy batch (streaming=False), streaming object ingest, wire-encoded
+#: columnar upload, and the group-partitioned sharded front-end.
+SERVICE_PATHS: Tuple[str, ...] = ("legacy", "streaming", "columnar", "sharded")
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Outcome of one scenario on one service path.  ``event_tuples``
+    carries every diagnosis as (group_id, root_cause, category,
+    straggler_rank) in emission order, so callers can assert
+    event-for-event equivalence *across* paths from one matrix run."""
+    scenario: str
+    path: str
+    ok: bool
+    expected_cause: str
+    expected_rank: Optional[int]
+    first_cause: Optional[str]
+    first_rank: Optional[int]
+    causes: List[str]
+    n_events: int
+    event_tuples: List[Tuple[str, str, str, Optional[int]]] = \
+        dataclasses.field(default_factory=list)
+
+
+def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
+                    baseline_iters: int, fault_iters: int,
+                    process_every: int, n_shards: int, window: int,
+                    registry) -> ScenarioResult:
+    from repro.core.service import CentralService
+    from repro.core.sharded import ShardedService
+    from repro.core.trace import ColumnarBatch, encode_batch
+
+    kwargs = dict(window=window, robust_detector=scenario.robust_detector,
+                  registry=registry)
+    if path == "legacy":
+        svc = CentralService(streaming=False, **kwargs)
+    elif path in ("streaming", "columnar"):
+        svc = CentralService(**kwargs)
+    elif path == "sharded":
+        svc = ShardedService(n_shards=n_shards, **kwargs)
+    else:
+        raise ValueError(
+            f"unknown service path {path!r}; choose from {SERVICE_PATHS}")
+    columnar = path == "columnar"
+    cl = SimCluster(n_ranks=n_ranks, seed=seed, columnar=columnar)
+
+    def run(iterations: int) -> None:
+        for _ in range(iterations):
+            profiles = cl.step()
+            if columnar:
+                svc.ingest_encoded(encode_batch(
+                    ColumnarBatch("job-0", profiles, "node-0", cl.tables)))
+            else:
+                for p in profiles:
+                    svc.ingest(p)
+            if cl.iteration % process_every == 0:
+                svc.process()
+        svc.process()
+
+    run(baseline_iters)
+    cl.add_fault(scenario.make_fault())
+    run(fault_iters)
+    events = svc.events
+    first = events[0] if events else None
+    if first is None or first.verdict is None:
+        layer_ok = False
+    elif scenario.expected_layer == "temporal":
+        # the temporal-baseline path emits a cpu-layer verdict with no
+        # straggler (uniform degradation)
+        layer_ok = (first.verdict.layer == "cpu"
+                    and first.straggler_rank is None)
+    else:
+        layer_ok = first.verdict.layer == scenario.expected_layer
+    ok = (first is not None and layer_ok
+          and first.root_cause == scenario.expected_cause
+          and (scenario.expected_rank is None
+               or first.straggler_rank == scenario.expected_rank))
+    return ScenarioResult(
+        scenario=scenario.name, path=path, ok=ok,
+        expected_cause=scenario.expected_cause,
+        expected_rank=scenario.expected_rank,
+        first_cause=first.root_cause if first else None,
+        first_rank=first.straggler_rank if first else None,
+        causes=sorted({e.root_cause for e in events}), n_events=len(events),
+        event_tuples=[(e.group_id, e.root_cause, e.category,
+                       e.straggler_rank) for e in events])
+
+
+def run_scenario_matrix(registry=None, scenarios=None,
+                        paths: Sequence[str] = SERVICE_PATHS, *,
+                        n_ranks: int = 8, seed: int = 7,
+                        baseline_iters: int = 30, fault_iters: int = 60,
+                        process_every: int = 10, n_shards: int = 4,
+                        window: int = 50, strict: bool = False
+                        ) -> Dict[str, Dict[str, ScenarioResult]]:
+    """Drive every registered scenario through every service path.
+
+    For each (scenario, path) pair: run a healthy baseline, inject the
+    scenario's fault, and record whether the first diagnosis matches the
+    scenario's expected root cause, diagnosis layer ("temporal" expects
+    a cpu-layer verdict with no straggler) and straggler rank, where the
+    scenario pins one.  Returns ``{scenario name: {path: result}}``;
+    with ``strict=True`` raises ``AssertionError`` listing every miss —
+    the acceptance gate used by tests and ``benchmarks/bench_scenarios``.
+
+    ``scenarios`` narrows the run to an explicit scenario list;
+    ``registry`` defaults to :func:`repro.core.scenarios.default_registry`.
+    """
+    from repro.core.scenarios import default_registry
+    registry = registry if registry is not None else default_registry()
+    chosen = list(scenarios) if scenarios is not None \
+        else list(registry.scenarios)
+    results: Dict[str, Dict[str, ScenarioResult]] = {}
+    misses: List[ScenarioResult] = []
+    for scen in chosen:
+        per_path: Dict[str, ScenarioResult] = {}
+        for path in paths:
+            res = _drive_scenario(
+                scen, path, n_ranks=n_ranks, seed=seed,
+                baseline_iters=baseline_iters, fault_iters=fault_iters,
+                process_every=process_every, n_shards=n_shards,
+                window=window, registry=registry)
+            per_path[path] = res
+            if not res.ok:
+                misses.append(res)
+        results[scen.name] = per_path
+    if strict and misses:
+        detail = "\n".join(
+            f"  {m.scenario}/{m.path}: expected {m.expected_cause}"
+            f"@rank{m.expected_rank} got {m.first_cause}@rank{m.first_rank}"
+            f" ({m.n_events} events: {m.causes})" for m in misses)
+        raise AssertionError(f"scenario matrix misses:\n{detail}")
+    return results

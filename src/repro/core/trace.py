@@ -25,6 +25,20 @@ Three layers:
     costs ~30 ``np.frombuffer`` views, not 1k object graphs.  Decoding
     *into* a target ``TraceTables`` (the service's) re-maps ids with one
     vectorized gather per column — the classic columnar dictionary merge.
+
+Invariants:
+
+  * Lossless round-trips: ``to_dataclasses(to_columnar(b)) == b`` and
+    ``decode_batch(encode_batch(b)).to_dataclasses() == b`` for any
+    boundary-schema batch (hypothesis-tested), including decoding into a
+    pre-populated shared table set.
+  * Versioned compatibility: the decoder accepts every version in
+    ``WIRE_MIN_VERSION..WIRE_VERSION``; fields a version predates decode
+    as their schema defaults.  The encoder refuses (``WireFormatError``)
+    to downlevel a payload it cannot represent losslessly.  See
+    docs/WIRE_FORMAT.md for the byte layout and negotiation rules.
+  * Tables are append-only and thread-safe; interned ids never change
+    meaning within a table set.
 """
 from __future__ import annotations
 
@@ -39,8 +53,23 @@ import numpy as np
 from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
                                OSSignals, ProfileBatch, StackSample)
 
+__all__ = [
+    "WIRE_MAGIC", "WIRE_VERSION", "WIRE_MIN_VERSION", "WireFormatError",
+    "StringTable", "TraceTables", "ColumnFlameGraph", "ColumnarProfile",
+    "ColumnarBatch", "profile_to_columnar", "to_columnar", "to_dataclasses",
+    "batch_fraction_rows", "TableRemap", "RemapCache", "remap_profile",
+    "encode_batch", "decode_batch",
+]
+
 WIRE_MAGIC = b"SYTC"
-WIRE_VERSION = 1
+#: Current wire version.  v2 appends the extended OS counter columns
+#: (major_faults, cpu_freq_mhz, pcie_replays, ecc_remapped_rows,
+#: numa_remote_ratio); v1 payloads still decode (extended fields read as
+#: their defaults).  Full byte layout + negotiation rules:
+#: docs/WIRE_FORMAT.md.
+WIRE_VERSION = 2
+#: Oldest version this decoder still accepts.
+WIRE_MIN_VERSION = 1
 
 _U32 = np.dtype("<u4")
 _I64 = np.dtype("<i8")
@@ -48,7 +77,9 @@ _F64 = np.dtype("<f8")
 
 
 class WireFormatError(ValueError):
-    """Raised on bad magic, unsupported version, or a truncated payload."""
+    """Raised on bad magic, unsupported version, or a truncated payload —
+    and on encode, when the requested downlevel version cannot represent
+    the payload losslessly (extended OS fields need v2)."""
 
 
 # ---------------------------------------------------------------------------
@@ -716,7 +747,17 @@ def _decode_string_table(r: _Reader) -> List[str]:
     return [blob[off[i]:off[i + 1]].decode("utf-8") for i in range(n)]
 
 
-def encode_batch(batch) -> bytes:
+# extended OS counter fields appended by wire v2, in column order
+_OS_EXT_FIELDS: Tuple[Tuple[str, np.dtype], ...] = (
+    ("major_faults", _I64), ("cpu_freq_mhz", _F64), ("pcie_replays", _I64),
+    ("ecc_remapped_rows", _I64), ("numa_remote_ratio", _F64))
+
+
+def _has_extended_os(sig: OSSignals) -> bool:
+    return any(getattr(sig, f) for f, _dt in _OS_EXT_FIELDS)
+
+
+def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
     """Encode a ``ColumnarBatch`` (or ``ProfileBatch``, converted on the
     fly) into the versioned wire format.
 
@@ -726,7 +767,16 @@ def encode_batch(batch) -> bytes:
     growing tables never inflate a small flush.  The referenced-entry
     snapshot also makes encoding safe against concurrent interning into
     shared tables: referenced ids existed when the columns were built,
-    and both backing lists are append-only."""
+    and both backing lists are append-only.
+
+    ``version`` downlevels the payload for an older decoder (version
+    negotiation, docs/WIRE_FORMAT.md): encoding is refused — never
+    silently lossy — when the batch carries data the requested version
+    cannot represent (non-default extended OS counters need v2)."""
+    if not WIRE_MIN_VERSION <= version <= WIRE_VERSION:
+        raise WireFormatError(
+            f"cannot encode wire version {version} "
+            f"(supported: {WIRE_MIN_VERSION}..{WIRE_VERSION})")
     if isinstance(batch, ProfileBatch):
         batch = to_columnar(batch)
     t = batch.tables
@@ -773,7 +823,7 @@ def encode_batch(batch) -> bytes:
                   dtype=np.int64)
     s2l[stack_used] = np.arange(stack_used.shape[0])
 
-    out: List[bytes] = [_HDR.pack(WIRE_MAGIC, WIRE_VERSION, 0)]
+    out: List[bytes] = [_HDR.pack(WIRE_MAGIC, version, 0)]
     _put_bytes(out, batch.job_id.encode("utf-8"))
     _put_bytes(out, batch.node_id.encode("utf-8"))
 
@@ -828,6 +878,16 @@ def encode_batch(batch) -> bytes:
     out.append(_arr_bytes([s.sched_latency_p99 for s in sigs], _F64))
     out.append(_arr_bytes([s.numa_migrations for s in sigs], _I64))
     out.append(_arr_bytes([s.cpu_steal for s in sigs], _F64))
+    if version >= 2:
+        for field, vdtype in _OS_EXT_FIELDS:
+            out.append(_arr_bytes([getattr(s, field) for s in sigs], vdtype))
+    else:
+        lossy = [s for s in sigs if _has_extended_os(s)]
+        if lossy:
+            raise WireFormatError(
+                f"wire v1 cannot represent extended OS counters "
+                f"({len(lossy)} profile(s) carry non-default values); "
+                f"encode with version >= 2")
     for pick, field, vdtype in ((1, "interrupts", _I64),
                                 (2, "softirq_residency", _F64)):
         _put_offsets(out, [len(entry[pick]) for entry in os_sigs])
@@ -869,7 +929,7 @@ def _decode_batch(data: bytes,
     if data[:4] != WIRE_MAGIC:
         raise WireFormatError("bad magic — not a trace batch")
     _magic, version, _flags = _HDR.unpack_from(data, 0)
-    if version != WIRE_VERSION:
+    if not WIRE_MIN_VERSION <= version <= WIRE_VERSION:
         raise WireFormatError(f"unsupported wire version {version}")
     r = _Reader(data, _HDR.size)
     job_id = r.str_()
@@ -928,6 +988,11 @@ def _decode_batch(data: bytes,
     os_sched = r.arr(_F64)
     os_numa = r.arr(_I64)
     os_steal = r.arr(_F64)
+    if version >= 2:
+        os_ext = {field: r.arr(dt) for field, dt in _OS_EXT_FIELDS}
+    else:   # v1 payload: extended counters decode as their defaults
+        os_ext = {field: np.zeros(os_rank.shape[0], dtype=dt)
+                  for field, dt in _OS_EXT_FIELDS}
     os_blocks = {}
     for field, vdtype in (("interrupts", _I64), ("softirq_residency", _F64)):
         noff = r.fixed(len(os_rank) + 1, _I64)
@@ -944,6 +1009,7 @@ def _decode_batch(data: bytes,
     os_sched_l = os_sched.tolist()
     os_numa_l = os_numa.tolist()
     os_steal_l = os_steal.tolist()
+    os_ext_l = {field: a.tolist() for field, a in os_ext.items()}
     ioff, ikeys, ivals = os_blocks["interrupts"]
     soff, skeys, svals = os_blocks["softirq_residency"]
     ioff_l, soff_l = ioff.tolist(), soff.tolist()
@@ -961,7 +1027,8 @@ def _decode_batch(data: bytes,
                                    zip(skeys[sa:sb].tolist(),
                                        svals[sa:sb].tolist())},
                 sched_latency_p99=os_sched_l[j],
-                numa_migrations=os_numa_l[j], cpu_steal=os_steal_l[j])
+                numa_migrations=os_numa_l[j], cpu_steal=os_steal_l[j],
+                **{field: vals[j] for field, vals in os_ext_l.items()})
         return build
 
     profiles: List[ColumnarProfile] = []

@@ -78,75 +78,14 @@ def test_real_profiler_collects_from_training(tiny_model):
 
 
 # ---------------------------------------------------------------------------
-# sharded front-end equivalence: hash-partitioning groups across shards must
-# not change any diagnosis — same five §5.4 case studies, same verdicts
+# cross-path equivalence over the whole scenario registry (legacy batch,
+# streaming object, wire-encoded columnar and sharded paths, event for
+# event) lives in tests/test_scenarios.py — one run of
+# simcluster.run_scenario_matrix asserts both the expected verdicts and
+# path-equality, replacing the hand-enumerated five-case tests that used
+# to sit here.  Below: the multi-group concurrent-fault equivalence case
+# the matrix does not cover.
 # ---------------------------------------------------------------------------
-
-CASE_FAULTS = {
-    "gpu_thermal_throttle": (lambda: sc.thermal_throttle(0, start=30), False),
-    "nic_softirq": (lambda: sc.nic_softirq(4, start=30), False),
-    "vfs_dentry_lock": (lambda: sc.vfs_lock_contention([2, 3], start=30), True),
-    "logging_overhead": (lambda: sc.logging_overhead(start=30), False),
-    "storage_io": (lambda: sc.io_bottleneck(start=30), False),
-}
-
-
-def _drive(service, fault_factory, seed=7, columnar=False, encoded=False):
-    """Run the §5.4 scenario into ``service`` over one of the three ingest
-    representations: dataclass objects, native columnar profiles, or
-    wire-encoded columnar batches (one per fleet iteration, as an agent
-    would upload)."""
-    from repro.core.trace import ColumnarBatch, encode_batch
-
-    cl = sc.SimCluster(n_ranks=8, seed=seed, columnar=columnar)
-
-    def run(iterations):
-        for _ in range(iterations):
-            profiles = cl.step()
-            if encoded:
-                service.ingest_encoded(encode_batch(
-                    ColumnarBatch("job-0", profiles, "node-0", cl.tables)))
-            else:
-                for p in profiles:
-                    service.ingest(p)
-            if cl.iteration % 10 == 0:
-                service.process()
-        service.process()
-
-    run(30)
-    cl.add_fault(fault_factory())
-    run(60)
-    return [(e.group_id, e.root_cause, e.category, e.straggler_rank)
-            for e in service.events]
-
-
-@pytest.mark.parametrize("case", sorted(CASE_FAULTS))
-def test_sharded_matches_unsharded_on_case_studies(case):
-    fault_factory, robust = CASE_FAULTS[case]
-    plain = _drive(CentralService(window=50, robust_detector=robust),
-                   fault_factory)
-    sharded = _drive(ShardedService(n_shards=4, window=50,
-                                    robust_detector=robust),
-                     fault_factory)
-    assert plain, f"case {case} produced no diagnosis"
-    assert sharded == plain
-
-
-@pytest.mark.parametrize("case", sorted(CASE_FAULTS))
-def test_case_studies_identical_on_legacy_streaming_columnar_paths(case):
-    """The tentpole invariant: the legacy batch path, the streaming object
-    path and the wire-encoded columnar path reach the same diagnoses on
-    every §5.4 case study."""
-    fault_factory, robust = CASE_FAULTS[case]
-    legacy = _drive(CentralService(window=50, robust_detector=robust,
-                                   streaming=False), fault_factory)
-    streaming = _drive(CentralService(window=50, robust_detector=robust),
-                       fault_factory)
-    columnar = _drive(CentralService(window=50, robust_detector=robust),
-                      fault_factory, columnar=True, encoded=True)
-    assert streaming, f"case {case} produced no diagnosis"
-    assert columnar == streaming
-    assert legacy == streaming
 
 
 def test_sharded_matches_unsharded_multi_group():

@@ -44,7 +44,10 @@ def _profiles(draw):
         interrupts=st.dictionaries(_name, _small, max_size=4),
         softirq_residency=st.dictionaries(_name, _floats, max_size=3),
         sched_latency_p99=_floats, numa_migrations=_small,
-        cpu_steal=_floats))
+        cpu_steal=_floats,
+        # extended (SYTC-v2) node counters
+        major_faults=_small, cpu_freq_mhz=_floats, pcie_replays=_small,
+        ecc_remapped_rows=_small, numa_remote_ratio=_floats))
     return IterationProfile(
         rank=rank, iteration=draw(st.integers(0, 1 << 40)), group_id=group,
         iter_time=draw(_floats), cpu_samples=samples, kernel_events=kernels,
@@ -74,3 +77,24 @@ def test_decode_into_shared_tables_property(profiles):
         out = decode_batch(encode_batch(ProfileBatch("j", [p])),
                            tables=tables)
         assert out.to_dataclasses().profiles[0] == p
+
+
+@given(st.builds(ProfileBatch, job_id=_name,
+                 profiles=st.lists(_profiles(), max_size=4),
+                 node_id=_name))
+def test_wire_v1_negotiation_property(batch):
+    """Downlevel v1 encoding either round-trips exactly (no extended OS
+    counters anywhere in the batch) or is refused — never silently lossy."""
+    from repro.core.trace import WireFormatError
+    extended = any(
+        p.os_signals is not None and any(
+            (p.os_signals.major_faults, p.os_signals.cpu_freq_mhz,
+             p.os_signals.pcie_replays, p.os_signals.ecc_remapped_rows,
+             p.os_signals.numa_remote_ratio))
+        for p in batch.profiles)
+    if extended:
+        with pytest.raises(WireFormatError):
+            encode_batch(batch, version=1)
+    else:
+        assert decode_batch(encode_batch(batch, version=1)
+                            ).to_dataclasses() == batch
