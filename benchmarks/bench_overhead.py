@@ -24,6 +24,11 @@ from repro.train import init_train_state, make_train_step
 WARMUP_STEPS = 8
 MEASURED_STEPS = 20
 RATES = [0.01, 0.10, 0.20, 0.40, 0.80, 1.00]
+#: Sampler cpu_fraction measured at the 0.10 default rate BEFORE the
+#: batched collection path (per-frame hash() + per-sample RawStackSample
+#: on every kept tick).  The memoized/interned sampler must stay
+#: strictly below this — the collection-side Table-2 regression gate.
+PRE_BATCH_CPU_FRACTION_10PCT = 0.01434
 
 
 def _build():
@@ -85,6 +90,16 @@ def run(out_lines: List[str]) -> Dict[str, float]:
     noise = (max(bases) - min(bases)) / mean_base
     out_lines.append(f"overhead_baseline,{1e6/mean_base:.1f},"
                      f"baseline_spread={noise*100:.2f}%")
+    # collection-side regression gate: the memoized/interned sampler at
+    # the default 0.10 rate must undercut its pre-batch measurement
+    frac_10 = results["cpu_0.1"] / 100
+    out_lines.append(
+        f"overhead_cpu_frac_rate10,0,"
+        f"{frac_10*100:.3f}%_vs_pre_batch_"
+        f"{PRE_BATCH_CPU_FRACTION_10PCT*100:.3f}%")
+    assert frac_10 < PRE_BATCH_CPU_FRACTION_10PCT, (
+        f"sampler cpu_fraction at 0.10 regressed: {frac_10:.5f} >= "
+        f"pre-batch {PRE_BATCH_CPU_FRACTION_10PCT:.5f}")
     return results
 
 

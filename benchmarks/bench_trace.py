@@ -40,10 +40,13 @@ INGEST_SPEEDUP_FLOOR = 3.0
 
 
 def _fleet_steps(columnar: bool, iters: int = ITERS):
+    # columnar fleets route stacks through the real batched collection
+    # path (NativeStackFeed: batch unwinder + central symbolization) —
+    # one unwind per unique stack fleet-wide, like production dedup
     fleet = sc.MultiGroupSimCluster(
         n_groups=N_GROUPS, ranks_per_group=RANKS_PER_GROUP, seed=3,
         samples_per_iter=SAMPLES_PER_ITER, columnar=columnar,
-        stack_variants=STACK_VARIANTS)
+        stack_variants=STACK_VARIANTS, native_unwind=columnar)
     return fleet, [fleet.step() for _ in range(iters)]
 
 

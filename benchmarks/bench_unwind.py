@@ -11,11 +11,22 @@ late-dlopen'd plugins and complex FDEs as residual error sources.
 Frame accuracy = correctly recovered AND correctly named frames / truth.
 
 Also reports the §3.3 cost analysis: per-sample unwind cost of hybrid vs
-always-DWARF (bisect iterations as the cost unit).
+always-DWARF (bisect iterations as the cost unit), and the batch-vs-
+scalar collection gate: ``unwind_batch`` at a 99 Hz-style fleet schedule
+(hot stacks repeat) must deliver ≥ ``BATCH_SPEEDUP_FLOOR``x the scalar
+Algorithm-1 loop with byte-identical stacks and marker state, and its
+steady-state ``fp_fraction`` must not regress below the pre-batch pin.
+
+Asserted floors (CI bench-smoke):
+  * hybrid accuracy ≥ fp-only accuracy (both resolutions),
+  * hybrid_central ≥ 90% frame accuracy (the Fig-3 reproduction),
+  * batch speedup ≥ 5x with identical stacks + markers,
+  * batch steady-state fp_fraction ≥ 0.195 (the pre-batch Fig-3 value).
 """
 from __future__ import annotations
 
 import random
+import time
 from typing import Dict, List
 
 from repro.core.events import RawStackSample
@@ -25,6 +36,14 @@ from repro.core.unwind.dwarf import DwarfUnwinder
 from repro.core.unwind.fp import unwind_fp_only
 
 N_SAMPLES = 1200
+# batch-vs-scalar throughput section (99 Hz fleet schedule)
+N_HOT_THREADS = 300      # unique in-flight stacks across the node
+HOT_ROUNDS = 24          # each stack re-sampled this many times
+BATCH_SIZE = 300         # one aggregation window's worth per call
+BATCH_SPEEDUP_FLOOR = 5.0
+#: scalar Algorithm-1 fp_step_fraction measured on this workload before
+#: the batch path existed — the §3.3 steady-state regression pin
+PRE_BATCH_FP_FRACTION = 0.195
 
 
 def build_workload(seed: int = 0):
@@ -125,6 +144,10 @@ def run(out_lines: List[str]) -> Dict[str, float]:
         total += n
 
     res = {k: v / total for k, v in ok.items()}
+    # Fig-3 floors: the hybrid reproduction cannot silently regress
+    assert res["hybrid_node"] >= res["fp_only"], res
+    assert res["hybrid_central"] >= res["hybrid_node"], res
+    assert res["hybrid_central"] >= 0.90, res
 
     # §3.3 cost: hybrid steady-state vs always-DWARF (bisect iters/sample)
     dwarf_only = DwarfUnwinder()
@@ -139,7 +162,70 @@ def run(out_lines: List[str]) -> Dict[str, float]:
         out_lines.append(f"unwind_accuracy_{k},0,{v*100:.1f}%")
     out_lines.append(f"unwind_cost_hybrid,{hybrid_cost:.1f},"
                      f"fp_step_fraction={fp_frac*100:.0f}%")
+    res.update(run_batch_gate(out_lines))
     return res
+
+
+def run_batch_gate(out_lines: List[str]) -> Dict[str, float]:
+    """Batch-vs-scalar collection gate on the Fig-3 workload at a fleet
+    rate: ``N_HOT_THREADS`` live stacks, each re-sampled ``HOT_ROUNDS``
+    times (hot stacks repeat at 99 Hz), unwound in ``BATCH_SIZE`` chunks.
+    Stacks and final marker state must be byte-identical to the scalar
+    Algorithm-1 loop; throughput must clear ``BATCH_SPEEDUP_FLOOR``."""
+    proc, binaries, no_elf_jit, rng = build_workload(seed=1)
+    threads = []
+    for i in range(N_HOT_THREADS):
+        t = SimThread(proc, random.Random(10_000 + i))
+        t.call_chain(random_chain(binaries, no_elf_jit, rng,
+                                  rng.randrange(12, 32)))
+        threads.append(t)
+    # stride-7 schedule: interleaved like timer ticks over live threads
+    sched = [threads[(i * 7) % N_HOT_THREADS]
+             for i in range(N_HOT_THREADS * HOT_ROUNDS)]
+
+    uw_scalar = HybridUnwinder()
+    for b in binaries:
+        uw_scalar.register_binary(b)
+    t0 = time.perf_counter()
+    scalar_stacks = [uw_scalar.unwind(t) for t in sched]
+    scalar_s = time.perf_counter() - t0
+
+    uw_batch = HybridUnwinder()
+    for b in binaries:
+        uw_batch.register_binary(b)
+    t0 = time.perf_counter()
+    batch_stacks: List[List[int]] = []
+    for i in range(0, len(sched), BATCH_SIZE):
+        batch_stacks.extend(uw_batch.unwind_batch(sched[i:i + BATCH_SIZE]))
+    batch_s = time.perf_counter() - t0
+
+    # differential equality: stacks AND converged marker state
+    assert batch_stacks == scalar_stacks, "batch/scalar stack divergence"
+    assert uw_batch.markers._map == uw_scalar.markers._map, \
+        "batch/scalar marker divergence"
+
+    n = len(sched)
+    scalar_rate, batch_rate = n / scalar_s, n / batch_s
+    speedup = scalar_s / batch_s
+    sb = uw_batch.stats
+    memo_rate = sb.memo_hits / max(sb.samples, 1)
+    assert speedup >= BATCH_SPEEDUP_FLOOR, (
+        f"batch unwind {speedup:.1f}x < {BATCH_SPEEDUP_FLOOR}x floor "
+        f"(scalar {scalar_rate:.0f}/s, batch {batch_rate:.0f}/s)")
+    assert sb.fp_fraction >= uw_scalar.stats.fp_fraction >= \
+        PRE_BATCH_FP_FRACTION, (sb.fp_fraction,
+                                uw_scalar.stats.fp_fraction)
+
+    out_lines.append("# §3.3 batch collection gate: path,us_per_sample,rate")
+    out_lines.append(f"unwind_scalar,{1e6/scalar_rate:.1f},"
+                     f"{scalar_rate:.0f}_samples/s")
+    out_lines.append(f"unwind_batch,{1e6/batch_rate:.1f},"
+                     f"{batch_rate:.0f}_samples/s_memo_hit={memo_rate*100:.0f}%")
+    out_lines.append(f"unwind_batch_speedup,0,{speedup:.1f}x")
+    out_lines.append(f"unwind_batch_fp_fraction,0,{sb.fp_fraction*100:.1f}%"
+                     f"_vs_pre_batch_{PRE_BATCH_FP_FRACTION*100:.1f}%")
+    return {"batch_speedup": speedup, "batch_fp_fraction": sb.fp_fraction,
+            "memo_hit_rate": memo_rate}
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
 
-  bench_overhead     — Table 2 (throughput vs sampling rate)
-  bench_unwind       — Fig 3  (frame accuracy) + §3.3 cost analysis
+  bench_overhead     — Table 2 (throughput vs sampling rate; asserts the
+                       0.10-rate sampler cpu_fraction stays under its
+                       pre-batch measurement)
+  bench_unwind       — Fig 3  (frame accuracy) + §3.3 cost analysis +
+                       the batch-vs-scalar collection gate (≥5x, byte-
+                       identical stacks/markers, fp_fraction pin)
   bench_symbols      — Fig 4 / §5.3 (misattribution)
   bench_straggler    — Fig 5  (slow-rank detection sweep)
   bench_aggregation  — §4    (10–50x volume reduction)

@@ -20,7 +20,7 @@ from repro.core.samplers import SamplingProfiler
 from repro.core.symbols.resolver import CentralResolver
 from repro.core.trace import (ColumnarBatch, ColumnarProfile, RemapCache,
                               TraceTables, encode_batch, profile_to_columnar,
-                              remap_profile)
+                              remap_profile, stacks_profile)
 
 
 @dataclasses.dataclass
@@ -50,7 +50,12 @@ class NodeAgent:
     def __init__(self, cfg: AgentConfig, service=None):
         self.cfg = cfg
         self.service = service
-        self.aggregator = StackAggregator()
+        # agent-lifetime interning tables: repeated stacks/kernel names
+        # across the job's 30 s upload cycles intern once, ever — the
+        # sampler and aggregator fold straight into them (no per-sample
+        # dataclasses anywhere on the collection path)
+        self._tables = TraceTables()
+        self.aggregator = StackAggregator(tables=self._tables)
         self.sampler = SamplingProfiler(
             hz=cfg.hz, sampling_rate=cfg.sampling_rate, rank=cfg.rank,
             aggregator=self.aggregator)
@@ -61,9 +66,6 @@ class NodeAgent:
         self._procs: Dict[int, RegisteredProcess] = {}
         self._buffer: List[IterationProfile] = []
         self._lock = threading.Lock()
-        # agent-lifetime interning tables: repeated stacks/kernel names
-        # across the job's 30 s upload cycles intern once, ever
-        self._tables = TraceTables()
         self._remaps = RemapCache(self._tables)
         self.uploads = 0
         self.dropped = 0
@@ -165,4 +167,24 @@ class NodeAgent:
         self.sampler.stop()
 
     def drain_stacks(self):
+        """Legacy dataclass-view drain: [(frames, count)].  With the
+        interned sampler (the default since the batched collection path)
+        ``frames`` are root..leaf ``"filename:name"`` strings, not the
+        old ``(filename, hashed name)`` pairs — prefer
+        :meth:`drain_profile` for anything feeding the columnar world."""
         return self.aggregator.drain()
+
+    def drain_profile(self, iteration: int = 0, iter_time: float = 0.0,
+                      group_id: Optional[str] = None,
+                      timestamp: Optional[float] = None) -> ColumnarProfile:
+        """Drain the aggregator straight into a ``ColumnarProfile`` over
+        the agent-lifetime tables — the hot upload path: aggregated
+        (stack id, count) columns in, wire-encodable profile out, no
+        per-sample dataclass in between.  ``submit`` it like any other
+        profile; ``flush`` ships it as encoded columns."""
+        sids, weights = self.aggregator.drain_columns()
+        return stacks_profile(
+            self._tables, rank=self.cfg.rank, iteration=iteration,
+            group_id=group_id if group_id is not None else self.cfg.node_id,
+            iter_time=iter_time, sids=sids, weights=weights,
+            timestamp=time.monotonic() if timestamp is None else timestamp)

@@ -3,16 +3,33 @@
 The eBPF program hashes each stack and increments a per-stack counter in a
 BPF hash map; the userspace daemon drains the map every 5 s, cutting data
 volume 10–50x vs per-sample streaming.  This module reproduces the same
-structure: a bounded hash map keyed by stack hash, drain(), and volume
+structure: a bounded hash map keyed by stack, drain(), and volume
 accounting so the reduction factor is measurable (benchmarks/bench_aggregation).
+
+Two record paths share the map budget and the drain cycle:
+
+  * ``record`` — the legacy boundary path: a ``RawStackSample`` dataclass
+    per sample, keyed by hashing the whole frame tuple.
+  * ``record_frame_ids`` — the batched hot path: the sampler hands a
+    tuple of *interned frame ids* (leaf..root); the stack interns once
+    into the agent-lifetime ``TraceTables`` (memoized, so a repeated
+    stack is one small-int dict hit) and the counter lives under the
+    integer stack id.  No per-sample dataclass is materialized and
+    nothing re-hashes frame strings — ``drain_columns`` hands the
+    (stack id, count) columns straight to ``ColumnarProfile`` uploads,
+    while ``drain`` stays available as a lazy dataclass-view adapter for
+    the legacy path.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.events import RawStackSample
+from repro.core.trace import TraceTables
 
 
 @dataclasses.dataclass
@@ -28,23 +45,32 @@ class DrainStats:
 
 
 class StackAggregator:
-    """Bounded stack-hash -> (stack, count) map with periodic drain.
+    """Bounded stack -> count map with periodic drain.
 
     ``max_entries`` models the fixed-size BPF map; on overflow the sample is
     passed through un-aggregated (same behavior as a full BPF map with a
-    userspace fallback ring).
+    userspace fallback ring).  With ``tables`` the interned
+    ``record_frame_ids``/``drain_columns`` path is available.
     """
 
     _FRAME_BYTES = 16      # (build_id ref, offset) per frame on the wire
     _HEADER_BYTES = 24     # rank, ts, weight
 
-    def __init__(self, max_entries: int = 16384):
+    def __init__(self, max_entries: int = 16384,
+                 tables: Optional[TraceTables] = None):
         self.max_entries = max_entries
+        self.tables = tables
         self._map: Dict[int, Tuple[Tuple, int]] = {}
         self._overflow: List[RawStackSample] = []
+        # interned path: stack id -> count (+ pass-through ring)
+        self._sids: Dict[int, int] = {}
+        self._sid_overflow: List[Tuple[int, int]] = []
+        # leaf..root frame-id tuple -> (stack id, n_frames), agent lifetime
+        self._stack_memo: Dict[Tuple[int, ...], Tuple[int, int]] = {}
         self._lock = threading.Lock()
         self.stats = DrainStats()
 
+    # -- legacy boundary path ------------------------------------------------
     def record(self, sample: RawStackSample) -> None:
         key = hash(sample.frames)
         with self._lock:
@@ -54,16 +80,82 @@ class StackAggregator:
             ent = self._map.get(key)
             if ent is not None:
                 self._map[key] = (ent[0], ent[1] + sample.weight)
-            elif len(self._map) < self.max_entries:
+            elif len(self._map) + len(self._sids) < self.max_entries:
                 self._map[key] = (sample.frames, sample.weight)
             else:
                 self._overflow.append(sample)
 
+    # -- interned hot path ---------------------------------------------------
+    def _stack_entry(self, frame_ids: Tuple[int, ...]) -> Tuple[int, int]:
+        """leaf..root interned frame ids -> (stack id, n_frames),
+        memoized for the agent's lifetime; the reverse + table intern
+        happen once per unique stack, ever."""
+        ent = self._stack_memo.get(frame_ids)
+        if ent is None:
+            sid = self.tables.intern_stack_ids(tuple(reversed(frame_ids)))
+            ent = self._stack_memo[frame_ids] = (sid, len(frame_ids))
+        return ent
+
+    def intern_frames(self, frame_ids: Tuple[int, ...]) -> int:
+        """Stack id for leaf..root interned frame ids (see
+        :meth:`_stack_entry`)."""
+        return self._stack_entry(frame_ids)[0]
+
+    def record_frame_ids(self, frame_ids: Tuple[int, ...],
+                         weight: int = 1) -> None:
+        """One sampled stack as leaf..root interned frame ids — the whole
+        per-sample cost is two small dict operations."""
+        sid, nframes = self._stack_entry(frame_ids)
+        with self._lock:
+            self.stats.raw_samples += weight
+            self.stats.raw_bytes += (self._HEADER_BYTES
+                                     + self._FRAME_BYTES * nframes)
+            cnt = self._sids.get(sid)
+            if cnt is not None:
+                self._sids[sid] = cnt + weight
+            elif len(self._map) + len(self._sids) < self.max_entries:
+                self._sids[sid] = weight
+            else:
+                self._sid_overflow.append((sid, weight))
+
+    def record_sid(self, sid: int, weight: int = 1,
+                   nframes: Optional[int] = None) -> None:
+        """Pre-interned stack id (simulator feeds / replayed traces)."""
+        if nframes is None:
+            nframes = len(self.tables.stacks[sid])
+        with self._lock:
+            self.stats.raw_samples += weight
+            self.stats.raw_bytes += (self._HEADER_BYTES
+                                     + self._FRAME_BYTES * nframes)
+            cnt = self._sids.get(sid)
+            if cnt is not None:
+                self._sids[sid] = cnt + weight
+            elif len(self._map) + len(self._sids) < self.max_entries:
+                self._sids[sid] = weight
+            else:
+                self._sid_overflow.append((sid, weight))
+
+    # -- drain cycle ---------------------------------------------------------
     def drain(self) -> List[Tuple[Tuple, int]]:
-        """Returns [(frames, count)] and resets the map (the 5 s cycle)."""
+        """Returns [(frames, count)] and resets the map (the 5 s cycle).
+        Interned rows materialize lazily through the table's cached
+        root..leaf name tuples — the dataclass-view adapter for legacy
+        consumers.
+
+        NB the frames shape follows the record path: ``record`` rows
+        keep their raw leaf..root ``(build_id, offset)`` tuples, while
+        interned rows come out as root..leaf *name* tuples (exactly what
+        ``TraceTables.stack_tuple`` stores).  An aggregator fed by one
+        path — every production configuration — sees one shape."""
         with self._lock:
             out = list(self._map.values())
             out.extend((s.frames, s.weight) for s in self._overflow)
+            if self._sids or self._sid_overflow:
+                st = self.tables.stack_tuple
+                out.extend((st(sid), c) for sid, c in self._sids.items())
+                out.extend((st(sid), c) for sid, c in self._sid_overflow)
+                self._sids = {}
+                self._sid_overflow = []
             self._map.clear()
             self._overflow.clear()
             self.stats.unique_stacks += len(out)
@@ -71,3 +163,25 @@ class StackAggregator:
                 self.stats.drained_bytes += (self._HEADER_BYTES
                                              + self._FRAME_BYTES * len(frames))
         return out
+
+    def drain_columns(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Drain the interned side as parallel (stack id, count) columns —
+        what ``NodeAgent`` feeds straight into a ``ColumnarProfile``
+        upload; nothing is materialized per sample.  Legacy-path entries
+        (if any) stay buffered for :meth:`drain`."""
+        with self._lock:
+            rows = list(self._sids.items())
+            rows.extend(self._sid_overflow)
+            self._sids = {}
+            self._sid_overflow = []
+            self.stats.unique_stacks += len(rows)
+            stacks = self.tables.stacks
+            for sid, _c in rows:
+                self.stats.drained_bytes += (
+                    self._HEADER_BYTES
+                    + self._FRAME_BYTES * len(stacks[sid]))
+        if not rows:
+            return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
+        sids = np.array([r[0] for r in rows], dtype=np.int64)
+        counts = np.array([r[1] for r in rows], dtype=np.int64)
+        return sids, counts

@@ -8,6 +8,15 @@ paper's "Sampling Rate" column), and each kept tick snapshots every thread
 via sys._current_frames(), folds the Python stacks, and feeds the
 StackAggregator (in-process aggregation analog of the BPF map).
 
+Per-frame work is memoized per *code object* (the Python analog of the
+per-function marker map): the id-keyed memo holds the interned frame id,
+the legacy ``(filename, hashed name)`` pair and the symbolic name, so a
+kept tick does dict-lookup + tuple-append work only — no per-frame
+``hash()`` calls, no string formatting, and (on the interned path) no
+per-sample ``RawStackSample`` allocation.  Entries hold a weak reference
+to their code object and self-evict when it dies, so recycled ``id()``
+values can never alias a dead function.
+
 The overhead benchmark attaches this to real JAX training and measures
 throughput during/after profiling exactly like §5.1.
 """
@@ -16,10 +25,24 @@ from __future__ import annotations
 import sys
 import threading
 import time
+import weakref
 from typing import Dict, Optional, Tuple
 
 from repro.core.aggregate import StackAggregator
 from repro.core.events import RawStackSample
+
+
+class _CodeEntry:
+    """Memoized per-code-object views (see module docstring)."""
+
+    __slots__ = ("ref", "pair", "name", "fid")
+
+    def __init__(self, ref, pair: Tuple[str, int], name: str,
+                 fid: Optional[int]):
+        self.ref = ref
+        self.pair = pair
+        self.name = name
+        self.fid = fid
 
 
 class SamplingProfiler:
@@ -33,33 +56,79 @@ class SamplingProfiler:
         self.exclude_self = exclude_self
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._code_memo: Dict[int, _CodeEntry] = {}
         self.ticks = 0
         self.kept = 0
         self.cpu_seconds = 0.0      # profiler thread CPU time (overhead)
         self.wall_seconds = 0.0
 
     # ------------------------------------------------------------------
+    def _intern_code(self, code) -> _CodeEntry:
+        memo = self._code_memo
+        key = id(code)
+        # weakref callback evicts on code death => a recycled id() can
+        # never serve a stale entry (the identity re-check below guards
+        # the window between death and callback)
+        ref = weakref.ref(code, lambda _r, _k=key: memo.pop(_k, None))
+        filename, name = code.co_filename, code.co_name
+        tables = self.aggregator.tables
+        fid = (tables.strings.intern(f"{filename}:{name}")
+               if tables is not None else None)
+        ent = _CodeEntry(ref, (filename, hash(name) & 0xFFFFFFFF), name, fid)
+        memo[key] = ent
+        return ent
+
+    def _code_entry(self, code) -> _CodeEntry:
+        ent = self._code_memo.get(id(code))
+        if ent is None or ent.ref() is not code:
+            ent = self._intern_code(code)
+        return ent
+
     def _snapshot(self) -> None:
+        # NB the memo lookup + identity re-check (= _code_entry) is
+        # deliberately inlined in both loops below: this runs per frame
+        # per kept tick and a method call each would be measurable
         me = threading.get_ident()
         now = time.monotonic()
+        agg = self.aggregator
+        interned = agg.tables is not None
+        memo_get = self._code_memo.get
         for tid, frame in sys._current_frames().items():
             if self.exclude_self and tid == me:
                 continue
-            frames = []
-            f = frame
-            while f is not None:
-                # (file, hashed code name) plays the (build_id, offset) role
-                frames.append((f.f_code.co_filename,
-                               hash(f.f_code.co_name) & 0xFFFFFFFF))
-                f = f.f_back
-            if frames:
-                self.aggregator.record(RawStackSample(
-                    rank=self.rank, timestamp=now,
-                    frames=tuple(frames)))
+            if interned:
+                fids = []
+                f = frame
+                while f is not None:
+                    code = f.f_code
+                    ent = memo_get(id(code))
+                    if ent is None or ent.ref() is not code:
+                        ent = self._intern_code(code)
+                    fids.append(ent.fid)
+                    f = f.f_back
+                if fids:
+                    agg.record_frame_ids(tuple(fids))
+            else:
+                frames = []
+                f = frame
+                while f is not None:
+                    code = f.f_code
+                    ent = memo_get(id(code))
+                    if ent is None or ent.ref() is not code:
+                        ent = self._intern_code(code)
+                    # (file, hashed code name) plays the (build_id,
+                    # offset) role — memoized, not re-hashed per tick
+                    frames.append(ent.pair)
+                    f = f.f_back
+                if frames:
+                    agg.record(RawStackSample(
+                        rank=self.rank, timestamp=now,
+                        frames=tuple(frames)))
 
     def _named_snapshot(self) -> Dict[int, Tuple[str, ...]]:
         """Symbolic variant used by the agent pipeline (names directly)."""
         me = threading.get_ident()
+        code_entry = self._code_entry
         out = {}
         for tid, frame in sys._current_frames().items():
             if self.exclude_self and tid == me:
@@ -67,7 +136,7 @@ class SamplingProfiler:
             names = []
             f = frame
             while f is not None:
-                names.append(f.f_code.co_name)
+                names.append(code_entry(f.f_code).name)
                 f = f.f_back
             out[tid] = tuple(reversed(names))
         return out

@@ -18,6 +18,8 @@ import bisect
 import struct
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 _MAGIC = 0x53594D42  # "SYMB"
 _HDR = struct.Struct("<IIQQ")
 _REC = struct.Struct("<QII")
@@ -83,6 +85,52 @@ class SymbolFile:
             return None
         s = self.strings_off + name_off
         return self.blob[s:s + name_len].decode()
+
+    # -- batch lookup ----------------------------------------------------------
+    _REC_DTYPE = np.dtype([("addr", "<u8"), ("off", "<u4"), ("len", "<u4")])
+
+    def _records_view(self) -> np.ndarray:
+        """Zero-copy structured view of the record section (cached) — the
+        batch path's replacement for per-address record reads."""
+        recs = getattr(self, "_recs_np", None)
+        if recs is None:
+            recs = self._recs_np = np.frombuffer(
+                self.blob, dtype=self._REC_DTYPE, count=self.count,
+                offset=_HDR.size)
+            self._name_cache: Dict[int, str] = {}
+        return recs
+
+    def resolve_batch(self, addrs: np.ndarray,
+                      max_distance: Optional[int] = None
+                      ) -> List[Optional[str]]:
+        """Vectorized nearest-lower-address match: one ``np.searchsorted``
+        over the whole batch, then one string decode per *unique* record
+        touched (cached across calls).  Same result as ``resolve`` per
+        address."""
+        self.batch_lookups = getattr(self, "batch_lookups", 0) + 1
+        if self.count == 0:
+            return [None] * int(np.asarray(addrs).shape[0])
+        recs = self._records_view()
+        addrs = np.asarray(addrs, dtype=np.uint64)
+        idx = np.searchsorted(recs["addr"], addrs, side="right") - 1
+        out: List[Optional[str]] = []
+        cache = self._name_cache
+        strings_off = self.strings_off
+        blob = self.blob
+        for a, i in zip(addrs.tolist(), idx.tolist()):
+            if i < 0:
+                out.append(None)
+                continue
+            rec = recs[i]
+            if max_distance is not None and a - int(rec["addr"]) > max_distance:
+                out.append(None)
+                continue
+            name = cache.get(i)
+            if name is None:
+                s = strings_off + int(rec["off"])
+                name = cache[i] = blob[s:s + int(rec["len"])].decode()
+            out.append(name)
+        return out
 
     def nbytes(self) -> int:
         return len(self.blob)

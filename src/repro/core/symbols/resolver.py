@@ -10,11 +10,35 @@ function precisely.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.events import RawStackSample, StackSample
 from repro.core.symbols.repo import SymbolFile, SymbolRepository
 from repro.core.unwind.procmodel import Binary
+
+
+def _resolve_frames_batch(get_table, frames: Sequence[Tuple[str, int]]
+                          ) -> List[str]:
+    """Shared batch symbolization: group a (build_id, offset) frame list
+    by Build ID and resolve each group with one vectorized
+    ``SymbolFile.resolve_batch`` call; unknown Build IDs / unresolved
+    offsets keep the ``[bid+0xoff]`` placeholder form."""
+    out: List[Optional[str]] = [None] * len(frames)
+    by_bid: Dict[str, List[int]] = {}
+    for i, (bid, _off) in enumerate(frames):
+        by_bid.setdefault(bid, []).append(i)
+    for bid, idxs in by_bid.items():
+        table = get_table(bid)
+        if table is not None:
+            offs = np.array([frames[i][1] for i in idxs], dtype=np.uint64)
+            for i, name in zip(idxs, table.resolve_batch(offs)):
+                if name:        # falsy check == scalar resolve_frame
+                    out[i] = name
+    return [name if name
+            else f"[{frames[i][0][:8]}+{frames[i][1]:#x}]"
+            for i, name in enumerate(out)]
 
 
 def sparse_table(binary: Binary) -> SymbolFile:
@@ -50,6 +74,29 @@ class NodeSideResolver:
         return StackSample(rank=raw.rank, timestamp=raw.timestamp,
                            frames=names, weight=raw.weight)
 
+    def resolve_frames_batch(self, frames: Sequence[Tuple[str, int]]
+                             ) -> List[str]:
+        """Batch ``resolve_frame`` (input order preserved)."""
+        return _resolve_frames_batch(self._tables.get, frames)
+
+    def symbolize_batch(self, raws: Sequence[RawStackSample]
+                        ) -> List[StackSample]:
+        """Symbolize many raw stacks with one vectorized pass per Build
+        ID instead of a per-frame bisect each."""
+        flat: List[Tuple[str, int]] = []
+        for raw in raws:
+            flat.extend(raw.frames)
+        names = _resolve_frames_batch(self._tables.get, flat)
+        out, pos = [], 0
+        for raw in raws:
+            n = len(raw.frames)
+            out.append(StackSample(
+                rank=raw.rank, timestamp=raw.timestamp,
+                frames=tuple(reversed(names[pos:pos + n])),
+                weight=raw.weight))
+            pos += n
+        return out
+
 
 class CentralResolver:
     """Central-service resolution against the Build-ID repository."""
@@ -80,3 +127,25 @@ class CentralResolver:
         names = tuple(self.resolve_frame(b, o) for b, o in reversed(raw.frames))
         return StackSample(rank=raw.rank, timestamp=raw.timestamp,
                            frames=names, weight=raw.weight)
+
+    def resolve_frames_batch(self, frames: Sequence[Tuple[str, int]]
+                             ) -> List[str]:
+        """Batch ``resolve_frame`` (input order preserved)."""
+        return _resolve_frames_batch(self.repo.get, frames)
+
+    def symbolize_batch(self, raws: Sequence[RawStackSample]
+                        ) -> List[StackSample]:
+        """Batch ``symbolize`` — one vectorized pass per Build ID."""
+        flat: List[Tuple[str, int]] = []
+        for raw in raws:
+            flat.extend(raw.frames)
+        names = _resolve_frames_batch(self.repo.get, flat)
+        out, pos = [], 0
+        for raw in raws:
+            n = len(raw.frames)
+            out.append(StackSample(
+                rank=raw.rank, timestamp=raw.timestamp,
+                frames=tuple(reversed(names[pos:pos + n])),
+                weight=raw.weight))
+            pos += n
+        return out

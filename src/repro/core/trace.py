@@ -56,9 +56,9 @@ from repro.core.events import (CollectiveEvent, IterationProfile, KernelEvent,
 __all__ = [
     "WIRE_MAGIC", "WIRE_VERSION", "WIRE_MIN_VERSION", "WireFormatError",
     "StringTable", "TraceTables", "ColumnFlameGraph", "ColumnarProfile",
-    "ColumnarBatch", "profile_to_columnar", "to_columnar", "to_dataclasses",
-    "batch_fraction_rows", "TableRemap", "RemapCache", "remap_profile",
-    "encode_batch", "decode_batch",
+    "ColumnarBatch", "profile_to_columnar", "stacks_profile", "to_columnar",
+    "to_dataclasses", "batch_fraction_rows", "TableRemap", "RemapCache",
+    "remap_profile", "encode_batch", "decode_batch",
 ]
 
 WIRE_MAGIC = b"SYTC"
@@ -499,6 +499,24 @@ def profile_to_columnar(p: IterationProfile,
         coll_instance=_arr((c.instance for c in p.collectives), _I64),
         coll_seq=_arr((c.seq for c in p.collectives), _I64),
         os_signals=p.os_signals)
+
+
+def stacks_profile(tables: TraceTables, *, rank: int, iteration: int,
+                   group_id: str, iter_time: float, sids: np.ndarray,
+                   weights: np.ndarray, timestamp: float,
+                   kind: str = "cpu") -> ColumnarProfile:
+    """Build a stacks-only ``ColumnarProfile`` straight from aggregated
+    (stack id, weight) columns — the agent's drain-to-upload path, with
+    no per-sample dataclass materialization.  All rows share the drain
+    ``timestamp`` (aggregation collapses per-sample times by design)."""
+    n = int(np.asarray(sids).shape[0])
+    return ColumnarProfile(
+        rank=rank, iteration=iteration, group_id=group_id,
+        iter_time=iter_time, tables=tables,
+        stack_ts=np.full(n, timestamp, dtype=np.float64),
+        stack_weight=np.ascontiguousarray(weights, dtype=_I64),
+        stack_kind=np.full(n, tables.strings.intern(kind), dtype=np.int64),
+        stack_id=np.ascontiguousarray(sids, dtype=_I64))
 
 
 @dataclasses.dataclass

@@ -18,6 +18,8 @@ import bisect
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.unwind.procmodel import Binary, SimThread, WORD
 
 
@@ -37,6 +39,12 @@ class FDETable:
         fdes = sorted(binary.eh_frame())
         self._starts = [f[0] for f in fdes]
         self._fdes = [FDE(s, e, fs, cx) for s, e, fs, cx in fdes]
+        # flat numpy columns for the batch path: one np.searchsorted over
+        # every pending offset of a batch replaces per-PC bisects
+        self._starts_np = np.array(self._starts, dtype=np.int64)
+        self._ends_np = np.array([f[1] for f in fdes], dtype=np.int64)
+        self._frame_np = np.array([f[2] for f in fdes], dtype=np.int64)
+        self._complex_np = np.array([f[3] for f in fdes], dtype=bool)
         self.lookups = 0
         self.bisect_iterations = 0
 
@@ -55,6 +63,25 @@ class FDETable:
         if not (f.start <= offset < f.end):
             return None
         return f
+
+    def lookup_batch(self, offsets: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized lookup for a batch of offsets: returns parallel
+        ``(frame_sizes, complex_flags, valid)`` arrays.  Cost accounting
+        matches the scalar path (one ceil(log2 M) bisect per offset) so
+        the §3.3 cost instrument stays comparable across paths."""
+        n = len(self._starts)
+        self.lookups += offsets.shape[0]
+        self.bisect_iterations += offsets.shape[0] * max(1, n.bit_length())
+        if n == 0:
+            z = np.zeros(offsets.shape[0], dtype=np.int64)
+            return z, np.zeros(offsets.shape[0], dtype=bool), \
+                np.zeros(offsets.shape[0], dtype=bool)
+        idx = np.searchsorted(self._starts_np, offsets, side="right") - 1
+        safe = np.clip(idx, 0, n - 1)
+        valid = ((idx >= 0) & (offsets >= self._starts_np[safe])
+                 & (offsets < self._ends_np[safe]))
+        return self._frame_np[safe], self._complex_np[safe], valid
 
 
 def preprocess_eh_frame(binary: Binary) -> FDETable:
@@ -77,13 +104,23 @@ class DwarfUnwinder:
         return build_id in self.tables
 
     def unwind(self, thread: SimThread, pc: int, sp: int,
-               allow_userspace_fallback: bool = True
+               allow_userspace_fallback: bool = True,
+               resolved: Optional[Tuple[str, int]] = None,
+               deps: Optional[list] = None
                ) -> Optional[Tuple[int, int, int]]:
-        """Returns (pc', sp', fp') or None."""
-        resolved = thread.proc.resolve(pc)
+        """Returns (pc', sp', fp') or None.
+
+        ``resolved`` lets a caller that already mapped the PC (the batch
+        path) skip the second address-space walk; ``deps`` collects the
+        ``(addr, raw word)`` reads this step performed so the result can
+        be memoized with a validatable dependency footprint."""
         if resolved is None:
-            return None
-        build_id, offset, _fn = resolved
+            r = thread.proc.resolve(pc)
+            if r is None:
+                return None
+            build_id, offset = r[0], r[1]
+        else:
+            build_id, offset = resolved
         table = self.tables.get(build_id)
         if table is None:
             return None  # dlopen'd binary not yet pre-processed (§4)
@@ -95,9 +132,20 @@ class DwarfUnwinder:
                 return None
             # userspace fallback interprets the expression (slow, counted)
             self.complex_fallbacks += 1
-        cfa = sp + fde.frame_size + 2 * WORD
+        return self.unwind_fde(thread, sp, fde.frame_size, deps)
+
+    @staticmethod
+    def unwind_fde(thread: SimThread, sp: int, frame_size: int,
+                   deps: Optional[list] = None
+                   ) -> Optional[Tuple[int, int, int]]:
+        """The Phase-2 register-restore given an already-looked-up FDE
+        frame size (shared by the scalar and batch paths)."""
+        cfa = sp + frame_size + 2 * WORD
         ra = thread.read_word(cfa - WORD)
         saved_fp = thread.read_word(cfa - 2 * WORD)
+        if deps is not None:
+            deps.append((cfa - WORD, ra))
+            deps.append((cfa - 2 * WORD, saved_fp))
         if ra is None:
             return None
         return ra, cfa, (saved_fp if saved_fp is not None else 0)

@@ -22,6 +22,20 @@ def unwind_fp(thread: SimThread, pc: int, sp: int, fp: int
     return ra, fp + 2 * WORD, saved_fp
 
 
+def unwind_fp_traced(thread: SimThread, pc: int, sp: int, fp: int,
+                     deps: list) -> Optional[Tuple[int, int, int]]:
+    """``unwind_fp`` recording its ``(addr, raw word)`` reads into
+    ``deps`` — the dependency footprint the batch unwinder's stack memo
+    re-validates on a hit (a changed word forces a fresh walk)."""
+    saved_fp = thread.read_word(fp)
+    ra = thread.read_word(fp + WORD)
+    deps.append((fp, saved_fp))
+    deps.append((fp + WORD, ra))
+    if saved_fp is None or ra is None:
+        return None
+    return ra, fp + 2 * WORD, saved_fp
+
+
 def unwind_fp_only(thread: SimThread, max_depth: int = 127) -> list:
     """The FP-only baseline profiler of Fig 3: blind rbp-chain walk with no
     validation and no DWARF fallback.  Truncates (or misattributes) at the

@@ -1,4 +1,4 @@
-"""Adaptive hybrid FP+DWARF stack unwinding — Algorithm 1, verbatim (§3.3).
+"""Adaptive hybrid FP+DWARF stack unwinding — Algorithm 1 (§3.3).
 
     while PC is in a mapped executable region:
         m = GetMarker(BuildID(PC), Offset(PC))
@@ -8,16 +8,44 @@
         else:          UnwindDWARF
         append pc'; advance
 
-Per-sample cost is tracked so the §5.1 cost claim (steady state ~ pure FP)
-is measurable: FP steps are O(1); DWARF steps cost a ceil(log2 M) bisect.
+Two execution paths share these semantics:
+
+  * ``unwind`` — the scalar Algorithm-1 loop, verbatim (one sample at a
+    time; per-PC resolution and marker lookups).  This is the oracle the
+    differential tests compare against.
+  * ``unwind_batch`` — the production-shaped hot path: all pending PCs
+    of a batch resolve through flat numpy tables (``np.searchsorted``
+    over mapping starts, per-binary function tables, marker-code arrays
+    and FDE columns), and completed walks land in a leaf-``(PC, SP,
+    FP)``-keyed memo.  A memo hit replays a previously unwound stack
+    after re-validating the exact memory words the original walk read —
+    two word reads per frame, i.e. pure-FP cost — so at a steady 99 Hz
+    where hot stacks repeat, per-sample cost degenerates to the §5.1
+    claim.  ``UnwindStats.fp_fraction`` counts memo-verified frames as
+    FP-cost steps to keep that measurable.
+
+Marking rule: a failed FP validation marks the function ``dwarf`` only
+when the DWARF step actually produces a caller frame.  A walk that dies
+at the chain root (no caller to validate against) leaves the function
+unmarked — truncation is not evidence about frame-pointer behavior, and
+the marker value stays a pure function of the code, independent of the
+order samples are processed (what makes batch and scalar marker state
+byte-identical).
+
+Per-sample cost is tracked so the §5.1 cost claim (steady state ~ pure
+FP) is measurable: FP steps are O(1); DWARF steps cost a ceil(log2 M)
+bisect; memo frames cost two word reads.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.unwind.dwarf import DwarfUnwinder
-from repro.core.unwind.fp import unwind_fp, validate_caller_pc
+from repro.core.unwind.fp import unwind_fp, unwind_fp_traced, validate_caller_pc
 from repro.core.unwind.markers import Marker, MarkerMap
 from repro.core.unwind.procmodel import SimProcess, SimThread
 
@@ -31,32 +59,83 @@ class UnwindStats:
     validations: int = 0
     validation_failures: int = 0
     truncated: int = 0
+    batches: int = 0
+    memo_hits: int = 0
+    memo_frames: int = 0
+    memo_invalidations: int = 0
 
     @property
     def fp_fraction(self) -> float:
-        total = self.fp_steps + self.dwarf_steps
-        return self.fp_steps / total if total else 0.0
+        """Fraction of frame-steps that ran at O(1) FP cost.  Memo-hit
+        frames re-validate two memory words apiece — the same touch count
+        as an FP step — so they count on the FP side; only DWARF steps
+        pay the log2(M) bisect."""
+        total = self.fp_steps + self.dwarf_steps + self.memo_frames
+        return (self.fp_steps + self.memo_frames) / total if total else 0.0
+
+
+class _MemoEntry:
+    """One memoized walk: the stack plus the exact (addr, raw word)
+    reads it performed — stored as parallel tuples so a hit re-validates
+    with one C-level ``map`` + tuple compare.  A changed word forces a
+    fresh walk."""
+
+    __slots__ = ("stack", "dep_addrs", "dep_vals", "proc_ref",
+                 "maps_version")
+
+    def __init__(self, stack: Tuple[int, ...],
+                 deps: List[Tuple[int, Optional[int]]],
+                 proc: SimProcess):
+        self.stack = stack
+        self.dep_addrs = tuple(d[0] for d in deps)
+        self.dep_vals = tuple(d[1] for d in deps)
+        self.proc_ref = weakref.ref(proc)
+        self.maps_version = proc._maps_version
+
+
+class _Walk:
+    """In-flight state of one sample inside ``unwind_batch``."""
+
+    __slots__ = ("idx", "thread", "pc", "sp", "fp", "stack", "deps",
+                 "key", "aliases")
+
+    def __init__(self, idx: int, thread: SimThread, key):
+        self.idx = idx
+        self.thread = thread
+        r = thread.registers
+        self.pc, self.sp, self.fp = r.pc, r.sp, r.fp
+        self.stack: List[int] = [self.pc]
+        self.deps: List[Tuple[int, Optional[int]]] = []
+        self.key = key
+        self.aliases: List[int] = []
 
 
 class HybridUnwinder:
-    MAX_DEPTH = 127  # eBPF-analog bounded walk
+    MAX_DEPTH = 127       # eBPF-analog bounded walk
+    MEMO_MAX = 65536      # bounded like the BPF stack map
 
     def __init__(self, markers: Optional[MarkerMap] = None,
                  dwarf: Optional[DwarfUnwinder] = None):
         self.markers = markers or MarkerMap()
         self.dwarf = dwarf or DwarfUnwinder()
         self.stats = UnwindStats()
+        self._memo: Dict[Tuple[int, int, int, int], _MemoEntry] = {}
 
     def register_binary(self, binary) -> None:
         self.dwarf.add_binary(binary)
+        self.markers.register_table(binary.build_id, binary.fn_arrays()[0])
         if any(f.is_jit for f in binary.functions):
             for f in binary.functions:
                 if f.is_jit:
                     self.markers.mark_jit(binary.build_id, f.offset)
+        # new unwind info can extend previously truncated walks (§4
+        # dlopen/maps-poll): cached stacks are stale, drop them
+        self._memo.clear()
 
     # ------------------------------------------------------------------
     def unwind(self, thread: SimThread) -> List[int]:
-        """Returns the PC list (leaf..root), Algorithm 1."""
+        """Returns the PC list (leaf..root), Algorithm 1 — the scalar
+        oracle path."""
         proc = thread.proc
         pc, sp, fp = (thread.registers.pc, thread.registers.sp,
                       thread.registers.fp)
@@ -69,7 +148,7 @@ class HybridUnwinder:
             resolved = proc.resolve(pc)
             if resolved is None:
                 break
-            build_id, _off, fn = resolved
+            build_id, off, fn = resolved
             m = self.markers.get(build_id, fn.offset)
 
             nxt: Optional[Tuple[int, int, int]] = None
@@ -84,15 +163,19 @@ class HybridUnwinder:
                     self.stats.fp_steps += 1
                 else:
                     self.stats.validation_failures += 1
-                    nxt = self.dwarf.unwind(thread, pc, sp)
-                    self.markers.compare_and_swap(
-                        build_id, fn.offset, Marker.UNMARKED, Marker.DWARF)
+                    nxt = self.dwarf.unwind(thread, pc, sp,
+                                            resolved=(build_id, off))
+                    if nxt is not None:
+                        self.markers.compare_and_swap(
+                            build_id, fn.offset, Marker.UNMARKED,
+                            Marker.DWARF)
                     self.stats.dwarf_steps += 1
             elif m is Marker.FP:
                 nxt = unwind_fp(thread, pc, sp, fp)
                 self.stats.fp_steps += 1
             else:  # DWARF
-                nxt = self.dwarf.unwind(thread, pc, sp)
+                nxt = self.dwarf.unwind(thread, pc, sp,
+                                        resolved=(build_id, off))
                 self.stats.dwarf_steps += 1
 
             if nxt is None:
@@ -105,6 +188,214 @@ class HybridUnwinder:
             self.stats.frames += 1
 
         return stack
+
+    # ------------------------------------------------------------------
+    # batch path
+    # ------------------------------------------------------------------
+    def unwind_batch(self, threads: Sequence[SimThread]) -> List[List[int]]:
+        """Unwind every thread of a batch; returns per-thread PC lists
+        (leaf..root) in input order, byte-identical to calling
+        :meth:`unwind` on each thread in sequence.
+
+        All pending PCs of a depth level resolve in one vectorized pass
+        (mapping + function + marker + FDE tables are flat arrays);
+        per-thread work is reduced to the memory dereferences the
+        algorithm genuinely needs.  Completed walks are memoized by leaf
+        ``(PC, SP, FP)`` with their exact read footprint."""
+        results: List[Optional[List[int]]] = [None] * len(threads)
+        by_proc: Dict[int, List[int]] = {}
+        for i, t in enumerate(threads):
+            by_proc.setdefault(id(t.proc), []).append(i)
+        for idxs in by_proc.values():
+            self._unwind_batch_proc(threads, idxs, results)
+        return results  # type: ignore[return-value]
+
+    def _memo_valid(self, ent: _MemoEntry, thread: SimThread) -> bool:
+        proc = thread.proc
+        if ent.proc_ref() is not proc \
+                or ent.maps_version != proc._maps_version:
+            return False
+        return tuple(map(thread.memory.get, ent.dep_addrs)) == ent.dep_vals
+
+    def _replay(self, ent: _MemoEntry, idx: int, results: List) -> None:
+        self.stats.memo_hits += 1
+        n = len(ent.stack) - 1
+        self.stats.memo_frames += n
+        self.stats.frames += n
+        results[idx] = list(ent.stack)
+
+    def _finalize(self, w: _Walk, results: List) -> None:
+        stack = w.stack
+        results[w.idx] = stack
+        if w.key is not None:
+            memo = self._memo
+            if len(memo) >= self.MEMO_MAX:
+                # bounded like the BPF stack map: FIFO-evict the oldest
+                # entry (dict preserves insertion order) so a long-lived
+                # unwinder surviving process churn keeps memoizing
+                memo.pop(next(iter(memo)))
+            memo[w.key] = _MemoEntry(tuple(stack), w.deps, w.thread.proc)
+        for alias in w.aliases:
+            self.stats.memo_hits += 1
+            self.stats.memo_frames += len(stack) - 1
+            self.stats.frames += len(stack) - 1
+            results[alias] = list(stack)
+
+    def _advance(self, w: _Walk, nxt, proc: SimProcess,
+                 next_active: List[_Walk], results: List) -> None:
+        if nxt is None:
+            self.stats.truncated += 1
+            self._finalize(w, results)
+            return
+        pc, sp, fp = nxt
+        w.pc, w.sp, w.fp = pc, sp, fp
+        if not proc.is_executable_fast(pc):
+            self._finalize(w, results)   # sentinel / end of stack
+            return
+        w.stack.append(pc)
+        self.stats.frames += 1
+        next_active.append(w)
+
+    def _unwind_batch_proc(self, threads, idxs: List[int],
+                           results: List) -> None:
+        proc = threads[idxs[0]].proc
+        self.stats.batches += 1
+        active: List[_Walk] = []
+        pending: Dict[Tuple[int, int, int, int], _Walk] = {}
+        for i in idxs:
+            t = threads[i]
+            self.stats.samples += 1
+            r = t.registers
+            key = (id(proc), r.pc, r.sp, r.fp)
+            ent = self._memo.get(key)
+            if ent is not None:
+                if self._memo_valid(ent, t):
+                    self._replay(ent, i, results)
+                    continue
+                self.stats.memo_invalidations += 1
+                del self._memo[key]
+            prior = pending.get(key)
+            if prior is not None and prior.thread is t:
+                # same thread sampled twice in one batch: dedupe the walk
+                prior.aliases.append(i)
+                continue
+            w = _Walk(i, t, key)
+            pending[key] = w
+            active.append(w)
+
+        _mst, _men, _mex, map_bins, _msl = proc.flat_maps()
+        exec_fast = proc.is_executable_fast
+        markers = self.markers
+        cas = markers.compare_and_swap
+        UNMARKED, FP, DWARF = Marker.UNMARKED, Marker.FP, Marker.DWARF
+
+        for _level in range(self.MAX_DEPTH):
+            if not active:
+                break
+            pcs = np.array([w.pc for w in active], dtype=np.int64)
+            mi, offs, valid = proc.resolve_batch(pcs)
+
+            # per-binary function + marker resolution ----------------------
+            n = len(active)
+            ok = valid.tolist()
+            fstart_l = [0] * n
+            pcoff_l = offs.tolist()
+            bid_l: List[Optional[str]] = [None] * n
+            code_l = [0] * n
+            by_bin: Dict[int, List[int]] = {}
+            mi_l = mi.tolist()
+            for j in range(n):
+                if ok[j]:
+                    by_bin.setdefault(mi_l[j], []).append(j)
+            for m, js in by_bin.items():
+                binary = map_bins[m]
+                starts, ends = binary.fn_arrays()
+                o = offs[js]
+                if starts.shape[0] == 0:
+                    for j in js:
+                        ok[j] = False
+                    continue
+                k = np.searchsorted(starts, o, side="right") - 1
+                ksafe = np.clip(k, 0, starts.shape[0] - 1)
+                inside = ((k >= 0) & (o < ends[ksafe])).tolist()
+                f_starts = starts[ksafe]
+                codes = markers.get_batch(binary.build_id, f_starts)
+                bid = binary.build_id
+                for jj, j in enumerate(js):
+                    if not inside[jj]:
+                        ok[j] = False
+                        continue
+                    bid_l[j] = bid
+                    fstart_l[j] = int(f_starts[jj])
+                    code_l[j] = int(codes[jj])
+
+            # per-thread steps (sample order within the level) -------------
+            next_active: List[_Walk] = []
+            dwarf_pending: List[Tuple[_Walk, str, int, int, bool]] = []
+            for j, w in enumerate(active):
+                if not ok[j]:
+                    self._finalize(w, results)   # unmapped / gap / NX
+                    continue
+                code = code_l[j]
+                if code == 1:      # FP-marked
+                    nxt = unwind_fp_traced(w.thread, w.pc, w.sp, w.fp,
+                                           w.deps)
+                    self.stats.fp_steps += 1
+                    self._advance(w, nxt, proc, next_active, results)
+                elif code == 0:    # unmarked: validate-FP-else-DWARF
+                    self.stats.validations += 1
+                    cand = unwind_fp_traced(w.thread, w.pc, w.sp, w.fp,
+                                            w.deps)
+                    if cand is not None and cand[0] is not None \
+                            and cand[1] is not None and cand[1] > w.sp \
+                            and exec_fast(cand[0]):
+                        cas(bid_l[j], fstart_l[j], UNMARKED, FP)
+                        self.stats.fp_steps += 1
+                        self._advance(w, cand, proc, next_active, results)
+                    else:
+                        self.stats.validation_failures += 1
+                        dwarf_pending.append(
+                            (w, bid_l[j], pcoff_l[j], fstart_l[j], True))
+                else:              # DWARF-marked
+                    dwarf_pending.append(
+                        (w, bid_l[j], pcoff_l[j], fstart_l[j], False))
+
+            # batched DWARF lookups, grouped by Build ID -------------------
+            if dwarf_pending:
+                by_bid: Dict[str, List[Tuple[_Walk, str, int, int, bool]]] \
+                    = {}
+                for rec in dwarf_pending:
+                    by_bid.setdefault(rec[1], []).append(rec)
+                for bid, recs in by_bid.items():
+                    table = self.dwarf.tables.get(bid)
+                    if table is None:   # dlopen'd, not yet pre-processed
+                        for w, _b, _o, _f, _u in recs:
+                            self.stats.dwarf_steps += 1
+                            self._advance(w, None, proc, next_active,
+                                          results)
+                        continue
+                    o = np.array([rec[2] for rec in recs], dtype=np.int64)
+                    fsz, cx, fok = table.lookup_batch(o)
+                    fsz_l, cx_l, fok_l = (fsz.tolist(), cx.tolist(),
+                                          fok.tolist())
+                    for jj, (w, _b, _o, f_start, was_unmarked) \
+                            in enumerate(recs):
+                        if not fok_l[jj]:
+                            nxt = None
+                        else:
+                            if cx_l[jj]:
+                                self.dwarf.complex_fallbacks += 1
+                            nxt = DwarfUnwinder.unwind_fde(
+                                w.thread, w.sp, fsz_l[jj], w.deps)
+                        self.stats.dwarf_steps += 1
+                        if was_unmarked and nxt is not None:
+                            cas(bid, f_start, UNMARKED, DWARF)
+                        self._advance(w, nxt, proc, next_active, results)
+
+            active = next_active
+
+        for w in active:          # MAX_DEPTH exhausted
+            self._finalize(w, results)
 
     # ------------------------------------------------------------------
     def unwind_symbolized_truthcheck(self, thread: SimThread):

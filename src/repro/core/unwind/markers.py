@@ -6,12 +6,25 @@ code starts unmarked and converges.  Concurrent CPUs may race on the same
 unmarked function: updates use compare-and-swap so races converge to one
 value (§4) — reproduced with a lock-based CAS providing identical
 semantics.
+
+Two representations back the same state:
+
+  * ``_map`` — the canonical ``(build_id, offset) -> Marker`` dict the
+    scalar Algorithm-1 loop reads (and the unit differential tests
+    compare byte-for-byte);
+  * per-build-id *flat tables* — a sorted function-offset array plus a
+    ``uint8`` marker-code array, registered once per binary, so the
+    batch unwinder fetches the markers for every pending PC of a batch
+    with one ``np.searchsorted`` + gather instead of per-PC tuple-hash
+    dict lookups.  CAS updates both under the same lock.
 """
 from __future__ import annotations
 
 import enum
 import threading
 from typing import Dict, Tuple
+
+import numpy as np
 
 
 class Marker(enum.Enum):
@@ -20,14 +33,65 @@ class Marker(enum.Enum):
     DWARF = 2
 
 
+#: Marker-code decode table for the flat representation.
+MARKER_BY_CODE = (Marker.UNMARKED, Marker.FP, Marker.DWARF)
+
+
 class MarkerMap:
     def __init__(self):
         self._map: Dict[Tuple[str, int], Marker] = {}
         self._lock = threading.Lock()
+        # build_id -> (sorted function-offset array, uint8 marker codes)
+        self._flat: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
         self.cas_conflicts = 0
 
     def get(self, build_id: str, func_offset: int) -> Marker:
         return self._map.get((build_id, func_offset), Marker.UNMARKED)
+
+    # -- flat tables (batch path) -------------------------------------------
+    def register_table(self, build_id: str, fn_offsets: np.ndarray) -> None:
+        """Install the flat marker table for one binary (idempotent).
+        Existing dict entries are folded in so a table registered late
+        still reflects prior scalar marking."""
+        with self._lock:
+            if build_id in self._flat:
+                return
+            starts = np.asarray(fn_offsets, dtype=np.int64)
+            codes = np.zeros(starts.shape[0], dtype=np.uint8)
+            for i, off in enumerate(starts.tolist()):
+                m = self._map.get((build_id, off))
+                if m is not None:
+                    codes[i] = m.value
+            self._flat[build_id] = (starts, codes)
+
+    def has_table(self, build_id: str) -> bool:
+        return build_id in self._flat
+
+    def get_batch(self, build_id: str, fn_offsets: np.ndarray) -> np.ndarray:
+        """Marker codes for a batch of *function start* offsets in one
+        gather.  Offsets not covered by the registered table fall back to
+        the dict (and code 0 = unmarked when absent)."""
+        flat = self._flat.get(build_id)
+        if flat is None:
+            g = self._map.get
+            return np.array(
+                [g((build_id, int(o)), Marker.UNMARKED).value
+                 for o in fn_offsets],
+                dtype=np.uint8)
+        starts, codes = flat
+        idx = np.searchsorted(starts, fn_offsets)
+        idx = np.clip(idx, 0, max(starts.shape[0] - 1, 0))
+        if starts.shape[0] == 0:
+            return np.zeros(fn_offsets.shape[0], dtype=np.uint8)
+        out = codes[idx]
+        # offsets that are not exact table entries (unregistered/JIT holes)
+        miss = starts[idx] != fn_offsets
+        if miss.any():
+            g = self._map.get
+            for j in np.nonzero(miss)[0].tolist():
+                out[j] = g((build_id, int(fn_offsets[j])),
+                           Marker.UNMARKED).value
+        return out
 
     def compare_and_swap(self, build_id: str, func_offset: int,
                          expected: Marker, new: Marker) -> Marker:
@@ -38,6 +102,12 @@ class MarkerMap:
             cur = self._map.get(key, Marker.UNMARKED)
             if cur is expected:
                 self._map[key] = new
+                flat = self._flat.get(build_id)
+                if flat is not None:
+                    starts, codes = flat
+                    i = int(np.searchsorted(starts, func_offset))
+                    if i < starts.shape[0] and int(starts[i]) == func_offset:
+                        codes[i] = new.value
                 return new
             self.cas_conflicts += 1
             return cur

@@ -20,10 +20,13 @@ eBPF context becomes plain Python, but every algorithmic constraint
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import hashlib
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 WORD = 8
 
@@ -63,6 +66,22 @@ class Binary:
             else:
                 return f
         return None
+
+    def fn_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Flat (starts, ends) numpy views over ``functions`` — the batch
+        unwinder's replacement for per-PC ``function_at`` bisects
+        (``np.searchsorted`` over all pending offsets at once).  Rebuilt
+        when the function list object is swapped out (benchmarks replace
+        it wholesale to model JIT/stripped variants); the cache keeps a
+        strong reference to the list it indexed, so a recycled ``id()``
+        can never serve stale tables."""
+        if getattr(self, "_fn_list", None) is not self.functions:
+            self._fn_starts = np.array([f.offset for f in self.functions],
+                                       dtype=np.int64)
+            self._fn_ends = np.array([f.end for f in self.functions],
+                                     dtype=np.int64)
+            self._fn_list = self.functions
+        return self._fn_starts, self._fn_ends
 
     def eh_frame(self) -> List[Tuple[int, int, int, bool]]:
         """[(start, end, frame_size, complex)] — the raw FDE list that
@@ -126,6 +145,8 @@ class SimProcess:
         self.pid = pid
         self.mappings: List[Mapping] = []
         self._next_base = 0x5555_0000_0000
+        self._maps_version = 0
+        self._flat_key = -1
 
     def mmap_binary(self, binary: Binary, base: Optional[int] = None) -> Mapping:
         base = base if base is not None else self._next_base
@@ -133,7 +154,27 @@ class SimProcess:
         self.mappings.append(m)
         self.mappings.sort(key=lambda mm: mm.start)
         self._next_base = max(self._next_base, base + binary.size + 0x10000)
+        self._maps_version += 1
         return m
+
+    def flat_maps(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 List[Binary], List[int]]:
+        """Cached flat view of the (sorted) mapping list: numpy
+        (starts, ends, executable) columns plus per-mapping binary refs
+        and a plain-list copy of the starts for C-``bisect`` point
+        lookups.  Rebuilt whenever a mapping is added."""
+        if self._flat_key != self._maps_version:
+            self._map_starts = np.array([m.start for m in self.mappings],
+                                        dtype=np.int64)
+            self._map_ends = np.array([m.end for m in self.mappings],
+                                      dtype=np.int64)
+            self._map_exec = np.array([m.executable for m in self.mappings],
+                                      dtype=bool)
+            self._map_binaries = [m.binary for m in self.mappings]
+            self._map_starts_list = [m.start for m in self.mappings]
+            self._flat_key = self._maps_version
+        return (self._map_starts, self._map_ends, self._map_exec,
+                self._map_binaries, self._map_starts_list)
 
     # /proc/[pid]/maps lookups ------------------------------------------------
     def mapping_for(self, addr: int) -> Optional[Mapping]:
@@ -156,6 +197,34 @@ class SimProcess:
         if f is None:
             return None
         return m.binary.build_id, off, f
+
+    def is_executable_fast(self, addr: int) -> bool:
+        """C-bisect point variant of :meth:`is_executable` over the flat
+        mapping view — the batch unwinder's validation check."""
+        _st, _en, _ex, _bins, starts_list = self.flat_maps()
+        i = bisect.bisect_right(starts_list, addr) - 1
+        if i < 0:
+            return False
+        m = self.mappings[i]
+        return addr < m.end and m.executable
+
+    def resolve_batch(self, pcs: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized ``resolve`` front half for a batch of PCs: one
+        ``np.searchsorted`` over mapping starts instead of a per-PC
+        linear scan.  Returns ``(mapping_idx, offsets, valid)`` where
+        ``valid`` requires an executable mapping containing the PC;
+        function-level resolution happens per-binary in the caller
+        (another searchsorted over that binary's function table)."""
+        starts, ends, execs, _bins, _sl = self.flat_maps()
+        if starts.shape[0] == 0:
+            z = np.zeros(pcs.shape[0], dtype=np.int64)
+            return z, z, np.zeros(pcs.shape[0], dtype=bool)
+        mi = np.searchsorted(starts, pcs, side="right") - 1
+        safe = np.clip(mi, 0, starts.shape[0] - 1)
+        valid = (mi >= 0) & (pcs < ends[safe]) & execs[safe]
+        offsets = pcs - starts[safe]
+        return safe, offsets, valid
 
     def abs_addr(self, binary: Binary, func: FunctionDef, pc_off: int = 8) -> int:
         for m in self.mappings:

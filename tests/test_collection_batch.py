@@ -1,0 +1,347 @@
+"""Batched collection path: batch unwinding differential + property
+tests, the stack memo, interned aggregation, the memoized sampler and
+the simulator's native-unwind feed.
+
+The central contract: ``HybridUnwinder.unwind_batch`` must be
+*byte-identical* to running the scalar Algorithm-1 loop sample by
+sample — same PC lists AND same final ``MarkerMap`` state — while the
+batch-only memo may only ever change cost, never results.
+"""
+import random
+
+import numpy as np
+
+from repro.core.aggregate import StackAggregator
+from repro.core.events import RawStackSample
+from repro.core.trace import TraceTables
+from repro.core.unwind import (HybridUnwinder, SimProcess, SimThread,
+                               synth_binary)
+
+
+def _proc_with(binaries):
+    proc = SimProcess()
+    for b in binaries:
+        proc.mmap_binary(b)
+    return proc
+
+
+def _pair_of_unwinders(binaries):
+    uw_s, uw_b = HybridUnwinder(), HybridUnwinder()
+    for b in binaries:
+        uw_s.register_binary(b)
+        uw_b.register_binary(b)
+    return uw_s, uw_b
+
+
+def _assert_differential(binaries, threads):
+    """Scalar-sequential vs one batch: stacks and markers must match."""
+    uw_s, uw_b = _pair_of_unwinders(binaries)
+    scalar = [uw_s.unwind(t) for t in threads]
+    batch = uw_b.unwind_batch(threads)
+    assert batch == scalar
+    assert uw_b.markers._map == uw_s.markers._map
+    return uw_s, uw_b
+
+
+# ---------------------------------------------------------------------------
+# differential: deterministic workloads
+# ---------------------------------------------------------------------------
+
+def test_batch_matches_scalar_mixed_workload():
+    b1 = synth_binary("liba", n_functions=120, omit_fp_fraction=0.7,
+                      complex_fde_fraction=0.05, seed=1)
+    b2 = synth_binary("libb", n_functions=60, omit_fp_fraction=0.0, seed=2)
+    proc = _proc_with([b1, b2])
+    rng = random.Random(0)
+    threads = []
+    for i in range(150):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain([(b, rng.choice(b.functions))
+                      for b in [rng.choice([b1, b2])
+                                for _ in range(rng.randrange(1, 18))]])
+        threads.append(t)
+    _assert_differential([b1, b2], threads)
+
+
+def test_batch_matches_scalar_with_repeats_and_unregistered():
+    """Repeated threads (memo + intra-batch dedup) and an unregistered
+    dlopen'd binary (truncation path) stay byte-identical."""
+    b1 = synth_binary("base", n_functions=50, omit_fp_fraction=0.4, seed=3)
+    b2 = synth_binary("plugin", n_functions=30, omit_fp_fraction=1.0, seed=4)
+    proc = _proc_with([b1, b2])   # b2 mapped but NOT registered
+    rng = random.Random(5)
+    threads = []
+    for i in range(40):
+        t = SimThread(proc, random.Random(i))
+        chain = [(b1, rng.choice(b1.functions)) for _ in range(6)]
+        if i % 3 == 0:
+            chain.insert(3, (b2, rng.choice(b2.functions)))
+        t.call_chain(chain)
+        threads.append(t)
+    sched = threads + threads[::-1] + threads[:10]
+    uw_s, uw_b = HybridUnwinder(), HybridUnwinder()
+    uw_s.register_binary(b1)
+    uw_b.register_binary(b1)
+    scalar = [uw_s.unwind(t) for t in sched]
+    batch = uw_b.unwind_batch(sched)
+    assert batch == scalar
+    assert uw_b.markers._map == uw_s.markers._map
+    assert uw_b.stats.memo_hits > 0
+
+
+def test_batch_multiple_processes_one_call():
+    b = synth_binary("libc2", n_functions=40, omit_fp_fraction=0.3, seed=6)
+    procs = [_proc_with([b]) for _ in range(3)]
+    threads = []
+    for i, p in enumerate(procs * 4):
+        t = SimThread(p, random.Random(i))
+        t.call_chain([(b, b.functions[(i + k) % 40]) for k in range(5)])
+        threads.append(t)
+    _assert_differential([b], threads)
+
+
+# ---------------------------------------------------------------------------
+# memo semantics
+# ---------------------------------------------------------------------------
+
+def test_memo_hit_returns_identical_stack():
+    b = synth_binary("libm", n_functions=30, omit_fp_fraction=0.5, seed=7)
+    proc = _proc_with([b])
+    t = SimThread(proc, random.Random(1))
+    t.call_chain([(b, b.functions[i]) for i in (0, 3, 9, 12)])
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    first = uw.unwind_batch([t])[0]
+    assert uw.stats.memo_hits == 0
+    second = uw.unwind_batch([t])[0]
+    assert second == first
+    assert uw.stats.memo_hits == 1
+    # memo frames count as FP-cost steps in the §3.3 instrument
+    assert uw.stats.memo_frames == len(first) - 1
+
+
+def test_memo_invalidated_by_memory_change():
+    """Overwriting a word the walk depended on must force a re-walk, and
+    the re-walk must equal a fresh scalar unwind of the mutated image."""
+    b = synth_binary("libmm", n_functions=30, omit_fp_fraction=0.0, seed=8)
+    proc = _proc_with([b])
+    t = SimThread(proc, random.Random(2))
+    t.call_chain([(b, b.functions[i]) for i in (1, 4, 7, 11, 15)])
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    first = uw.unwind_batch([t])[0]
+    # smash a return address mid-stack to another valid function entry
+    target = proc.abs_addr(b, b.functions[20], 8)
+    changed = None
+    for addr, val in sorted(t.memory.items()):
+        if val in first[1:]:
+            t.memory[addr] = target
+            changed = addr
+            break
+    assert changed is not None
+    redone = uw.unwind_batch([t])[0]
+    assert uw.stats.memo_invalidations == 1
+    fresh = HybridUnwinder()
+    fresh.register_binary(b)
+    assert redone == fresh.unwind(t)
+    assert redone != first
+
+
+def test_memo_cleared_by_register_binary_dlopen():
+    """The §4 dlopen path through the batch API: a stack truncating in an
+    unregistered plugin must resolve fully once the maps poll registers
+    it — the memoized truncated stack may not survive."""
+    b1 = synth_binary("host", n_functions=50, omit_fp_fraction=0.0, seed=9)
+    b2 = synth_binary("dlopened", n_functions=50, omit_fp_fraction=1.0,
+                      seed=10)
+    proc = _proc_with([b1, b2])
+    uw = HybridUnwinder()
+    uw.register_binary(b1)
+    t = SimThread(proc, random.Random(3))
+    t.call_chain([(b1, b1.functions[0]), (b2, b2.functions[0]),
+                  (b1, b1.functions[1])])
+    short = uw.unwind_batch([t])[0]
+    uw.register_binary(b2)
+    full = uw.unwind_batch([t])[0]
+    assert len(full) == 3 > len(short)
+    names = [proc.resolve(pc)[2].name for pc in full]
+    assert names == list(reversed([f.name for _b, f in t.truth]))
+
+
+def test_memo_bounded_with_fifo_eviction():
+    """A full memo evicts oldest-first instead of refusing new entries,
+    so memoization survives process churn."""
+    b = synth_binary("libev", n_functions=64, omit_fp_fraction=0.0, seed=12)
+    proc = _proc_with([b])
+    uw = HybridUnwinder()
+    uw.register_binary(b)
+    uw.MEMO_MAX = 4
+    threads = []
+    for i in range(8):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain([(b, b.functions[i]), (b, b.functions[i + 8])])
+        threads.append(t)
+    uw.unwind_batch(threads)
+    assert len(uw._memo) == 4
+    # the most recent walks are still memoized
+    before = uw.stats.memo_hits
+    uw.unwind_batch(threads[-4:])
+    assert uw.stats.memo_hits == before + 4
+
+
+# ---------------------------------------------------------------------------
+# interned aggregation
+# ---------------------------------------------------------------------------
+
+def test_aggregator_interned_conservation_and_columns():
+    tables = TraceTables()
+    agg = StackAggregator(tables=tables)
+    fids = [tables.strings.intern(n) for n in "abcde"]
+    # leaf..root records; 3 unique stacks, 100 samples
+    stacks = [tuple(fids[:3]), tuple(fids[1:5]), (fids[0],)]
+    for n in range(100):
+        agg.record_frame_ids(stacks[n % 3])
+    sids, counts = agg.drain_columns()
+    assert counts.sum() == 100
+    assert sids.shape[0] == 3
+    # root..leaf materialization via the tables
+    names = {tables.stack_tuple(int(s)) for s in sids}
+    assert ("c", "b", "a") in names          # reversed leaf..root
+    # drained: second drain is empty
+    s2, c2 = agg.drain_columns()
+    assert s2.shape[0] == c2.shape[0] == 0
+    assert agg.stats.reduction > 10
+
+
+def test_aggregator_lazy_dataclass_view_and_mixed_mode():
+    tables = TraceTables()
+    agg = StackAggregator(tables=tables)
+    fid = tables.strings.intern("fn")
+    agg.record_frame_ids((fid,), weight=7)
+    agg.record(RawStackSample(0, 0.0, (("bid", 1), ("bid", 2))))
+    out = dict(agg.drain())
+    assert out[("fn",)] == 7
+    assert out[(("bid", 1), ("bid", 2))] == 1
+
+
+def test_aggregator_interned_overflow_passthrough():
+    tables = TraceTables()
+    agg = StackAggregator(max_entries=4, tables=tables)
+    for i in range(10):
+        agg.record_frame_ids((tables.strings.intern(f"f{i}"),))
+    _sids, counts = agg.drain_columns()
+    assert counts.sum() == 10                # nothing lost on overflow
+
+
+def test_aggregator_record_sid():
+    tables = TraceTables()
+    agg = StackAggregator(tables=tables)
+    sid = tables.intern_stack(("root", "leaf"))
+    for _ in range(5):
+        agg.record_sid(sid)
+    sids, counts = agg.drain_columns()
+    assert sids.tolist() == [sid] and counts.tolist() == [5]
+
+
+# ---------------------------------------------------------------------------
+# sampler memo + agent columnar drain
+# ---------------------------------------------------------------------------
+
+def test_sampler_code_memo_and_interned_snapshot():
+    tables = TraceTables()
+    agg = StackAggregator(tables=tables)
+    from repro.core.samplers import SamplingProfiler
+    sp = SamplingProfiler(aggregator=agg, exclude_self=False)
+    sp._snapshot()
+    n_memo = len(sp._code_memo)
+    assert n_memo > 0
+    sp._snapshot()
+    # steady state: no new interning, only table-lookup work
+    assert len(sp._code_memo) == n_memo
+    sids, counts = agg.drain_columns()
+    assert counts.sum() >= 2
+    names = [n for s in sids.tolist() for n in tables.stack_tuple(int(s))]
+    assert any("test_collection_batch" in n for n in names)
+
+
+def test_sampler_legacy_pair_memoized():
+    from repro.core.samplers import SamplingProfiler
+    sp = SamplingProfiler(exclude_self=False)     # no tables: legacy path
+    sp._snapshot()
+    out = sp.aggregator.drain()
+    assert out
+    frames = out[0][0]
+    fname, hashed = frames[0]
+    assert fname.endswith(".py") and isinstance(hashed, int)
+    ent = next(iter(sp._code_memo.values()))
+    assert ent.pair[1] == hash(ent.ref().co_name) & 0xFFFFFFFF
+
+
+def test_agent_drain_profile_columnar():
+    from repro.core.agent import AgentConfig, NodeAgent
+    agent = NodeAgent(AgentConfig(rank=3))
+    tables = agent._tables
+    fid = tables.strings.intern("worker")
+    agent.aggregator.record_frame_ids((fid,), weight=4)
+    p = agent.drain_profile(iteration=9, iter_time=1.5, timestamp=123.0)
+    assert p.tables is tables
+    assert p.rank == 3 and p.iteration == 9
+    assert p.stack_weight.tolist() == [4]
+    assert np.all(p.stack_ts == 123.0)
+    dcs = p.to_dataclasses()
+    assert dcs.cpu_samples[0].frames == ("worker",)
+    # encoded upload of the drained profile round-trips
+    from repro.core.trace import ColumnarBatch, decode_batch, encode_batch
+    out = decode_batch(encode_batch(
+        ColumnarBatch("job", [p], "node", tables)))
+    assert out.profiles[0].to_dataclasses() == dcs
+
+
+# ---------------------------------------------------------------------------
+# native feed
+# ---------------------------------------------------------------------------
+
+def test_native_feed_equals_direct_interning():
+    from repro.core import simcluster as sc
+    a = sc.SimCluster(n_ranks=4, seed=11, columnar=True)
+    b = sc.SimCluster(n_ranks=4, seed=11, columnar=True,
+                      native_unwind=True)
+    a.add_fault(sc.vfs_lock_contention([1], start=1))
+    b.add_fault(sc.vfs_lock_contention([1], start=1))
+    for _ in range(3):
+        for x, y in zip(a.step(), b.step()):
+            assert x.to_dataclasses() == y.to_dataclasses()
+    feed = b.native_feed
+    assert feed.unwinder.stats.samples == len(feed._sids)
+    # fault stacks arrived as a dlopen'd binary mid-run
+    assert feed._binary_seq >= 2
+
+
+def test_native_feed_steady_state_memoized():
+    from repro.core import simcluster as sc
+    cl = sc.SimCluster(n_ranks=2, seed=1, columnar=True, native_unwind=True)
+    cl.step()
+    unwound = cl.native_feed.unwinder.stats.samples
+    for _ in range(5):
+        cl.step()
+    # no new unique stacks => no further unwinds (fleet-rate steady state)
+    assert cl.native_feed.unwinder.stats.samples == unwound
+
+
+def test_fp_fraction_pin_on_fig3_workload():
+    """§3.3 regression pin: steady-state fp_fraction on the Fig-3
+    workload must stay at or above its pre-batch value (0.195), and the
+    memoized batch path must land far above it."""
+    import benchmarks.bench_unwind as bu
+    proc, binaries, no_elf_jit, rng = bu.build_workload(seed=2)
+    threads = []
+    for i in range(120):
+        t = SimThread(proc, random.Random(i))
+        t.call_chain(bu.random_chain(binaries, no_elf_jit, rng, 16))
+        threads.append(t)
+    sched = threads * 6
+    uw_s, uw_b = _pair_of_unwinders(binaries)
+    scalar = [uw_s.unwind(t) for t in sched]
+    assert uw_b.unwind_batch(sched) == scalar
+    assert uw_s.stats.fp_fraction >= bu.PRE_BATCH_FP_FRACTION
+    assert uw_b.stats.fp_fraction >= 0.8

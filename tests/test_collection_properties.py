@@ -1,0 +1,78 @@
+"""Hypothesis property tests for the batched collection path: for any
+generated process/chain mix, ``unwind_batch`` must be byte-identical to
+the scalar Algorithm-1 loop — same PC lists AND same final ``MarkerMap``
+state — including repeated samples (memo hits) and partially registered
+binaries."""
+import random
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.unwind import HybridUnwinder, SimProcess, SimThread
+from repro.core.unwind.procmodel import Binary, FunctionDef
+
+settings.register_profile("collection", max_examples=40, deadline=None)
+settings.load_profile("collection")
+
+
+@st.composite
+def _process_and_chains(draw):
+    n_bins = draw(st.integers(1, 3))
+    binaries = []
+    for bi in range(n_bins):
+        n_fn = draw(st.integers(1, 12))
+        funcs, off = [], 0x1000
+        for fi in range(n_fn):
+            size = draw(st.sampled_from((64, 256, 512)))
+            funcs.append(FunctionDef(
+                name=f"b{bi}::f{fi}", offset=off, size=size,
+                omits_fp=draw(st.booleans()),
+                frame_size=draw(st.sampled_from((32, 48, 96))),
+                complex_fde=draw(st.booleans())
+                and draw(st.integers(0, 9)) == 0))
+            off += size + draw(st.sampled_from((0, 0, 128)))  # gaps too
+        binaries.append(Binary(name=f"bin{bi}", build_id=f"bid{bi}" * 8,
+                               functions=funcs, size=off))
+    registered = draw(st.lists(st.integers(0, n_bins - 1), min_size=0,
+                               max_size=n_bins, unique=True))
+    n_threads = draw(st.integers(1, 12))
+    chains = []
+    for _ in range(n_threads):
+        depth = draw(st.integers(1, 8))
+        chain = []
+        for _ in range(depth):
+            b = binaries[draw(st.integers(0, n_bins - 1))]
+            chain.append((b, b.functions[
+                draw(st.integers(0, len(b.functions) - 1))]))
+        chains.append(chain)
+    repeat = draw(st.lists(st.integers(0, n_threads - 1), min_size=0,
+                           max_size=8))
+    seed = draw(st.integers(0, 2**20))
+    return binaries, registered, chains, repeat, seed
+
+
+@given(_process_and_chains())
+def test_batch_equals_scalar_property(case):
+    """Byte-identical stacks + final MarkerMap state vs scalar."""
+    binaries, registered, chains, repeat, seed = case
+    proc = SimProcess()
+    for b in binaries:
+        proc.mmap_binary(b)
+    uw_s, uw_b = HybridUnwinder(), HybridUnwinder()
+    for i in registered:
+        uw_s.register_binary(binaries[i])
+        uw_b.register_binary(binaries[i])
+    threads = []
+    for ci, chain in enumerate(chains):
+        t = SimThread(proc, random.Random(seed + ci))
+        t.call_chain(chain)
+        threads.append(t)
+    sched = threads + [threads[i] for i in repeat]
+    scalar = [uw_s.unwind(t) for t in sched]
+    batch = uw_b.unwind_batch(sched)
+    assert batch == scalar
+    assert uw_b.markers._map == uw_s.markers._map
