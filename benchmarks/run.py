@@ -10,6 +10,9 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
   bench_symbols      — Fig 4 / §5.3 (misattribution)
   bench_straggler    — Fig 5  (slow-rank detection sweep)
   bench_aggregation  — §4    (10–50x volume reduction)
+  bench_attribution  — blame-timeline vectorization gate (>=5x vs the
+                       naive per-event walk) + sub-second 1k-rank
+                       cascade localization cycles
   bench_cases        — §5.4  (five end-to-end case studies) + Fig 2
   bench_scenarios    — full scenario-registry matrix (every registered
                        scenario x legacy/streaming/columnar/sharded)
@@ -36,6 +39,7 @@ MODULES = [
     "benchmarks.bench_unwind",
     "benchmarks.bench_symbols",
     "benchmarks.bench_aggregation",
+    "benchmarks.bench_attribution",
     "benchmarks.bench_overhead",
     "benchmarks.bench_service",
     "benchmarks.bench_trace",

@@ -19,9 +19,17 @@ def run_scenario(scen) -> None:
     print(f"\n=== {scen.name}: {scen.description} ===")
     svc = CentralService(window=50, robust_detector=scen.robust_detector)
     planner = MitigationPlanner(straggler_patience=2)
-    cluster = sc.SimCluster(n_ranks=8, seed=7)
+    if scen.make_cluster is not None:     # cascade fleet topology
+        cluster = scen.make_cluster(seed=7, columnar=False,
+                                    native_unwind=False)
+    else:
+        cluster = sc.SimCluster(n_ranks=8, seed=7)
     cluster.run(svc, 30)
-    cluster.add_fault(scen.make_fault())
+    fault = scen.make_fault()
+    if isinstance(cluster, sc.MultiGroupSimCluster):
+        cluster.add_fleet_fault(fault)
+    else:
+        cluster.add_fault(fault)
     events = cluster.run(svc, 60)
     if not events:
         print("  no diagnosis produced (unexpected)")
@@ -44,6 +52,21 @@ def run_scenario(scen) -> None:
         if "causes" in ev:
             for c in ev["causes"]:
                 print(f"     severity {c['severity']:6.2f}  {c['cause']}")
+        if "cascade" in e.evidence:
+            cas = e.evidence["cascade"]
+            print(f"  cascade   : chain {' -> '.join(cas['chain'])}, "
+                  f"victims {cas['victim_ranks']}")
+        if "blame_timeline" in e.evidence:
+            tl = e.evidence["blame_timeline"]
+            print("  timeline  : " + "  ".join(
+                f"{k}={v*1e3:.1f}ms" for k, v in tl.items()
+                if k != "iter_time"))
+    for x in events:
+        if x.root_cause == "cascade_blame_exported":
+            xe = x.verdict.evidence
+            print(f"  export    : group {x.group_id} -> blame exported to "
+                  f"group {xe['exported_to']} (root rank {xe['root_rank']})")
+            break
     for act in planner.on_diagnosis(e):
         print(f"  mitigation: {act.kind} -> nodes {list(act.target_nodes)} "
               f"({act.reason})")

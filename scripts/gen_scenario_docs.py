@@ -62,8 +62,10 @@ def render() -> str:
         rank = f"rank {s.expected_rank}" if s.expected_rank is not None \
             else "none (uniform)"
         detector = " (robust detector)" if s.robust_detector else ""
+        topo = (" *(cascade fleet: overlapping groups, root localized "
+                "cross-group)*" if s.make_cluster is not None else "")
         lines.append(
-            f"| `{s.name}` | {s.description}. *Signals:* "
+            f"| `{s.name}` | {s.description}.{topo} *Signals:* "
             f"{s.injected_signals or '—'} | {s.expected_layer}{detector} "
             f"| `{s.expected_cause}` | {s.category} | {rank} "
             f"| {reg.remediation_for(s) or '—'} |")

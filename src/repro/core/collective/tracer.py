@@ -49,13 +49,15 @@ class CollectiveTracer:
     def record_collective(self, group_id: str, op: str, *, entry: float,
                           exit: float, nbytes: int = 0,
                           device_duration: float = 0.0) -> CollectiveEvent:
+        # one critical section: seq assignment and event append must be
+        # atomic together, or two racing threads can append out of seq
+        # order and a drain() observes non-monotonic sequence numbers
         with self._lock:
             seq = self._seq
             self._seq += 1
-        ev = CollectiveEvent(rank=self.rank, group_id=group_id, op=op,
-                             entry=entry, exit=exit, nbytes=nbytes,
-                             device_duration=device_duration, seq=seq)
-        with self._lock:
+            ev = CollectiveEvent(rank=self.rank, group_id=group_id, op=op,
+                                 entry=entry, exit=exit, nbytes=nbytes,
+                                 device_duration=device_duration, seq=seq)
             self._events.append(ev)
         return ev
 

@@ -58,11 +58,21 @@ SOP_RULES: List[Tuple[Tuple[str, ...], str, str]] = [
 
 @dataclasses.dataclass
 class Verdict:
-    layer: str                    # gpu | cpu | os | inconclusive
+    """One layered-diagnosis outcome.  The provenance fields separate
+    *culprit* from *victim* (ARGUS/EROICA-style): ``culprit_rank``/
+    ``culprit_group`` name where the blame actually localized, and
+    ``victim_ranks`` the ranks that merely blocked in collectives
+    waiting on it.  On a victim-side verdict (``layer == "cascade"``)
+    ``culprit_group`` differs from the event's own group — consumers
+    (``ft/mitigation.py``) must never cordon the victim."""
+    layer: str                    # gpu | cpu | os | cascade | inconclusive
     root_cause: str
     confidence: float
     evidence: Dict[str, object]
     action: str = ""
+    culprit_rank: Optional[int] = None
+    culprit_group: Optional[str] = None
+    victim_ranks: Tuple[int, ...] = ()
 
 
 def classify_functions(functions: Sequence[str],

@@ -139,7 +139,16 @@ class CPURules:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A fault injector bundled with the diagnosis it must produce."""
+    """A fault injector bundled with the diagnosis it must produce.
+
+    Cascade scenarios additionally declare their fleet topology:
+    ``make_cluster(seed=, columnar=, native_unwind=)`` builds the
+    multi-group cluster (overlapping rank ids, cascade links),
+    ``expected_rank`` then names the *global* root rank id,
+    ``expected_group_index`` pins which group the root diagnosis must
+    name, and ``validate(events, cluster)`` asserts path-independent
+    extras (e.g. the victim group's blame-exported verdict), returning
+    an error string or None."""
     name: str
     description: str
     make_fault: Callable[[], "sc.Fault"]
@@ -152,6 +161,10 @@ class Scenario:
     # runbook: first operator action; "" derives it from the detecting
     # rule's action via ScenarioRegistry.remediation_for
     remediation: str = ""
+    # cascade topology (None = single 8-rank group, the default)
+    make_cluster: Optional[Callable[..., object]] = None
+    expected_group_index: Optional[int] = None
+    validate: Optional[Callable[[List, object], Optional[str]]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +186,9 @@ LEGACY_CATEGORIES: Dict[str, str] = {
     "storage_io_bottleneck": "software",
     "network_slow_collective": "network",
     "cpu_host_interference": "os_interference",
+    # victim-side verdict of cascade localization: the group's apparent
+    # straggler imported its wait through a collective of another group
+    "cascade_blame_exported": "network",
     "unknown": "unknown",
 }
 
@@ -513,7 +529,70 @@ def _default_scenarios() -> Tuple[Scenario, ...]:
             category="os_interference", expected_rank=2,
             injected_signals="numa_remote_ratio ~0.03 -> ~0.6, +0.8ms "
                              "collective entry delay"),
+        # -- cross-group cascade scenarios ---------------------------------
+        # Fleet topologies: group 0 and group 1 overlap at one bridge
+        # rank (global rank ids); a cascade link carries group 0's
+        # barrier delay onto the bridge's entry into group 1.  The
+        # attribution layer must localize the root in group 0 — never
+        # diagnose group 1's apparent straggler — and group 1 must
+        # yield a blame-exported verdict pointing back at group 0.
+        Scenario(
+            name="cascade_nic_flap_bridge",
+            description="NIC flap on a rank serving two communication "
+                        "groups: NET_RX softirqs delay the bridge rank's "
+                        "entry into both, so both groups flag the same "
+                        "physical rank",
+            make_fault=lambda: sc.nic_softirq(4),
+            make_cluster=lambda **kw: sc.cascade_fleet(
+                _CASCADE_SHARED_RANK, links=((0, 1),), **kw),
+            expected_cause="nic_softirq_contention", expected_layer="cpu",
+            category="os_interference", expected_rank=4,
+            expected_group_index=0,
+            validate=sc.expect_cascade_export(1, 0),
+            injected_signals="net_rx_action/napi_poll stacks + NET_RX irq "
+                             "storm on global rank 4, which is a member of "
+                             "both groups; one root diagnosis, one export"),
+        Scenario(
+            name="cascade_swap_root_node",
+            description="Swap thrash on a root node in the DP group; its "
+                        "barrier delay crosses the bridge rank into the PP "
+                        "group, whose apparent straggler is a pure victim",
+            make_fault=lambda: sc.swap_thrash(1),
+            make_cluster=lambda **kw: sc.cascade_fleet(
+                _CASCADE_BRIDGE, links=((0, 1),), **kw),
+            expected_cause="memory_pressure_swap", expected_layer="os",
+            category="os_interference", expected_rank=1,
+            expected_group_index=0,
+            validate=sc.expect_cascade_export(1, 0),
+            injected_signals="major_faults ~6000/window on global rank 1 "
+                             "(group 0 only); bridge rank 7 imports the "
+                             "delay into group 1"),
+        Scenario(
+            name="cascade_victim_group_export",
+            description="Victim-only group: a GPU thermal cap in group 0 "
+                        "delays the bridge rank into group 1, which "
+                        "contains no faulted rank and must yield a "
+                        "blame-exported verdict, not a local diagnosis",
+            make_fault=lambda: sc.thermal_throttle(0),
+            make_cluster=lambda **kw: sc.cascade_fleet(
+                _CASCADE_BRIDGE, links=((0, 1),), **kw),
+            expected_cause="gpu_uniform_slowdown", expected_layer="gpu",
+            category="gpu_hardware", expected_rank=0,
+            expected_group_index=0,
+            validate=sc.expect_cascade_export(1, 0),
+            injected_signals="all kernel durations x1.075 on global rank 0 "
+                             "(group 0); group 1 sees only the imported "
+                             "barrier delay through bridge rank 7"),
     )
+
+
+#: Cascade fleet layouts (global rank ids per group).  ``_CASCADE_BRIDGE``
+#: overlaps only at bridge rank 7; ``_CASCADE_SHARED_RANK`` puts rank 4 —
+#: the faulted rank — in both groups (the two-group-NIC-flap shape).
+_CASCADE_BRIDGE = ((0, 1, 2, 3, 4, 5, 6, 7),
+                   (7, 8, 9, 10, 11, 12, 13, 14))
+_CASCADE_SHARED_RANK = ((0, 1, 2, 3, 4, 5, 6, 7),
+                        (4, 8, 9, 10, 11, 12, 13, 14))
 
 
 def build_default_registry() -> ScenarioRegistry:

@@ -3,9 +3,15 @@ detection, layered differential diagnosis, temporal baselines, SOP rules.
 
 Pipeline per ingested batch:
   1. collective events -> instance separation -> StragglerDetector
+     (per-collective blame edges + windowed blame summaries)
   2. CPU samples -> per-rank flame graphs -> CPUWaterline
-  3. alert? -> layered diagnosis (GPU diff -> CPU diff -> OS diff)
-     no alert but iter-time regression? -> temporal baseline comparison
+  3. alert? -> cascade localization (repro.core.attribution): follow
+     blame across overlapping communication groups to the root (node,
+     rank), then layered diagnosis (GPU diff -> CPU diff -> OS diff)
+     at the root only; victim groups get cascade_blame_exported events.
+     ``attribution=False`` preserves the pre-attribution pairwise path
+     (every alerting rank diffed), equivalence-tested where no cascade
+     exists.  No alert but iter-time regression? -> temporal baseline.
   4. every diagnosis becomes a DiagnosticEvent with a category matching the
      paper's Fig 2 taxonomy (gpu_hardware | os_interference | network |
      software) and a wall-clock diagnosis latency.
@@ -44,6 +50,11 @@ import time
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.core.attribution import (CASCADE_EXPORT_CAUSE, CascadeExport,
+                                    Localization, TimelineBuilder,
+                                    iteration_timelines,
+                                    iteration_timelines_naive,
+                                    localize_cascades)
 from repro.core.baseline import BaselineStore, compare_to_baseline
 from repro.core.collective.instances import separate_instances
 from repro.core.diffdiag import Verdict, diagnose
@@ -96,7 +107,10 @@ class CentralService:
                  streaming: bool = True,
                  fg_window: int = 16,
                  group_ttl_s: Optional[float] = 3600.0,
-                 registry: Optional[ScenarioRegistry] = None):
+                 registry: Optional[ScenarioRegistry] = None,
+                 attribution: bool = True,
+                 min_root_lateness: float = 1e-4,
+                 chips_per_node: int = 8):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
         # rule-set immutability after service start: pin a frozen snapshot
@@ -150,6 +164,24 @@ class CentralService:
         self._last_ingest: Dict[str, float] = {}
         self.groups_evicted = 0
         self.ingested = 0
+        # attribution=True routes alerts through cascade localization
+        # (repro.core.attribution) so only blame *roots* are pairwise-
+        # diffed; False preserves the pre-attribution pairwise path
+        # (equivalence-tested where no cascade exists)
+        self.attribution = attribution
+        # significance floor for cascade localization: alerts below it
+        # are windowed jitter (the same 100us threshold the network
+        # fallback uses for "timing says slow"), not incidents worth a
+        # root diagnosis — the legacy pairwise path keeps reporting them
+        self.min_root_lateness = min_root_lateness
+        # node topology for provenance (rank -> node in cascade
+        # evidence); mirror it in MitigationPlanner(chips_per_node=...)
+        self.chips_per_node = chips_per_node
+        self._tl_builder = TimelineBuilder(self.tables)
+        # per-collective blame edges drained from the detector on the
+        # most recent cycle (bounded); root diagnoses attach their
+        # group's edges as evidence
+        self.last_edges: List = []
 
     # -- ingestion -----------------------------------------------------------
     def _adopt(self, profile: ColumnarProfile) -> ColumnarProfile:
@@ -258,15 +290,10 @@ class CentralService:
             self.evict_group(g)
 
     # -- analysis cycle (the "processed within minutes" loop) ----------------
-    def process(self) -> List[DiagnosticEvent]:
-        t0 = time.monotonic()
-        self._evict_idle_groups(t0)
-        new_events: List[DiagnosticEvent] = []
-
-        # 1. instance separation + straggler detection
+    def _materialize_collectives(self) -> None:
+        """Deferred columnar collectives -> instance separation ->
+        detector (blame-edge accumulation), once per cycle."""
         if self._pending_coll_profiles:
-            # deferred columnar collectives: materialized once per cycle,
-            # off the per-profile ingest hot path
             for p in self._pending_coll_profiles:
                 self._pending_collectives.extend(p.collective_events())
             self._pending_coll_profiles = []
@@ -274,23 +301,74 @@ class CentralService:
             for inst in separate_instances(self._pending_collectives):
                 self.detector.observe_instance(inst)
             self._pending_collectives = []
-        alerts = self.detector.check()
 
-        flagged_groups = set()
-        for alert in alerts[:8]:  # bounded per cycle
-            flagged_groups.add(alert.group_id)
-            ev = self._diagnose_straggler(alert, t0)
-            if ev:
-                new_events.append(ev)
+    def collect_cycle(self, t0: Optional[float] = None):
+        """Run one cycle's *collection* half without emitting events:
+        evict idle groups, materialize pending collectives into the
+        detector, and return (alerts, blame summaries).  The sharded
+        facade merges these fleet-wide before cascade localization —
+        blame chains cross shard boundaries, diagnosis does not."""
+        if t0 is None:
+            t0 = time.monotonic()
+        self._evict_idle_groups(t0)
+        self._materialize_collectives()
+        # one windowed-state walk per cycle: summaries feed both the
+        # alert view and cascade localization
+        summaries = self.detector.blame_summaries()
+        alerts = [a for a in self.detector.check_windows(summaries)
+                  if a.lateness >= self.min_root_lateness][:8]
+        self.last_edges = self.detector.drain_edges()
+        return alerts, summaries
 
-        # 2. uniform-degradation path (no straggler, iter time regressed)
+    def _temporal_cycle(self, flagged, t0: float) -> List[DiagnosticEvent]:
+        """Uniform-degradation path (no straggler, iter time regressed)
+        for every group not already flagged this cycle."""
+        out: List[DiagnosticEvent] = []
         for g, times in self._group_iter_time.items():
-            if g in flagged_groups or len(times) < 4:
+            if g in flagged or len(times) < 4:
                 continue
             ev = self._check_temporal(g, times, t0)
             if ev:
-                new_events.append(ev)
+                out.append(ev)
+        return out
 
+    @staticmethod
+    def _sequence(events: List[DiagnosticEvent], t0: float) -> None:
+        """Strictly-increasing detected_at stamps in emission order, so
+        merged multi-shard views sort back into exactly this order."""
+        for i, ev in enumerate(events):
+            ev.detected_at = t0 + i * 1e-9
+
+    def process(self) -> List[DiagnosticEvent]:
+        t0 = time.monotonic()
+        new_events: List[DiagnosticEvent] = []
+        flagged: set = set()
+        if self.attribution:
+            # 1. alerts -> cascade localization -> diagnose roots only
+            alerts, summaries = self.collect_cycle(t0)
+            locs, exports = localize_cascades(alerts, summaries)
+            for loc in locs:
+                flagged.add(loc.root_group)
+                flagged.update(loc.affected_groups)
+                ev = self._diagnose_root(loc, t0)
+                if ev:
+                    new_events.append(ev)
+            for exp in exports:
+                flagged.add(exp.group_id)
+                new_events.append(self._export_event(exp, t0))
+        else:
+            # pre-attribution pairwise path: diff every alerting rank
+            self._evict_idle_groups(t0)
+            self._materialize_collectives()
+            alerts = self.detector.check()
+            for alert in alerts[:8]:  # bounded per cycle
+                flagged.add(alert.group_id)
+                ev = self._diagnose_straggler(alert, t0)
+                if ev:
+                    new_events.append(ev)
+        # 2. uniform-degradation path
+        new_events.extend(self._temporal_cycle(flagged, t0))
+        self._sequence(new_events, t0)
         for ev in new_events:
             self._record(ev)
         return new_events
@@ -316,20 +394,22 @@ class CentralService:
             return fg if fg is not None else FlameGraph()
         return self._profile_flamegraph(self._latest[(g, rank)])
 
-    def _diagnose_straggler(self, alert: StragglerAlert,
-                            t0: float) -> Optional[DiagnosticEvent]:
-        g = alert.group_id
+    def _diagnose_pair(self, g: str, rank: int, alert: StragglerAlert,
+                       t0: float) -> Optional[DiagnosticEvent]:
+        """Layered pairwise diff of ``rank`` against a healthy peer in
+        its group — shared by the legacy per-alert path and the
+        attribution path (which only ever calls it at a blame root)."""
         ranks = sorted(self._group_ranks.get(g, ()))
-        if len(ranks) < 2 or alert.rank not in ranks:
+        if len(ranks) < 2 or rank not in ranks:
             return None
-        healthy_candidates = [r for r in ranks if r != alert.rank]
+        healthy_candidates = [r for r in ranks if r != rank]
         healthy = healthy_candidates[-1]
-        sp = self._latest[(g, alert.rank)]
+        sp = self._latest[(g, rank)]
         hp = self._latest[(g, healthy)]
 
         verdict = diagnose(
             self._profile_kernels(sp), self._profile_kernels(hp),
-            self._rank_flamegraph(g, alert.rank),
+            self._rank_flamegraph(g, rank),
             self._rank_flamegraph(g, healthy),
             sp.os_signals, hp.os_signals, registry=self.rules)
         if verdict.layer == "inconclusive" and alert.lateness > 1e-4:
@@ -343,9 +423,95 @@ class CentralService:
             job_id=self._job_by_group.get(g, "job-0"), group_id=g,
             category=self.rules.category_for(verdict.root_cause),
             root_cause=verdict.root_cause, verdict=verdict,
-            straggler_rank=alert.rank, detected_at=t0,
+            straggler_rank=rank, detected_at=t0,
             diagnosis_latency_s=time.monotonic() - t0,
             evidence={"alert": dataclasses.asdict(alert)})
+
+    def _diagnose_straggler(self, alert: StragglerAlert,
+                            t0: float) -> Optional[DiagnosticEvent]:
+        return self._diagnose_pair(alert.group_id, alert.rank, alert, t0)
+
+    def _rank_timeline(self, g: str, rank: int):
+        """Blame timeline of one rank's latest iteration, computed over
+        the whole group's latest profiles (instance starts need every
+        rank's aligned entry).  None when representations are mixed or
+        the rank's profile lags the group — matching a stale iteration
+        against current peers would read as a full-iteration wait."""
+        ranks = sorted(self._group_ranks.get(g, ()))
+        profiles = [p for p in (self._latest.get((g, r)) for r in ranks)
+                    if p is not None]
+        if len(profiles) < 2:
+            return None
+        latest_iter = max(p.iteration for p in profiles)
+        profiles = [p for p in profiles if p.iteration == latest_iter]
+        if len(profiles) < 2 or all(p.rank != rank for p in profiles):
+            return None
+        skew = self.detector.aligner.skew
+        if all(isinstance(p, ColumnarProfile) for p in profiles):
+            tls, _ = iteration_timelines(profiles, skew=skew,
+                                         builder=self._tl_builder)
+        elif all(isinstance(p, IterationProfile) for p in profiles):
+            tls, _ = iteration_timelines_naive(profiles, skew=skew)
+        else:
+            return None
+        return next((t for t in tls if t.rank == rank), None)
+
+    def _diagnose_root(self, loc: Localization,
+                       t0: float) -> Optional[DiagnosticEvent]:
+        """Diagnose a localized blame root: the pairwise diff runs at
+        the root (group, rank) only, and the verdict carries culprit/
+        victim provenance plus the root rank's blame timeline."""
+        g, rank = loc.root_group, loc.root_rank
+        ev = self._diagnose_pair(g, rank, loc.alert, t0)
+        if ev is None or ev.verdict is None:
+            return ev
+        v = ev.verdict
+        v.culprit_rank = rank
+        v.culprit_group = g
+        v.victim_ranks = loc.victim_ranks
+        if len(loc.chain) > 1 or len(loc.affected_groups) > 1:
+            ev.evidence["cascade"] = {
+                "chain": list(loc.chain),
+                "affected_groups": list(loc.affected_groups),
+                "root_node": loc.node(self.chips_per_node),
+                "victim_ranks": list(loc.victim_ranks)}
+        tl = self._rank_timeline(g, rank)
+        if tl is not None:
+            ev.evidence["blame_timeline"] = tl.as_dict()
+        edges = [e for e in self.last_edges if e.group_id == g]
+        if edges:
+            ev.evidence["blame_edges"] = [
+                {"op": e.op, "culprit_rank": e.culprit_rank,
+                 "victim_rank": e.victim_rank, "wait": e.wait}
+                for e in edges[-8:]]
+        return ev
+
+    def _export_event(self, exp: CascadeExport,
+                      t0: float) -> DiagnosticEvent:
+        """Victim-side event for a group whose blame localized in
+        another group: no local diagnosis, provenance points at the
+        root.  Consumers must not act on the victim (ft/mitigation)."""
+        verdict = Verdict(
+            layer="cascade", root_cause=CASCADE_EXPORT_CAUSE,
+            confidence=0.8,
+            evidence={"exported_to": exp.root_group,
+                      "root_rank": exp.root_rank,
+                      "root_node": exp.root_rank // self.chips_per_node,
+                      "via_rank": exp.via_rank,
+                      "observed_lateness": exp.wait},
+            action=f"no local action: blame exported to group "
+                   f"{exp.root_group} (root rank {exp.root_rank})",
+            culprit_rank=exp.root_rank, culprit_group=exp.root_group,
+            victim_ranks=(exp.via_rank,))
+        return DiagnosticEvent(
+            job_id=self._job_by_group.get(exp.group_id, "job-0"),
+            group_id=exp.group_id,
+            category=self.rules.category_for(CASCADE_EXPORT_CAUSE),
+            root_cause=CASCADE_EXPORT_CAUSE, verdict=verdict,
+            straggler_rank=exp.via_rank, detected_at=t0,
+            diagnosis_latency_s=time.monotonic() - t0,
+            evidence={"exported_to": exp.root_group,
+                      "root_rank": exp.root_rank})
 
     # -- temporal path -------------------------------------------------------------
     def _check_temporal(self, g: str, times, t0: float

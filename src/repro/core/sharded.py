@@ -22,11 +22,13 @@ and deduplicating uploads fleet-wide is the point.
 """
 from __future__ import annotations
 
+import time
 import zlib
 from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
+from repro.core.attribution import localize_cascades
 from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.service import CentralService, DiagnosticEvent
 from repro.core.trace import decode_batch
@@ -64,6 +66,10 @@ class ShardedService:
             s.symbol_repo = self.symbol_repo
             s.tables = self.tables
             s.rules = self.rules
+            # per-table derived caches must follow the shared tables,
+            # not each shard's discarded construction-time tables
+            s._tl_builder = self.shards[0]._tl_builder
+            s._remaps = self.shards[0]._remaps
         self._log_rr = 0
 
     # -- routing -------------------------------------------------------------
@@ -113,17 +119,64 @@ class ShardedService:
 
     # -- analysis ------------------------------------------------------------
     def process(self) -> List[DiagnosticEvent]:
-        """Run one analysis cycle on every shard; merged new events."""
+        """Run one analysis cycle fleet-wide.
+
+        With attribution enabled (the shard default), the cycle splits:
+        every shard runs its *collection* half (instance separation,
+        blame accumulation, alerts + group blame summaries), the facade
+        merges those summaries and runs cascade localization ONCE over
+        the whole fleet — blame chains cross shard boundaries even
+        though per-group diagnosis state never does — and then each
+        root/export event is diagnosed and recorded on the shard owning
+        its group.  With ``attribution=False`` shards process
+        independently as before (the pre-attribution pairwise path)."""
+        if not self.shards[0].attribution:
+            if self.parallel and self.n_shards > 1:
+                with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
+                    results = list(ex.map(lambda s: s.process(),
+                                          self.shards))
+            else:
+                results = [s.process() for s in self.shards]
+            merged: List[DiagnosticEvent] = []
+            for evs in results:
+                merged.extend(evs)
+            merged.sort(key=lambda e: e.detected_at)
+            return merged
+
+        t0 = time.monotonic()
         if self.parallel and self.n_shards > 1:
             with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
-                results = list(ex.map(lambda s: s.process(), self.shards))
+                collected = list(ex.map(lambda s: s.collect_cycle(t0),
+                                        self.shards))
         else:
-            results = [s.process() for s in self.shards]
-        merged: List[DiagnosticEvent] = []
-        for evs in results:
-            merged.extend(evs)
-        merged.sort(key=lambda e: e.detected_at)
-        return merged
+            collected = [s.collect_cycle(t0) for s in self.shards]
+        alerts = [a for shard_alerts, _ in collected for a in shard_alerts]
+        alerts.sort(key=lambda a: -a.lateness)
+        summaries = {}
+        for _, shard_summaries in collected:
+            summaries.update(shard_summaries)
+        locs, exports = localize_cascades(alerts, summaries)
+        emitted = []                 # (owning shard, event) in order
+        flagged = set()
+        for loc in locs:
+            flagged.add(loc.root_group)
+            flagged.update(loc.affected_groups)
+            shard = self.shard_for(loc.root_group)
+            ev = shard._diagnose_root(loc, t0)
+            if ev:
+                emitted.append((shard, ev))
+        for exp in exports:
+            flagged.add(exp.group_id)
+            shard = self.shard_for(exp.group_id)
+            emitted.append((shard, shard._export_event(exp, t0)))
+        for s in self.shards:
+            for ev in s._temporal_cycle(flagged, t0):
+                emitted.append((s, ev))
+        events = [ev for _s, ev in emitted]
+        CentralService._sequence(events, t0)
+        for shard, ev in emitted:
+            shard._record(ev)
+        return events
 
     # -- merged reporting view ----------------------------------------------
     @property

@@ -43,6 +43,7 @@ __all__ = [
     "swap_thrash", "pcie_link_degradation", "cpu_downclock",
     "ecc_row_remap", "numa_remote_alloc",
     "SimCluster", "MultiGroupSimCluster",
+    "cascade_fleet", "expect_cascade_export",
     "SERVICE_PATHS", "ScenarioResult", "run_scenario_matrix",
 ]
 
@@ -365,7 +366,9 @@ class SimCluster:
                  tables: Optional[TraceTables] = None,
                  stack_variants: int = 1,
                  native_unwind: bool = False,
-                 native_feed: Optional[NativeStackFeed] = None):
+                 native_feed: Optional[NativeStackFeed] = None,
+                 rank_ids: Optional[Sequence[int]] = None,
+                 coll_phase: float = 0.7):
         self.n_ranks = n_ranks
         self.rng = random.Random(seed)
         self.samples_per_iter = samples_per_iter
@@ -374,8 +377,31 @@ class SimCluster:
         self.faults: List[Fault] = []
         self.group_hash = group_hash
         self.comm_version = comm_version
+        # global rank identity: a rank that belongs to several groups
+        # (a cascade bridge) carries the same id in each — defaults to
+        # the group-local 0..n-1 numbering
+        if rank_ids is not None:
+            if len(rank_ids) != n_ranks:
+                raise ValueError("rank_ids must name exactly n_ranks ranks")
+            if len(set(rank_ids)) != n_ranks:
+                raise ValueError("rank_ids must be unique within a group "
+                                 "(duplicates would silently collapse "
+                                 "per-rank simulation state)")
+        self.rank_ids: List[int] = (list(rank_ids) if rank_ids is not None
+                                    else list(range(n_ranks)))
+        # where in the iteration this group's blocking collective sits
+        # (fraction of base iter time); cascade fleets stagger phases so
+        # downstream groups' collectives follow their upstream ones
+        self.coll_phase = coll_phase
+        # delay imported from an upstream group's barrier this iteration
+        # (set by MultiGroupSimCluster cascade links, keyed by rank id;
+        # consumed and cleared by step())
+        self.imported_delay: Dict[int, float] = {}
+        # barrier delay this group exported on its last step
+        self.last_exit_delay = 0.0
         # per-rank clock skew (us-scale) — exercised by ClockAligner
-        self.skew = {r: self.rng.uniform(-2e-4, 2e-4) for r in range(n_ranks)}
+        self.skew = {self.rank_ids[r]: self.rng.uniform(-2e-4, 2e-4)
+                     for r in range(n_ranks)}
         self.group_id = f"{group_hash:016x}"
         # columnar mode: step() emits ColumnarProfiles natively — the same
         # RNG stream and values, interned against `tables` (shareable
@@ -538,52 +564,64 @@ class SimCluster:
     def step(self) -> List[IterationProfile]:
         """Simulate one synchronous iteration across all ranks.  Emits
         ``IterationProfile``s, or native ``ColumnarProfile``s in columnar
-        mode — same RNG stream, same values, different representation."""
+        mode — same RNG stream, same values, different representation.
+        Ranks are reported under their global ``rank_ids``; any delay a
+        cascade link imported for a rank id is added to that rank's
+        collective entry (and cleared)."""
         t0 = self.iteration * self.base_iter_time
         profiles = []
+        gids = self.rank_ids
+        imported, self.imported_delay = self.imported_delay, {}
         # per-rank compute time before entering the gradient collective
         entry_delay: Dict[int, float] = {}
         kernel_rows: Dict[int, List[Tuple[str, float, float]]] = {}
         for r in range(self.n_ranks):
-            rows, gpu_extra = self._kernel_rows(r, t0)
-            kernel_rows[r] = rows
+            gid = gids[r]
+            rows, gpu_extra = self._kernel_rows(gid, t0)
+            kernel_rows[gid] = rows
             delay = gpu_extra + self.rng.gauss(0, 12e-6)
             for f in self.faults:
-                if f.entry_delay is not None and f.applies(r, self.iteration):
+                if f.entry_delay is not None and f.applies(gid,
+                                                           self.iteration):
                     delay += f.entry_delay(self.base_iter_time)
-            entry_delay[r] = max(0.0, delay)
+            delay += imported.get(gid, 0.0)
+            entry_delay[gid] = max(0.0, delay)
 
         # blocking collective: starts when the last rank arrives
-        base_entry = t0 + 0.7 * self.base_iter_time
-        entries = {r: base_entry + entry_delay[r] for r in range(self.n_ranks)}
+        base_entry = t0 + self.coll_phase * self.base_iter_time
+        entries = {gid: base_entry + entry_delay[gid] for gid in gids}
         start = max(entries.values())
+        self.last_exit_delay = max(entry_delay.values()) \
+            if entry_delay else 0.0
         coll_dur = 9e-3
         exit_t = start + coll_dur
         iter_end = exit_t + 0.05 * self.base_iter_time
 
         for r in range(self.n_ranks):
-            entry = entries[r] + self.skew[r]
-            exit_v = exit_t + self.skew[r] + self.rng.gauss(0, 3e-6)
-            cpu_rows = self._cpu_rows(r)
-            sig = self._os_signals(r, t0)
+            gid = gids[r]
+            entry = entries[gid] + self.skew[gid]
+            exit_v = exit_t + self.skew[gid] + self.rng.gauss(0, 3e-6)
+            cpu_rows = self._cpu_rows(gid)
+            sig = self._os_signals(gid, t0)
             if self.columnar:
                 profiles.append(self._columnar_profile(
-                    r, t0, iter_end - t0, cpu_rows, kernel_rows[r],
+                    gid, t0, iter_end - t0, cpu_rows, kernel_rows[gid],
                     entry, exit_v, coll_dur, sig))
             else:
                 ev = CollectiveEvent(
-                    rank=r, group_id=self.group_id, op="ReduceScatter",
+                    rank=gid, group_id=self.group_id, op="ReduceScatter",
                     entry=entry, exit=exit_v,
                     nbytes=512 * 1024 * 1024, device_duration=coll_dur)
                 profiles.append(IterationProfile(
-                    rank=r, iteration=self.iteration, group_id=self.group_id,
+                    rank=gid, iteration=self.iteration,
+                    group_id=self.group_id,
                     iter_time=iter_end - t0,
-                    cpu_samples=[StackSample(rank=r, timestamp=t0,
+                    cpu_samples=[StackSample(rank=gid, timestamp=t0,
                                              frames=stack, weight=cnt)
                                  for stack, cnt in cpu_rows],
-                    kernel_events=[KernelEvent(rank=r, name=nm, start=s,
+                    kernel_events=[KernelEvent(rank=gid, name=nm, start=s,
                                                duration=d)
-                                   for nm, s, d in kernel_rows[r]],
+                                   for nm, s, d in kernel_rows[gid]],
                     collectives=[ev],
                     os_signals=sig))
         self.iteration += 1
@@ -608,10 +646,20 @@ class SimCluster:
 
 
 class MultiGroupSimCluster:
-    """Dozens of independent communication groups stepped in lockstep —
-    the fleet shape the sharded service ingests (1,000+ ranks).  Each group
-    is one ``SimCluster`` with its own comm hash, clock skews, RNG stream
-    and (possibly concurrent, heterogeneous) fault injections.
+    """Dozens of communication groups stepped in lockstep — the fleet
+    shape the sharded service ingests (1,000+ ranks).  Each group is one
+    ``SimCluster`` with its own comm hash, clock skews, RNG stream and
+    (possibly concurrent, heterogeneous) fault injections.
+
+    Cascade mode: ``rank_ids`` assigns per-group *global* rank ids (a
+    rank id appearing in two groups is the same physical rank — a
+    bridge), ``coll_phases`` staggers the groups' collectives within
+    the iteration, and each ``cascade_links`` pair (upstream,
+    downstream) propagates the upstream group's barrier delay — minus
+    ``cascade_slack`` of schedule headroom — onto the bridge ranks'
+    entries into the downstream group.  A root fault in one group then
+    produces observable pure-victim stragglers in the groups behind it,
+    which is exactly what the attribution layer must see through.
     """
 
     def __init__(self, n_groups: int = 32, ranks_per_group: int = 32,
@@ -620,7 +668,11 @@ class MultiGroupSimCluster:
                  columnar: bool = False,
                  tables: Optional[TraceTables] = None,
                  stack_variants: int = 1,
-                 native_unwind: bool = False):
+                 native_unwind: bool = False,
+                 rank_ids: Optional[Sequence[Sequence[int]]] = None,
+                 coll_phases: Optional[Sequence[float]] = None,
+                 cascade_links: Sequence[Tuple[int, int]] = (),
+                 cascade_slack: float = 6e-4):
         # columnar mode shares ONE table set fleet-wide: the groups run the
         # same workload, so their stacks/kernel names intern once, ever —
         # and with native_unwind, one shared feed means the fleet unwinds
@@ -628,8 +680,11 @@ class MultiGroupSimCluster:
         self.tables = tables if tables is not None else TraceTables()
         feed = NativeStackFeed(self.tables, seed=seed) if native_unwind \
             else None
+        if rank_ids is not None:
+            n_groups = len(rank_ids)
         self.groups: List[SimCluster] = [
-            SimCluster(n_ranks=ranks_per_group,
+            SimCluster(n_ranks=(len(rank_ids[i]) if rank_ids is not None
+                                else ranks_per_group),
                        group_hash=(base_hash + 0x9E3779B97F4A7C15 * i)
                        & 0xFFFFFFFFFFFFFFFF,
                        seed=seed * 1000 + i,
@@ -637,16 +692,39 @@ class MultiGroupSimCluster:
                        iter_time=iter_time,
                        columnar=columnar, tables=self.tables,
                        stack_variants=stack_variants,
-                       native_feed=feed)
+                       native_feed=feed,
+                       rank_ids=(rank_ids[i] if rank_ids is not None
+                                 else None),
+                       coll_phase=(coll_phases[i] if coll_phases is not None
+                                   else 0.7))
             for i in range(n_groups)
         ]
         self.n_groups = n_groups
         self.ranks_per_group = ranks_per_group
         self.columnar = columnar
+        self.cascade_slack = cascade_slack
+        self.cascade_links: List[Tuple[int, int]] = list(cascade_links)
+        self._shared_ranks: Dict[Tuple[int, int], List[int]] = {}
+        for u, d in self.cascade_links:
+            if not 0 <= u < d < n_groups:
+                raise ValueError(
+                    f"cascade link ({u}, {d}) must satisfy "
+                    f"0 <= upstream < downstream < {n_groups} "
+                    "(groups step in index order)")
+            shared = sorted(set(self.groups[u].rank_ids)
+                            & set(self.groups[d].rank_ids))
+            if not shared:
+                raise ValueError(
+                    f"cascade link ({u}, {d}) has no bridge rank "
+                    "(no shared rank ids)")
+            self._shared_ranks[(u, d)] = shared
 
     @property
     def n_ranks(self) -> int:
-        return self.n_groups * self.ranks_per_group
+        """Total rank-*slots* across groups.  A bridge rank (member of
+        several groups) is counted once per group; dedupe the groups'
+        ``rank_ids`` for a physical machine count."""
+        return sum(g.n_ranks for g in self.groups)
 
     @property
     def iteration(self) -> int:
@@ -659,11 +737,30 @@ class MultiGroupSimCluster:
         """Inject ``fault`` into one group (ranks are group-local)."""
         self.groups[group_index].add_fault(fault)
 
-    def step(self) -> List[IterationProfile]:
-        """One synchronous fleet iteration: profiles from every group."""
-        profiles: List[IterationProfile] = []
+    def add_fleet_fault(self, fault: Fault) -> None:
+        """Inject ``fault`` fleet-wide: every group carries it, and it
+        takes effect wherever its target rank ids actually live —
+        including a bridge rank's membership in several groups."""
         for g in self.groups:
+            g.add_fault(fault)
+
+    def step(self) -> List[IterationProfile]:
+        """One synchronous fleet iteration: profiles from every group.
+        Groups step in index order; after an upstream group steps, its
+        barrier delay (beyond the schedule slack) is imported onto the
+        bridge ranks of every linked downstream group."""
+        profiles: List[IterationProfile] = []
+        for i, g in enumerate(self.groups):
             profiles.extend(g.step())
+            for (u, d) in self.cascade_links:
+                if u != i:
+                    continue
+                exported = max(0.0, g.last_exit_delay - self.cascade_slack)
+                if exported <= 0.0:
+                    continue
+                downstream = self.groups[d].imported_delay
+                for rid in self._shared_ranks[(u, d)]:
+                    downstream[rid] = downstream.get(rid, 0.0) + exported
         return profiles
 
     def run(self, service, iterations: int, job_id: str = "job-0",
@@ -677,6 +774,57 @@ class MultiGroupSimCluster:
                 events.extend(service.process())
         events.extend(service.process())
         return events
+
+
+# ---------------------------------------------------------------------------
+# cascade fleet construction + validation helpers
+# ---------------------------------------------------------------------------
+
+
+def cascade_fleet(layout: Sequence[Sequence[int]],
+                  links: Sequence[Tuple[int, int]] = ((0, 1),), *,
+                  seed: int = 0, columnar: bool = False,
+                  native_unwind: bool = False,
+                  samples_per_iter: int = 400, iter_time: float = 0.1,
+                  slack: float = 6e-4, phase_step: float = 0.12,
+                  tables: Optional[TraceTables] = None,
+                  stack_variants: int = 1) -> MultiGroupSimCluster:
+    """A fleet with explicit cross-group topology.
+
+    ``layout`` lists each group's *global* rank ids; a rank id shared
+    between two groups is a bridge rank.  ``links`` are (upstream,
+    downstream) cascade edges; group i's collective is phased
+    ``phase_step`` later per index so downstream collectives follow
+    their upstream ones within the iteration.  The signature matches
+    what ``run_scenario_matrix`` passes to ``Scenario.make_cluster``.
+    """
+    return MultiGroupSimCluster(
+        ranks_per_group=len(layout[0]), seed=seed,
+        samples_per_iter=samples_per_iter, iter_time=iter_time,
+        columnar=columnar, tables=tables, stack_variants=stack_variants,
+        native_unwind=native_unwind,
+        rank_ids=[list(g) for g in layout],
+        coll_phases=[0.7 + phase_step * i for i in range(len(layout))],
+        cascade_links=links, cascade_slack=slack)
+
+
+def expect_cascade_export(victim_index: int, root_index: int):
+    """Scenario ``validate`` hook: the victim group must have yielded a
+    ``cascade_blame_exported`` verdict pointing at the root group."""
+    def _validate(events, cluster) -> Optional[str]:
+        from repro.core.attribution import CASCADE_EXPORT_CAUSE
+        gids = cluster.group_ids()
+        vg, rg = gids[victim_index], gids[root_index]
+        for e in events:
+            if e.root_cause == CASCADE_EXPORT_CAUSE and e.group_id == vg:
+                to = (e.verdict.evidence.get("exported_to")
+                      if e.verdict else None)
+                if to != rg:
+                    return (f"export from group {vg} points at {to!r}, "
+                            f"want {rg}")
+                return None
+        return f"no cascade_blame_exported event for victim group {vg}"
+    return _validate
 
 
 # ---------------------------------------------------------------------------
@@ -694,7 +842,9 @@ class ScenarioResult:
     """Outcome of one scenario on one service path.  ``event_tuples``
     carries every diagnosis as (group_id, root_cause, category,
     straggler_rank) in emission order, so callers can assert
-    event-for-event equivalence *across* paths from one matrix run."""
+    event-for-event equivalence *across* paths from one matrix run.
+    ``detail`` holds the scenario ``validate`` hook's failure message
+    (empty on success)."""
     scenario: str
     path: str
     ok: bool
@@ -706,6 +856,7 @@ class ScenarioResult:
     n_events: int
     event_tuples: List[Tuple[str, str, str, Optional[int]]] = \
         dataclasses.field(default_factory=list)
+    detail: str = ""
 
 
 def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
@@ -732,8 +883,15 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
     # symbolization (NativeStackFeed), so every registered scenario's
     # verdict is asserted end-to-end through the production-shaped path
     columnar = path == "columnar"
-    cl = SimCluster(n_ranks=n_ranks, seed=seed, columnar=columnar,
-                    native_unwind=columnar)
+    make_cluster = getattr(scenario, "make_cluster", None)
+    if make_cluster is not None:
+        # cascade scenarios bring their own fleet topology (overlapping
+        # groups, bridge ranks, staggered collective phases)
+        cl = make_cluster(seed=seed, columnar=columnar,
+                          native_unwind=columnar)
+    else:
+        cl = SimCluster(n_ranks=n_ranks, seed=seed, columnar=columnar,
+                        native_unwind=columnar)
 
     def run(iterations: int) -> None:
         for _ in range(iterations):
@@ -749,7 +907,13 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
         svc.process()
 
     run(baseline_iters)
-    cl.add_fault(scenario.make_fault())
+    fault = scenario.make_fault()
+    if isinstance(cl, MultiGroupSimCluster):
+        # fleet-wide injection: the fault bites wherever its target
+        # rank ids live, including a bridge rank's several groups
+        cl.add_fleet_fault(fault)
+    else:
+        cl.add_fault(fault)
     run(fault_iters)
     events = svc.events
     first = events[0] if events else None
@@ -762,7 +926,17 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
                     and first.straggler_rank is None)
     else:
         layer_ok = first.verdict.layer == scenario.expected_layer
-    ok = (first is not None and layer_ok
+    group_ok = True
+    if (first is not None
+            and getattr(scenario, "expected_group_index", None) is not None):
+        # cascade scenarios pin which group the root diagnosis names
+        group_ok = (first.group_id
+                    == cl.group_ids()[scenario.expected_group_index])
+    detail = ""
+    validate = getattr(scenario, "validate", None)
+    if validate is not None:
+        detail = validate(events, cl) or ""
+    ok = (first is not None and layer_ok and group_ok and not detail
           and first.root_cause == scenario.expected_cause
           and (scenario.expected_rank is None
                or first.straggler_rank == scenario.expected_rank))
@@ -774,7 +948,8 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
         first_rank=first.straggler_rank if first else None,
         causes=sorted({e.root_cause for e in events}), n_events=len(events),
         event_tuples=[(e.group_id, e.root_cause, e.category,
-                       e.straggler_rank) for e in events])
+                       e.straggler_rank) for e in events],
+        detail=detail)
 
 
 def run_scenario_matrix(registry=None, scenarios=None,
@@ -819,6 +994,7 @@ def run_scenario_matrix(registry=None, scenarios=None,
         detail = "\n".join(
             f"  {m.scenario}/{m.path}: expected {m.expected_cause}"
             f"@rank{m.expected_rank} got {m.first_cause}@rank{m.first_rank}"
-            f" ({m.n_events} events: {m.causes})" for m in misses)
+            f" ({m.n_events} events: {m.causes})"
+            + (f" [{m.detail}]" if m.detail else "") for m in misses)
         raise AssertionError(f"scenario matrix misses:\n{detail}")
     return results

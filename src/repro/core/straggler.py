@@ -7,6 +7,18 @@ estimated from exit-time residuals over a window, then a rank is flagged
 when its (aligned) entry lateness exceeds mu + k*sigma across the group
 over a sliding window of W iterations (defaults W=100, k=2; §5.4 uses an
 8-rank group with a 0.4 ms straggler).
+
+Blame edges: the primary product of ``observe_instance`` is no longer a
+bare outlier score but one :class:`BlameEdge` per (collective instance,
+waiting rank) — the barrier semantics assign every rank's in-collective
+*wait* to the latest-entering (culprit) rank, never to the waiter
+itself.  The windowed per-rank wait/lateness state behind those edges is
+exposed as :meth:`StragglerDetector.blame_summary`, which the cascade
+attribution layer (``repro.core.attribution``) joins across overlapping
+communication groups.  :meth:`StragglerDetector.check` is now a *view*
+over that same blame state: alerts are derived from the windowed
+lateness means the edges accumulate, so alert and edge can never
+disagree about who is late.
 """
 from __future__ import annotations
 
@@ -29,6 +41,40 @@ class StragglerAlert:
     std: float
     zscore: float
     window: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BlameEdge:
+    """One collective instance's wait, attributed.  ``victim_rank``
+    blocked for ``wait`` seconds at the barrier; by the latest-entry
+    semantics that wait is blame assigned to ``culprit_rank`` (the
+    latest-entering rank), not to the victim."""
+    group_id: str
+    op: str
+    instance_start: float            # aligned instance start time
+    culprit_rank: int
+    victim_rank: int
+    wait: float
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupBlame:
+    """Windowed blame state of one communication group — what the
+    cascade attribution layer consumes.  ``lateness`` is each rank's
+    mean *self*-lateness relative to the group (demeaned per instance);
+    ``wait`` is each rank's mean absolute blocked-wait per instance
+    (blame it exported onto the group's culprits).  ``last_start`` is
+    the most recent aligned instance start, used to order collectives
+    of different groups within an iteration."""
+    group_id: str
+    ranks: Tuple[int, ...]
+    culprit_rank: int
+    culprit_lateness: float          # relative to the group mean
+    lateness: Dict[int, float]
+    wait: Dict[int, float]
+    peer_wait: float                 # mean wait/instance across non-culprits
+    last_start: float
+    instances: int
 
 
 class ClockAligner:
@@ -85,11 +131,13 @@ class ClockAligner:
 
 
 class StragglerDetector:
-    """Per-group sliding-window entry-lateness outlier detection."""
+    """Per-group sliding-window blame accumulation over collective
+    instances.  Alerts (entry-lateness outliers) are a derived view of
+    the same windowed state that backs blame edges and group summaries."""
 
     def __init__(self, window: int = 100, k: float = 2.0,
                  min_lateness: float = 50e-6, min_instances: int = 8,
-                 robust: bool = False):
+                 robust: bool = False, max_edges: int = 8192):
         """``robust=False`` is the paper-faithful mean/std outlier model.
         ``robust=True`` is our beyond-paper variant using median/MAD, which
         keeps power when several ranks degrade together (the paper's §7
@@ -107,9 +155,21 @@ class StragglerDetector:
         # running window sums so check() never re-walks the deques
         self._late_sum: Dict[str, Dict[int, float]] = defaultdict(
             lambda: defaultdict(float))
+        # absolute blocked-wait per rank (blame the rank *received* from
+        # the instance's culprit), windowed the same way as lateness
+        self._wait: Dict[str, Dict[int, Deque[float]]] = defaultdict(
+            lambda: defaultdict(lambda: deque(maxlen=window)))
+        self._wait_sum: Dict[str, Dict[int, float]] = defaultdict(
+            lambda: defaultdict(float))
+        self._last_start: Dict[str, float] = {}
+        # per-collective blame edges; bounded (drained every service
+        # cycle, deque-capped against an undrained consumer)
+        self._edges: Deque[BlameEdge] = deque(maxlen=max_edges)
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
-        """Feed one matched collective instance (all ranks of one group)."""
+        """Feed one matched collective instance (all ranks of one group).
+        Emits one blame edge per waiting rank: the wait inside the
+        barrier is blamed on the latest-entering rank."""
         n = len(events)
         if n < 2:
             return
@@ -122,33 +182,113 @@ class StragglerDetector:
                             np.float64, n)
         aligned = entries - skews
         lateness = aligned - aligned.mean()
-        late_g, sum_g = self._late[group], self._late_sum[group]
-        for e, lv in zip(events, lateness.tolist()):
+        # barrier semantics: the instance starts when the last rank
+        # arrives; everyone else's wait is blame on that culprit
+        start = float(aligned.max())
+        culprit = events[int(np.argmax(aligned))].rank
+        waits = start - aligned
+        self._last_start[group] = start
+        late_g, lsum_g = self._late[group], self._late_sum[group]
+        wait_g, wsum_g = self._wait[group], self._wait_sum[group]
+        op = events[0].op
+        for e, lv, wv in zip(events, lateness.tolist(), waits.tolist()):
             d = late_g[e.rank]
             if len(d) == d.maxlen:          # evict oldest from the sum
-                sum_g[e.rank] -= d[0]
+                lsum_g[e.rank] -= d[0]
             d.append(lv)
-            sum_g[e.rank] += lv
+            lsum_g[e.rank] += lv
+            w = wait_g[e.rank]
+            if len(w) == w.maxlen:
+                wsum_g[e.rank] -= w[0]
+            w.append(wv)
+            wsum_g[e.rank] += wv
+            if e.rank != culprit and wv >= self.min_lateness:
+                self._edges.append(BlameEdge(
+                    group, op, start, culprit, e.rank, wv))
+
+    def drain_edges(self) -> List[BlameEdge]:
+        """Hand off (and clear) the per-collective blame edges emitted
+        since the last drain."""
+        out = list(self._edges)
+        self._edges.clear()
+        return out
 
     def forget_group(self, group_id: str) -> None:
         """Drop all windowed state for a retired communication group."""
         self._late.pop(group_id, None)
         self._late_sum.pop(group_id, None)
+        self._wait.pop(group_id, None)
+        self._wait_sum.pop(group_id, None)
+        self._last_start.pop(group_id, None)
         self.aligner.forget_group(group_id)
 
+    # -- windowed views ------------------------------------------------------
+    def _window_lateness(self, g: str
+                         ) -> Optional[Tuple[Dict[int, float], int]]:
+        """Per-rank windowed mean lateness (and instance count) for one
+        group, or None below the minimum-evidence thresholds."""
+        ranks = self._late.get(g, {})
+        if len(ranks) < 2:
+            return None
+        n_inst = min((len(d) for d in ranks.values()), default=0)
+        if n_inst < self.min_instances:
+            return None
+        sums = self._late_sum[g]
+        return {r: sums[r] / len(d) for r, d in ranks.items()}, n_inst
+
+    def blame_summary(self, g: str) -> Optional[GroupBlame]:
+        """Windowed blame state of one group (None below evidence
+        thresholds) — the attribution layer's per-group input."""
+        win = self._window_lateness(g)
+        if win is None:
+            return None
+        mean_late, n_inst = win
+        wsums, wdeq = self._wait_sum[g], self._wait[g]
+        mean_wait = {r: (wsums[r] / len(wdeq[r]) if wdeq.get(r) else 0.0)
+                     for r in mean_late}
+        mu = sum(mean_late.values()) / len(mean_late)
+        culprit = max(mean_late, key=mean_late.get)
+        peers = [w for r, w in mean_wait.items() if r != culprit]
+        return GroupBlame(
+            group_id=g, ranks=tuple(sorted(mean_late)),
+            culprit_rank=culprit,
+            culprit_lateness=mean_late[culprit] - mu,
+            lateness=mean_late, wait=mean_wait,
+            peer_wait=sum(peers) / len(peers) if peers else 0.0,
+            last_start=self._last_start.get(g, 0.0), instances=n_inst)
+
+    def blame_summaries(self) -> Dict[str, GroupBlame]:
+        """Every group currently holding enough windowed evidence."""
+        out: Dict[str, GroupBlame] = {}
+        for g in self._late:
+            s = self.blame_summary(g)
+            if s is not None:
+                out[g] = s
+        return out
+
     def check(self, group_id: Optional[str] = None) -> List[StragglerAlert]:
-        alerts: List[StragglerAlert] = []
+        """Alerts as a *view* over the windowed blame state: a rank is
+        flagged when its mean lateness exceeds mu + k*sigma (or the
+        robust median/MAD equivalent) across the group."""
         groups = [group_id] if group_id else list(self._late)
+        wins = {}
         for g in groups:
-            ranks = self._late.get(g, {})
-            if len(ranks) < 2:
-                continue
-            n_inst = min((len(d) for d in ranks.values()), default=0)
-            if n_inst < self.min_instances:
-                continue
-            # windowed mean lateness per rank, from the running sums
-            sums = self._late_sum[g]
-            mean_late = {r: sums[r] / len(d) for r, d in ranks.items()}
+            win = self._window_lateness(g)
+            if win is not None:
+                wins[g] = win
+        return self.check_windows(wins)
+
+    def check_windows(self, windows) -> List[StragglerAlert]:
+        """Alerts from already-computed per-group windowed lateness —
+        ``{group: (mean_late, n_inst)}`` or ``{group: GroupBlame}`` —
+        so one analysis cycle walks the windowed state exactly once
+        (``blame_summaries`` + alerts share the walk)."""
+        alerts: List[StragglerAlert] = []
+        for g, win in windows.items():
+            if isinstance(win, GroupBlame):
+                mean_late, n_inst = win.lateness, win.instances
+            else:
+                mean_late, n_inst = win
             vals = sorted(mean_late.values())
             if self.robust:
                 mu = vals[len(vals) // 2]                       # median

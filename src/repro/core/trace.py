@@ -59,6 +59,7 @@ __all__ = [
     "ColumnarBatch", "profile_to_columnar", "stacks_profile", "to_columnar",
     "to_dataclasses", "batch_fraction_rows", "TableRemap", "RemapCache",
     "remap_profile", "encode_batch", "decode_batch",
+    "merged_intervals", "interval_overlap",
 ]
 
 WIRE_MAGIC = b"SYTC"
@@ -427,6 +428,25 @@ class ColumnarProfile:
         return FlameGraph.from_rows(self.stack_rows(),
                                     self.tables.stack_tuple)
 
+    # -- interval views (what the attribution layer reads) ------------------
+    def kernel_intervals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(start, end) arrays of this iteration's kernel executions."""
+        return self.kern_start, self.kern_start + self.kern_dur
+
+    def collective_intervals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(entry, exit) arrays of this iteration's collective ops."""
+        return self.coll_entry, self.coll_exit
+
+    def exposed_kernel_time(self) -> float:
+        """Total kernel time *not* overlapped by a collective interval —
+        the iteration's exposed-compute component, vectorized."""
+        ks, ke = self.kernel_intervals()
+        total = float(self.kern_dur.sum())
+        if not ks.shape[0] or not self.coll_entry.shape[0]:
+            return total
+        ms, me = merged_intervals(self.coll_entry, self.coll_exit)
+        return total - float(interval_overlap(ks, ke, ms, me).sum())
+
     # -- materialization back to the boundary schema ------------------------
     def cpu_samples(self) -> List[StackSample]:
         g = self.tables.strings.get
@@ -601,6 +621,50 @@ def batch_fraction_rows(tables: TraceTables, sids: np.ndarray,
         fractions = np.bincount(inv, weights=w_rep)
     bounds = np.searchsorted(uk // nf, np.arange(n + 1))
     return uk % nf, fractions, bounds
+
+
+# ---------------------------------------------------------------------------
+# interval helpers (shared by attribution and the profile views)
+# ---------------------------------------------------------------------------
+
+
+def merged_intervals(starts: np.ndarray, ends: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge possibly-overlapping intervals into a sorted disjoint set.
+    Vectorized: sort by start, close a run wherever the next start
+    exceeds the running max end."""
+    if starts.shape[0] == 0:
+        return _EMPTY_F, _EMPTY_F
+    order = np.argsort(starts, kind="stable")
+    s, e = np.asarray(starts, dtype=np.float64)[order], \
+        np.asarray(ends, dtype=np.float64)[order]
+    run_end = np.maximum.accumulate(e)
+    new_run = np.empty(s.shape[0], dtype=bool)
+    new_run[0] = True
+    np.greater(s[1:], run_end[:-1], out=new_run[1:])
+    idx = np.flatnonzero(new_run)
+    ms = s[idx]
+    me = np.maximum.reduceat(e, idx)
+    return ms, me
+
+
+def interval_overlap(qs: np.ndarray, qe: np.ndarray,
+                     ms: np.ndarray, me: np.ndarray) -> np.ndarray:
+    """Per-query overlap length of [qs, qe) with the *disjoint sorted*
+    interval set (ms, me) — one searchsorted pass, no per-query loops."""
+    if ms.shape[0] == 0 or qs.shape[0] == 0:
+        return np.zeros(qs.shape[0])
+    lens = me - ms
+    cum = np.zeros(ms.shape[0] + 1)
+    np.cumsum(lens, out=cum[1:])
+
+    def covered(x: np.ndarray) -> np.ndarray:
+        i = np.searchsorted(ms, x, side="right") - 1
+        j = np.maximum(i, 0)
+        inside = cum[j] + np.clip(x - ms[j], 0.0, lens[j])
+        return np.where(i >= 0, inside, 0.0)
+
+    return np.clip(covered(qe) - covered(qs), 0.0, None)
 
 
 # ---------------------------------------------------------------------------

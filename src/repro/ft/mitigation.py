@@ -90,6 +90,22 @@ class MitigationPlanner:
     def on_diagnosis(self, ev: DiagnosticEvent) -> List[MitigationAction]:
         out: List[MitigationAction] = []
         rank = ev.straggler_rank
+        v = ev.verdict
+        if (v is not None and v.culprit_group
+                and v.culprit_group != ev.group_id):
+            # victim-side verdict (cascade export): the flagged rank
+            # merely waited on a culprit in another group — cordoning
+            # or re-meshing the victim would evict a healthy node.  The
+            # root group's own event carries the actionable diagnosis.
+            act = MitigationAction(
+                kind="observe", target_nodes=[], plan=None,
+                reason=(f"cascade victim of group {v.culprit_group} "
+                        f"(root rank {v.culprit_rank}); no local action"),
+                source="diagnosis")
+            self.actions.append(act)
+            return [act]
+        if v is not None and v.culprit_rank is not None:
+            rank = v.culprit_rank      # act on the localized culprit
         if ev.category == "gpu_hardware" and rank is not None:
             out.append(MitigationAction(
                 kind="cordon", target_nodes=[rank // self.chips_per_node],

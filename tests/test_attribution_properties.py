@@ -1,0 +1,142 @@
+"""Hypothesis properties of the attribution layer.
+
+Invariants (ISSUE acceptance):
+  * per-iteration blame components sum to ``iter_time`` within tolerance
+  * blame totals are preserved under rank relabeling
+  * timelines/edges are invariant under profile ingestion order
+  * the vectorized column pass equals the naive per-event Python walk
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.attribution import (iteration_timelines,  # noqa: E402
+                                    iteration_timelines_naive)
+from repro.core.events import (CollectiveEvent, IterationProfile,  # noqa: E402
+                               KernelEvent, StackSample)
+from repro.core.trace import profile_to_columnar, TraceTables  # noqa: E402
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+_FRAMES = st.sampled_from([
+    ("py::train", "py::forward"),
+    ("py::train", "ncclAllReduce"),
+    ("py::train", "py::data_next", "read"),
+    ("do_softirq", "net_rx_action"),
+])
+
+
+@st.composite
+def _group_iteration(draw):
+    """One synchronized iteration of a 2..6-rank group: per-rank entry
+    delays, kernels and stacks, one or two collective ops."""
+    n = draw(st.integers(2, 6))
+    n_ops = draw(st.integers(1, 2))
+    iter_time = draw(st.floats(0.05, 0.5))
+    profiles = []
+    for r in range(n):
+        colls = []
+        for op_i in range(n_ops):
+            base = 0.02 + 0.05 * op_i
+            entry = base + draw(st.floats(0.0, 0.01))
+            dur = draw(st.floats(0.001, 0.02))
+            colls.append(CollectiveEvent(
+                rank=r, group_id="g", op=f"op{op_i}", entry=entry,
+                exit=entry + dur))
+        kernels = [
+            KernelEvent(rank=r, name=f"k{i}",
+                        start=draw(st.floats(0.0, 0.1)),
+                        duration=draw(st.floats(0.0, 0.02)))
+            for i in range(draw(st.integers(0, 3)))]
+        stacks = [
+            StackSample(rank=r, timestamp=0.0, frames=draw(_FRAMES),
+                        weight=draw(st.integers(1, 20)))
+            for _ in range(draw(st.integers(0, 4)))]
+        profiles.append(IterationProfile(
+            rank=r, iteration=0, group_id="g", iter_time=iter_time,
+            cpu_samples=stacks, kernel_events=kernels, collectives=colls))
+    return profiles
+
+
+def _columnar(profiles, tables=None):
+    t = tables if tables is not None else TraceTables()
+    return [profile_to_columnar(p, t) for p in profiles]
+
+
+@given(_group_iteration())
+def test_components_sum_to_iter_time(profiles):
+    tls, _ = iteration_timelines(_columnar(profiles))
+    for tl in tls:
+        assert tl.total == pytest.approx(tl.iter_time, abs=1e-9)
+        assert all(c >= -1e-12 for c in tl.components())
+
+
+@given(_group_iteration())
+def test_vectorized_equals_naive(profiles):
+    tls, edges = iteration_timelines(_columnar(profiles))
+    tls_n, edges_n = iteration_timelines_naive(profiles)
+    for a, b in zip(tls, tls_n):
+        assert a.rank == b.rank
+        assert a.components() == pytest.approx(b.components(), abs=1e-9)
+    assert [(e.culprit_rank, e.victim_rank) for e in edges] == \
+        [(e.culprit_rank, e.victim_rank) for e in edges_n]
+    for x, y in zip(edges, edges_n):
+        assert x.wait == pytest.approx(y.wait, abs=1e-12)
+
+
+@given(_group_iteration(), st.randoms(use_true_random=False))
+def test_blame_total_invariant_under_rank_relabeling(profiles, rnd):
+    """Relabeling ranks permutes who is blamed, but never how much
+    blame exists: total wait, per-timeline components and the edge
+    multiset all map through the permutation."""
+    ranks = [p.rank for p in profiles]
+    new_ids = list(range(100, 100 + len(ranks)))
+    rnd.shuffle(new_ids)
+    mapping = dict(zip(ranks, new_ids))
+
+    def relabel(p):
+        return IterationProfile(
+            rank=mapping[p.rank], iteration=p.iteration, group_id=p.group_id,
+            iter_time=p.iter_time, cpu_samples=p.cpu_samples,
+            kernel_events=p.kernel_events,
+            collectives=[CollectiveEvent(
+                rank=mapping[c.rank], group_id=c.group_id, op=c.op,
+                entry=c.entry, exit=c.exit) for c in p.collectives])
+
+    tls, edges = iteration_timelines(_columnar(profiles))
+    tls_r, edges_r = iteration_timelines(_columnar(
+        [relabel(p) for p in profiles]))
+    assert sum(e.wait for e in edges) == pytest.approx(
+        sum(e.wait for e in edges_r), abs=1e-9)
+    by_rank = {tl.rank: tl for tl in tls}
+    for tl in tls_r:
+        orig = by_rank[{v: k for k, v in mapping.items()}[tl.rank]]
+        assert tl.components() == pytest.approx(orig.components(), abs=1e-9)
+    # edges map through the permutation (as a multiset; culprit ties may
+    # break differently because ties break by rank id)
+    waits = sorted(round(e.wait, 12) for e in edges)
+    waits_r = sorted(round(e.wait, 12) for e in edges_r)
+    assert waits == waits_r
+
+
+@given(_group_iteration(), st.randoms(use_true_random=False))
+def test_invariant_under_ingestion_order(profiles, rnd):
+    tables = TraceTables()
+    cols = _columnar(profiles, tables)
+    shuffled = list(cols)
+    rnd.shuffle(shuffled)
+    tls, edges = iteration_timelines(cols)
+    tls_s, edges_s = iteration_timelines(shuffled)
+    a = {tl.rank: tl.components() for tl in tls}
+    b = {tl.rank: tl.components() for tl in tls_s}
+    assert set(a) == set(b)
+    for r in a:
+        assert a[r] == pytest.approx(b[r], abs=1e-9)
+    assert sorted((e.culprit_rank, e.victim_rank, round(e.wait, 12))
+                  for e in edges) == \
+        sorted((e.culprit_rank, e.victim_rank, round(e.wait, 12))
+               for e in edges_s)

@@ -54,3 +54,31 @@ def test_tracer_records_and_drains():
     assert evs[0].op == "AllGather" and evs[0].rank == 5
     assert evs[0].exit >= evs[0].entry
     assert tr.drain() == []
+
+
+def test_tracer_seq_order_under_threads():
+    """Regression for the double-lock race: seq assignment and event
+    append used to be two separate critical sections, so concurrent
+    recorders could append out of seq order.  With one critical section
+    every drain observes strictly increasing, gap-free seq numbers."""
+    import threading
+
+    tr = CollectiveTracer(rank=0)
+    n_threads, per_thread = 8, 200
+    start = threading.Barrier(n_threads)
+
+    def record():
+        start.wait()
+        for i in range(per_thread):
+            tr.record_collective("g", "AllReduce", entry=float(i),
+                                 exit=float(i) + 1.0)
+
+    threads = [threading.Thread(target=record) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = tr.drain()
+    seqs = [e.seq for e in evs]
+    assert len(seqs) == n_threads * per_thread
+    assert seqs == sorted(seqs) == list(range(len(seqs)))

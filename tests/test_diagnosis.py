@@ -169,6 +169,41 @@ def test_os_diff_quiet_when_matched():
     assert os_diff(s, h) is None
 
 
+def test_os_diff_zero_reported_gauge_never_outranks_real_cause():
+    """Regression pin for lower-is-worse gauges: a zero-reported gauge
+    (schema default = "unreported", e.g. ``cpu_freq_mhz=0.0`` from a v1
+    agent) must never enter the severity ranking at all — not even
+    above a cause that is barely over its own threshold.  Without the
+    ``min_valid`` guard a 2600 -> 0 "drop" would read as an infinite-
+    severity downclock and bury every real diagnosis."""
+    # the real cause is deliberately WEAK: numa migrations at 4.5x, just
+    # past their 4x threshold (severity ~1.1)
+    h = OSSignals(rank=7, timestamp=0, numa_migrations=20,
+                  cpu_freq_mhz=2600.0)
+    s = OSSignals(rank=0, timestamp=0, numa_migrations=90,
+                  cpu_freq_mhz=0.0)           # straggler gauge unreported
+    v = os_diff(s, h)
+    assert v is not None and v.root_cause == "numa_migration_storm"
+    causes = [c["cause"] for c in v.evidence["causes"]]
+    assert "cpu_frequency_downclock" not in causes
+    # the unreported side flipped: healthy gauge missing, straggler real
+    v = os_diff(
+        OSSignals(rank=0, timestamp=0, numa_migrations=90,
+                  cpu_freq_mhz=2600.0),
+        OSSignals(rank=7, timestamp=0, numa_migrations=20,
+                  cpu_freq_mhz=0.0))
+    assert v is not None and v.root_cause == "numa_migration_storm"
+    assert all(c["cause"] != "cpu_frequency_downclock"
+               for c in v.evidence["causes"])
+    # a genuinely reported downclock still wins over the weak cause
+    v = os_diff(
+        OSSignals(rank=0, timestamp=0, numa_migrations=90,
+                  cpu_freq_mhz=1200.0),
+        OSSignals(rank=7, timestamp=0, numa_migrations=20,
+                  cpu_freq_mhz=2600.0))
+    assert v is not None and v.root_cause == "cpu_frequency_downclock"
+
+
 # -- layered walk -------------------------------------------------------------------
 
 def test_layered_order_gpu_first():
