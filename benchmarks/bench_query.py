@@ -1,0 +1,179 @@
+"""Query-plane benchmarks + gates.
+
+Two assertions ride CI's bench-smoke:
+
+  1. Ingest-regression guard: with 32 concurrent reader threads issuing
+     snapshot/metric queries against a live fleet, the median
+     ``process()`` cycle stays within ``MAX_SLOWDOWN`` (1.2x) of the
+     reader-free baseline (plus a small absolute epsilon so sub-ms
+     baselines don't gate on scheduler noise).  Readers throttle
+     themselves ~20 ms between passes — the realistic dashboard shape —
+     because unthrottled CPU-bound Python readers measure GIL scheduling
+     fairness, not snapshot isolation.
+  2. Sustained-ingest query throughput: 8 unthrottled readers against
+     continuous ingest must clear ``MIN_QPS`` aggregate queries/sec with
+     p99 per-call latency under ``MAX_P99_S`` — and every response must
+     carry a consistent epoch.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from statistics import median
+from typing import Dict, List
+
+from repro.core import simcluster as sc
+from repro.core.service import CentralService
+
+MAX_SLOWDOWN = 1.2
+SLOWDOWN_EPS_S = 0.002          # absolute guard for sub-ms baselines
+MIN_QPS = 500.0                 # aggregate, all readers
+MAX_P99_S = 0.25
+N_READERS_GATE = 32
+N_READERS_TPUT = 8
+N_CYCLES = 25
+
+
+def _fleet(seed: int = 13) -> sc.MultiGroupSimCluster:
+    return sc.MultiGroupSimCluster(
+        n_groups=8, ranks_per_group=16, seed=seed, samples_per_iter=60,
+        columnar=True)
+
+
+def _drive_cycles(svc, fleet, n_cycles: int) -> List[float]:
+    """n_cycles of (ingest one fleet iteration, time one process())."""
+    times: List[float] = []
+    for _ in range(n_cycles):
+        for p in fleet.step():
+            svc.ingest(p)
+        t0 = time.perf_counter()
+        svc.process()
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def _reader_pass(svc, group_id: str) -> None:
+    snap = svc.snapshot()
+    assert snap.stats.get("epoch", snap.epoch) == snap.epoch
+    resp = svc.query_metrics(group_id=group_id, rank=0,
+                             metric="iter_time")
+    assert resp["epoch"] >= snap.epoch
+
+
+def _ingest_regression_gate(out_lines: List[str]) -> Dict[str, float]:
+    svc = CentralService()
+    fleet = _fleet()
+    for slo in sc.fleet_slos(fleet, margin=0.5):
+        svc.register_slo(slo)
+    _drive_cycles(svc, fleet, 5)                       # warm up
+    baseline = median(_drive_cycles(svc, fleet, N_CYCLES))
+
+    g0 = fleet.group_ids()[0]
+    stop = threading.Event()
+    started = threading.Barrier(N_READERS_GATE + 1)
+
+    def reader():
+        started.wait()
+        while not stop.is_set():
+            _reader_pass(svc, g0)
+            time.sleep(0.02)
+
+    threads = [threading.Thread(target=reader, daemon=True)
+               for _ in range(N_READERS_GATE)]
+    for t in threads:
+        t.start()
+    started.wait()
+    try:
+        with_readers = median(_drive_cycles(svc, fleet, N_CYCLES))
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+
+    ratio = with_readers / baseline
+    out_lines.append(f"query_cycle_baseline,{baseline*1e6:.0f},"
+                     f"median_of_{N_CYCLES}_cycles")
+    out_lines.append(f"query_cycle_{N_READERS_GATE}_readers,"
+                     f"{with_readers*1e6:.0f},{ratio:.2f}x_of_baseline")
+    assert with_readers <= baseline * MAX_SLOWDOWN + SLOWDOWN_EPS_S, (
+        f"process() cycle {with_readers*1e3:.2f}ms with "
+        f"{N_READERS_GATE} readers vs {baseline*1e3:.2f}ms baseline "
+        f"({ratio:.2f}x; gate: <= {MAX_SLOWDOWN}x)")
+    return {"cycle_baseline_s": baseline,
+            "cycle_with_readers_s": with_readers,
+            "reader_slowdown": ratio}
+
+
+def _throughput_gate(out_lines: List[str]) -> Dict[str, float]:
+    svc = CentralService()
+    fleet = _fleet(seed=14)
+    for slo in sc.fleet_slos(fleet, margin=0.5):
+        svc.register_slo(slo)
+    _drive_cycles(svc, fleet, 5)
+    gids = fleet.group_ids()
+
+    stop = threading.Event()
+    lat: List[List[float]] = [[] for _ in range(N_READERS_TPUT)]
+    errors: List[BaseException] = []
+
+    def reader(i: int):
+        j = 0
+        try:
+            while not stop.is_set():
+                g = gids[j % len(gids)]
+                j += 1
+                t0 = time.perf_counter()
+                if j % 3 == 0:
+                    resp = svc.search_events(limit=20)
+                elif j % 3 == 1:
+                    resp = svc.query_metrics(group_id=g, rank=0)
+                else:
+                    resp = svc.list_groups()
+                assert "epoch" in resp
+                lat[i].append(time.perf_counter() - t0)
+        except BaseException as e:               # surface in main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(i,), daemon=True)
+               for i in range(N_READERS_TPUT)]
+    t_start = time.perf_counter()
+    for t in threads:
+        t.start()
+    # sustained ingest while readers hammer the snapshot
+    while time.perf_counter() - t_start < 1.5:
+        _drive_cycles(svc, fleet, 1)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    elapsed = time.perf_counter() - t_start
+    if errors:
+        raise errors[0]
+
+    all_lat = sorted(x for per in lat for x in per)
+    n = len(all_lat)
+    qps = n / elapsed
+    p99 = all_lat[min(n - 1, int(n * 0.99))] if n else float("inf")
+    out_lines.append(f"query_throughput,{elapsed/max(n,1)*1e6:.0f},"
+                     f"{qps:.0f}_qps_{N_READERS_TPUT}_readers")
+    out_lines.append(f"query_p99_latency,{p99*1e6:.0f},"
+                     f"over_{n}_queries_sustained_ingest")
+    assert qps >= MIN_QPS, (
+        f"{qps:.0f} queries/s under sustained ingest "
+        f"(floor: {MIN_QPS:.0f})")
+    assert p99 <= MAX_P99_S, (
+        f"p99 query latency {p99*1e3:.1f}ms (gate: <= {MAX_P99_S*1e3:.0f}ms)")
+    return {"qps": qps, "p99_s": p99}
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    out_lines.append("# query plane: ingest-regression guard + "
+                     "sustained-ingest query throughput")
+    out = _ingest_regression_gate(out_lines)
+    out.update(_throughput_gate(out_lines))
+    return out
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

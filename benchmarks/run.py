@@ -17,6 +17,9 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
   bench_scenarios    — full scenario-registry matrix (every registered
                        scenario x legacy/streaming/columnar/sharded)
   bench_service      — streaming-vs-legacy service + 1k-rank sharded fleet
+  bench_query        — query-plane gates: 32-reader ingest-regression
+                       guard (< 1.2x cycle slowdown) + sustained-ingest
+                       query throughput/p99 floors
   bench_trace        — columnar wire codec + encoded-vs-dataclass ingest
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
 
@@ -42,6 +45,7 @@ MODULES = [
     "benchmarks.bench_attribution",
     "benchmarks.bench_overhead",
     "benchmarks.bench_service",
+    "benchmarks.bench_query",
     "benchmarks.bench_trace",
     "benchmarks.bench_roofline",
 ]

@@ -8,6 +8,7 @@ docs/SCENARIOS.md for the generated catalog.
 Run:  PYTHONPATH=src python examples/diagnose_cluster.py [--scenario NAME]
 """
 import argparse
+import dataclasses
 
 from repro.core import simcluster as sc
 from repro.core.scenarios import default_registry
@@ -15,7 +16,7 @@ from repro.core.service import CentralService
 from repro.ft import MitigationPlanner
 
 
-def run_scenario(scen) -> None:
+def run_scenario(scen, audit: bool = False) -> None:
     print(f"\n=== {scen.name}: {scen.description} ===")
     svc = CentralService(window=50, robust_detector=scen.robust_detector)
     planner = MitigationPlanner(straggler_patience=2)
@@ -25,6 +26,18 @@ def run_scenario(scen) -> None:
     else:
         cluster = sc.SimCluster(n_ranks=8, seed=7)
     cluster.run(svc, 30)
+    if audit:
+        # SLO thresholds from the *observed* healthy baseline (the
+        # snapshot just published), not the nominal simulator base
+        snap = svc.snapshot()
+        for slo in sc.fleet_slos(cluster, margin=0.05):
+            means = [hv.recent_mean_time(8)
+                     for (g, _r), hv in snap.history.items()
+                     if g == slo.group_id]
+            if means:
+                slo = dataclasses.replace(
+                    slo, threshold=1.05 * max(means))
+            svc.register_slo(slo)
     fault = scen.make_fault()
     if isinstance(cluster, sc.MultiGroupSimCluster):
         cluster.add_fleet_fault(fault)
@@ -70,6 +83,13 @@ def run_scenario(scen) -> None:
     for act in planner.on_diagnosis(e):
         print(f"  mitigation: {act.kind} -> nodes {list(act.target_nodes)} "
               f"({act.reason})")
+    if audit:
+        findings = svc.audit()
+        roots = sorted({(f.root_group, f.root_rank, f.root_node,
+                         f.root_cause) for f in findings})
+        print(f"  audit     : {len(findings)} SLO breach(es) @ epoch "
+              f"{svc.snapshot().epoch}"
+              + (f", walked to root(s) {roots}" if roots else ""))
 
 
 def main() -> None:
@@ -78,10 +98,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all", choices=["all", *names],
                     help="one registered scenario, or all of them")
+    ap.add_argument("--audit", action="store_true",
+                    help="register per-group iteration-time SLOs (5%% "
+                         "over the observed healthy baseline) and print "
+                         "the fleet audit() walk — "
+                         "every breach traced to its root (node, rank); "
+                         "see docs/QUERY_API.md")
     args = ap.parse_args()
     for scen in (reg if args.scenario == "all"
                  else [reg.get(args.scenario)]):
-        run_scenario(scen)
+        run_scenario(scen, audit=args.audit)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,9 @@ Modules map 1:1 to the paper's mechanisms:
                   generated from it)
   service       — central analysis service (streaming, bounded state)
   sharded       — group-partitioned multi-shard ingestion front-end
+  query         — queryable diagnosis plane: epoch/snapshot read state,
+                  SLOs with wildcard targets, time-travel queries and
+                  the fleet audit() walk (DiagnosisService protocol)
   simcluster    — multi-rank simulation + pluggable fault injection
                   (§5.4 case studies and beyond; run_scenario_matrix)
 """

@@ -116,6 +116,20 @@ class BlameTimeline:
             "transfer": self.transfer, "residual": self.residual,
         }
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, float], group_id: str = "",
+                  rank: int = -1, iteration: int = -1) -> "BlameTimeline":
+        """Rebuild from the ``as_dict`` wire form; identity fields come
+        from the dict when present, else the keyword defaults (query
+        responses carry them alongside the component row)."""
+        return cls(
+            group_id=str(d.get("group_id", group_id)),
+            rank=int(d.get("rank", rank)),
+            iteration=int(d.get("iteration", iteration)),
+            iter_time=d["iter_time"], compute=d["compute"],
+            host=d["host"], blocked_wait=d["blocked_wait"],
+            transfer=d["transfer"], residual=d["residual"])
+
 
 class TimelineBuilder:
     """Cached per-table derived state for timeline construction: a dense

@@ -74,6 +74,19 @@ class Verdict:
     culprit_group: Optional[str] = None
     victim_ranks: Tuple[int, ...] = ()
 
+    def to_dict(self) -> Dict[str, object]:
+        """Stable wire form (query-envelope contract: field names match
+        the dataclass; ``victim_ranks`` is a list)."""
+        d = dataclasses.asdict(self)
+        d["victim_ranks"] = list(self.victim_ranks)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Verdict":
+        d = dict(d)
+        d["victim_ranks"] = tuple(d.get("victim_ranks", ()))
+        return cls(**d)  # type: ignore[arg-type]
+
 
 def classify_functions(functions: Sequence[str],
                        rules: Optional[Sequence[SOPRule]] = None

@@ -1,0 +1,696 @@
+"""Queryable diagnosis plane: SLOs, time-travel queries, and a fleet
+audit API over snapshot-isolated read state.
+
+The service used to be write-only (ingest -> process -> alerts).  What
+cuts median diagnosis from days to minutes in production is that
+engineers *query* the system: "show rank 371's blame timeline for
+iterations 1200-1400", "which groups breached their iteration-time SLO
+this hour", "walk every breach to its attributed root".  This module is
+that read product, shared by ``CentralService`` and ``ShardedService``:
+
+  * :class:`FleetSnapshot` — the epoch/snapshot read state.  Every
+    ``process()`` cycle publishes one immutable snapshot of the retained
+    query history (per-(group, rank) iteration-time and blame-timeline
+    columns), the diagnostic event log, the per-group blame-root
+    pointers from cascade localization, and per-group waterline/blame
+    summaries.  Readers grab the current snapshot with one atomic
+    reference read and serve the whole response from it — thousands of
+    concurrent queries never take a lock, never block the streaming
+    ingest hot path, and can never observe a half-updated cycle.
+  * :class:`SLO` — first-class objectives over iteration time, exposed
+    compute fraction and diagnosis latency, with wildcard ``(group,
+    rank)`` target expansion (an ``SLO(group_id="*")`` audits every
+    live group, AppSignals ``audit_slos`` style).
+  * :class:`DiagnosisQueryAPI` — the query mixin both services inherit:
+    ``list_groups`` / ``query_metrics`` / ``query_blame_timeline`` /
+    ``search_events`` / ``check_slos`` / ``audit`` (+ the string-keyed
+    ``query()`` dispatcher).  ``audit()`` walks each SLO breach through
+    the attribution layer's blame-root pointers to the root ``(node,
+    rank)`` with the root's verdict and blame timeline attached.
+  * :class:`DiagnosisService` — the one service protocol (ingest,
+    process, query, audit, snapshot, ...) that ``CentralService`` and
+    ``ShardedService`` both implement, so call sites and tests stop
+    duplicating per-path variants.
+
+Consistency model (see docs/QUERY_API.md):
+
+  * Epochs are integers starting at 0 (the empty snapshot published at
+    construction) and increase by exactly 1 per ``process()`` cycle.
+  * A snapshot is immutable once published.  The retained history rings
+    back it with copy-on-trim semantics: appends past a captured length
+    are invisible to holders of the view, and trimming replaces the
+    underlying column lists instead of mutating them — so a snapshot
+    stays fully readable even after ``evict_group()`` drops the live
+    state it was built from (strings are resolved at publish time; no
+    interned-table ids escape into a snapshot).
+  * Every query response carries the single epoch it was served from.
+
+Ordering contract: ``DiagnosticEvent.detected_at`` stamps are strictly
+increasing in emission order within a service (``CentralService.
+_sequence``), and ``search_events`` returns events in ascending
+``detected_at`` — so merged multi-shard responses sort back into
+exactly the single-service order (round-trip pinned in
+tests/test_query.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import (TYPE_CHECKING, Dict, Iterator, List, Mapping, Optional,
+                    Protocol, Sequence, Tuple, runtime_checkable)
+
+if TYPE_CHECKING:                              # pragma: no cover
+    from repro.core.service import DiagnosticEvent
+
+__all__ = [
+    "SLO_METRICS", "RankHistory", "HistoryView", "GroupView", "BlameRoot",
+    "EventLog", "FleetSnapshot", "SLO", "SLOBreach", "AuditFinding",
+    "expand_slo_targets", "blame_roots_from", "DiagnosisQueryAPI",
+    "DiagnosisService",
+]
+
+#: metric name -> True when lower values are better (breach on value >
+#: threshold); False when higher is better (breach on value < threshold)
+SLO_METRICS: Dict[str, bool] = {
+    "iter_time": True,
+    "exposed_compute_fraction": False,
+    "diagnosis_latency": True,
+}
+
+
+# ---------------------------------------------------------------------------
+# retained history: columnar ring with snapshot-stable views
+# ---------------------------------------------------------------------------
+
+
+class RankHistory:
+    """Retained per-(group, rank) history columns with copy-on-trim.
+
+    Appends go to plain Python column lists; a published view captures
+    the list *objects* plus the lengths at publish time.  Because lists
+    only ever grow in place — trimming past ``2 * retain`` entries
+    rebinds ``self.it``/... to fresh sliced lists instead of mutating —
+    a captured ``(list, n)`` pair is immutable for its holder, at zero
+    publication cost.  Iteration-time columns are appended per ingest;
+    blame-timeline columns are appended once per ``process()`` cycle
+    (the analysis cadence — decomposing a timeline needs every rank's
+    aligned profile, which only the cycle sees together)."""
+
+    __slots__ = ("retain", "it", "t", "tl_it", "tl")
+
+    def __init__(self, retain: int = 1024):
+        self.retain = retain
+        self.it: List[int] = []            # iteration index per ingest
+        self.t: List[float] = []           # iteration time per ingest
+        self.tl_it: List[int] = []         # iteration index per timeline
+        # (iter_time, compute, host, blocked_wait, transfer, residual)
+        self.tl: List[Tuple[float, ...]] = []
+
+    def append(self, iteration: int, iter_time: float) -> None:
+        self.it.append(iteration)
+        self.t.append(iter_time)
+        if len(self.it) > 2 * self.retain:
+            self.it = self.it[-self.retain:]
+            self.t = self.t[-self.retain:]
+
+    def append_timeline(self, iteration: int,
+                        row: Tuple[float, ...]) -> None:
+        if self.tl_it and self.tl_it[-1] >= iteration:
+            return                          # one row per iteration
+        self.tl_it.append(iteration)
+        self.tl.append(row)
+        if len(self.tl_it) > 2 * self.retain:
+            self.tl_it = self.tl_it[-self.retain:]
+            self.tl = self.tl[-self.retain:]
+
+    def view(self) -> "HistoryView":
+        return HistoryView(self.it, self.t, len(self.it),
+                           self.tl_it, self.tl, len(self.tl_it))
+
+
+@dataclasses.dataclass(frozen=True)
+class HistoryView:
+    """Immutable window onto one rank's retained columns: the column
+    list objects as of publish plus the published lengths.  Appends past
+    ``n_it``/``n_tl`` (and trims, which rebind new lists) never show."""
+    it: Sequence[int]
+    t: Sequence[float]
+    n_it: int
+    tl_it: Sequence[int]
+    tl: Sequence[Tuple[float, ...]]
+    n_tl: int
+
+    def iter_times(self, start: Optional[int] = None,
+                   end: Optional[int] = None
+                   ) -> List[Tuple[int, float]]:
+        """(iteration, iter_time) rows with iteration in [start, end]."""
+        return [(self.it[i], self.t[i]) for i in range(self.n_it)
+                if (start is None or self.it[i] >= start)
+                and (end is None or self.it[i] <= end)]
+
+    def timelines(self, start: Optional[int] = None,
+                  end: Optional[int] = None
+                  ) -> List[Tuple[int, Tuple[float, ...]]]:
+        """(iteration, component row) with iteration in [start, end]."""
+        return [(self.tl_it[i], self.tl[i]) for i in range(self.n_tl)
+                if (start is None or self.tl_it[i] >= start)
+                and (end is None or self.tl_it[i] <= end)]
+
+    def recent_mean_time(self, window: int) -> Optional[float]:
+        if not self.n_it:
+            return None
+        lo = max(0, self.n_it - window)
+        vals = self.t[lo:self.n_it]
+        return sum(vals) / len(vals)
+
+    def recent_compute_fraction(self, window: int) -> Optional[float]:
+        """Mean exposed-compute fraction over the last ``window``
+        recorded blame timelines (compute / iter_time per row)."""
+        if not self.n_tl:
+            return None
+        lo = max(0, self.n_tl - window)
+        fr = [row[1] / row[0] for row in self.tl[lo:self.n_tl] if row[0] > 0]
+        return sum(fr) / len(fr) if fr else None
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupView:
+    """One group's publish-time summary.  ``waterline_top`` is resolved
+    to function *names* at publish (never interned ids), ``blame`` is
+    the group's last windowed blame summary (``GroupBlame.as_dict``)."""
+    group_id: str
+    job_id: str
+    ranks: Tuple[int, ...]
+    last_iteration: int
+    waterline_top: Tuple[Tuple[str, float], ...] = ()
+    blame: Optional[Dict[str, object]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BlameRoot:
+    """Where a group's blame localized on the most recent cycle that
+    saw a cascade: the attribution layer's root pointer, retained so
+    ``audit()`` can walk an SLO breach to its root (node, rank) without
+    re-running localization.  ``kind`` is "root" for the root group's
+    self-pointer, "export" for a victim group pointing elsewhere."""
+    group_id: str
+    root_group: str
+    root_rank: int
+    chain: Tuple[str, ...]
+    kind: str
+    via_rank: Optional[int] = None
+    wait: float = 0.0
+    epoch: int = -1
+
+
+class EventLog(Sequence):
+    """Snapshot view over the service's append-only event list: the
+    list object plus the length at publish.  Later appends are past
+    ``_n`` and therefore invisible."""
+
+    __slots__ = ("_items", "_n")
+
+    def __init__(self, items: Sequence, n: Optional[int] = None):
+        self._items = items
+        self._n = len(items) if n is None else n
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._items[j] for j in range(*i.indices(self._n))]
+        if i < 0:
+            i += self._n
+        if not 0 <= i < self._n:
+            raise IndexError(i)
+        return self._items[i]
+
+    def __iter__(self) -> Iterator:
+        for i in range(self._n):
+            yield self._items[i]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSnapshot:
+    """One immutable, epoch-stamped view of the fleet's diagnosable
+    state, published per ``process()`` cycle.  Everything a query can
+    touch lives here; nothing here aliases mutable service state (see
+    module docstring for why the backing columns are append-safe)."""
+    epoch: int
+    published_at: float
+    groups: Tuple[GroupView, ...]
+    history: Mapping[Tuple[str, int], HistoryView]
+    events: Sequence                      # DiagnosticEvents, emission order
+    blame_roots: Mapping[str, BlameRoot]
+    stats: Mapping[str, float]
+
+    def group(self, group_id: str) -> Optional[GroupView]:
+        for g in self.groups:
+            if g.group_id == group_id:
+                return g
+        return None
+
+    def group_ids(self) -> List[str]:
+        return [g.group_id for g in self.groups]
+
+
+# ---------------------------------------------------------------------------
+# SLOs: first-class objectives with wildcard target expansion
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """One service-level objective over a (group, rank) target set.
+
+    ``metric`` is one of :data:`SLO_METRICS`; direction is implied
+    (iteration time and diagnosis latency breach *above* threshold,
+    exposed compute fraction breaches *below*).  ``group_id`` accepts
+    ``fnmatch`` wildcards ("*", "51a0*"); ``rank=None`` targets every
+    rank of each matched group.  Targets expand against the snapshot
+    being audited, so an SLO registered before a group exists starts
+    covering it the cycle it appears.  ``window`` is the trailing
+    evaluation window in recorded rows (ingested iterations for
+    iteration time, analysis cycles for compute fraction, events for
+    diagnosis latency)."""
+    name: str
+    metric: str
+    threshold: float
+    group_id: str = "*"
+    rank: Optional[int] = None
+    window: int = 8
+    description: str = ""
+
+    def __post_init__(self):
+        if self.metric not in SLO_METRICS:
+            raise ValueError(f"unknown SLO metric {self.metric!r}; "
+                             f"choose from {sorted(SLO_METRICS)}")
+        if self.window < 1:
+            raise ValueError("SLO window must be >= 1")
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "SLO":
+        return cls(**d)                    # type: ignore[arg-type]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOBreach:
+    """One expanded target violating its objective at one epoch.
+    ``rank`` is None for group-scoped metrics (diagnosis latency)."""
+    slo: str
+    metric: str
+    group_id: str
+    rank: Optional[int]
+    value: float
+    threshold: float
+    window: int
+    epoch: int
+    detected_at: float
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "SLOBreach":
+        return cls(**d)                    # type: ignore[arg-type]
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFinding:
+    """One SLO breach walked through the attribution layer to its
+    root.  ``root_group``/``root_rank``/``root_node`` name where the
+    blame actually localized (== the breach's own group when no
+    cascade pointer applies); ``root_cause``/``category`` come from the
+    root group's most recent non-export diagnosis, and ``evidence``
+    carries the walk (chain, via-rank, root verdict summary, the
+    root rank's latest blame timeline)."""
+    breach: SLOBreach
+    root_group: str
+    root_rank: Optional[int]
+    root_node: Optional[int]
+    root_cause: Optional[str]
+    category: Optional[str]
+    epoch: int
+    evidence: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["breach"] = self.breach.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "AuditFinding":
+        d = dict(d)
+        d["breach"] = SLOBreach.from_dict(d["breach"])
+        return cls(**d)                    # type: ignore[arg-type]
+
+
+def expand_slo_targets(slo: SLO, snap: FleetSnapshot
+                       ) -> List[Tuple[str, Optional[int]]]:
+    """Expand an SLO's (possibly wildcard) target spec against one
+    snapshot: concrete ``(group_id, rank)`` pairs, rank None for
+    group-scoped metrics.  Expansion order follows the snapshot's
+    group order, then rank order — deterministic across services."""
+    targets: List[Tuple[str, Optional[int]]] = []
+    per_rank = slo.metric != "diagnosis_latency"
+    for gv in snap.groups:
+        if not fnmatch.fnmatchcase(gv.group_id, slo.group_id):
+            continue
+        if not per_rank:
+            targets.append((gv.group_id, None))
+        elif slo.rank is None:
+            targets.extend((gv.group_id, r) for r in gv.ranks)
+        elif slo.rank in gv.ranks:
+            targets.append((gv.group_id, slo.rank))
+    return targets
+
+
+def blame_roots_from(locs, exports, epoch: int) -> Dict[str, BlameRoot]:
+    """Per-group blame-root pointers from one cycle's cascade
+    localization output (``attribution.localize_cascades``): the root
+    group gets a self-pointer, every victim group an export pointer."""
+    out: Dict[str, BlameRoot] = {}
+    for loc in locs:
+        out[loc.root_group] = BlameRoot(
+            group_id=loc.root_group, root_group=loc.root_group,
+            root_rank=loc.root_rank, chain=tuple(loc.chain),
+            kind="root", epoch=epoch)
+    for exp in exports:
+        out[exp.group_id] = BlameRoot(
+            group_id=exp.group_id, root_group=exp.root_group,
+            root_rank=exp.root_rank,
+            chain=(exp.group_id, exp.root_group),
+            kind="export", via_rank=exp.via_rank, wait=exp.wait,
+            epoch=epoch)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the query API both services expose
+# ---------------------------------------------------------------------------
+
+
+class DiagnosisQueryAPI:
+    """Read-side API over :class:`FleetSnapshot` state.  Subclasses
+    provide ``snapshot()`` (and ``chips_per_node``); every method here
+    reads the snapshot reference exactly once and serves the entire
+    response from that one immutable object — which is the whole
+    torn-read story.  Responses are plain dicts stamped with the
+    serving epoch."""
+
+    #: kind -> method for the string-keyed dispatcher
+    _QUERY_KINDS = ("groups", "metrics", "blame_timeline", "events",
+                    "slos", "breaches", "audit")
+
+    def _init_query_api(self) -> None:
+        self._slos: Dict[str, SLO] = {}
+
+    def snapshot(self) -> FleetSnapshot:   # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # -- SLO registry --------------------------------------------------------
+    def register_slo(self, slo: SLO) -> SLO:
+        self._slos[slo.name] = slo
+        return slo
+
+    def remove_slo(self, name: str) -> bool:
+        return self._slos.pop(name, None) is not None
+
+    def list_slos(self) -> Dict[str, object]:
+        snap = self.snapshot()
+        return {"epoch": snap.epoch,
+                "slos": [s.to_dict() for s in self._slos.values()]}
+
+    def _drop_group_slos(self, group_id: str) -> None:
+        """Eviction hook: explicit registrations against a retired
+        group go with it; wildcard SLOs stay (they re-expand against
+        whatever groups the next snapshot holds)."""
+        for name in [n for n, s in self._slos.items()
+                     if s.group_id == group_id]:
+            del self._slos[name]
+
+    # -- queries -------------------------------------------------------------
+    def query(self, kind: str, **params) -> Dict[str, object]:
+        """String-keyed dispatcher over the typed methods — the uniform
+        entry point remote/CLI surfaces marshal through."""
+        if kind == "groups":
+            return self.list_groups()
+        if kind == "metrics":
+            return self.query_metrics(**params)
+        if kind == "blame_timeline":
+            return self.query_blame_timeline(**params)
+        if kind == "events":
+            return self.search_events(**params)
+        if kind == "slos":
+            return self.list_slos()
+        if kind == "breaches":
+            snap = self.snapshot()
+            return {"epoch": snap.epoch,
+                    "breaches": [b.to_dict()
+                                 for b in self.check_slos(snapshot=snap)]}
+        if kind == "audit":
+            snap = self.snapshot()
+            return {"epoch": snap.epoch,
+                    "findings": [f.to_dict()
+                                 for f in self.audit(snapshot=snap)]}
+        raise ValueError(f"unknown query kind {kind!r}; "
+                         f"choose from {self._QUERY_KINDS}")
+
+    def list_groups(self) -> Dict[str, object]:
+        """Every live group with its publish-time summary."""
+        snap = self.snapshot()
+        groups = []
+        for gv in snap.groups:
+            mean_t = None
+            times = [snap.history[(gv.group_id, r)].recent_mean_time(8)
+                     for r in gv.ranks
+                     if (gv.group_id, r) in snap.history]
+            times = [t for t in times if t is not None]
+            if times:
+                mean_t = sum(times) / len(times)
+            groups.append({
+                "epoch": snap.epoch, "group_id": gv.group_id,
+                "job_id": gv.job_id, "ranks": list(gv.ranks),
+                "n_ranks": len(gv.ranks),
+                "last_iteration": gv.last_iteration,
+                "mean_iter_time": mean_t,
+                "waterline_top": [list(x) for x in gv.waterline_top],
+                "blame": gv.blame,
+            })
+        return {"epoch": snap.epoch, "published_at": snap.published_at,
+                "groups": groups}
+
+    def query_metrics(self, group_id: str, rank: Optional[int] = None,
+                      metric: str = "iter_time",
+                      start_iteration: Optional[int] = None,
+                      end_iteration: Optional[int] = None
+                      ) -> Dict[str, object]:
+        """Time-travel series for one group (optionally one rank) over
+        an iteration range.  ``iter_time`` is per ingested iteration;
+        ``exposed_compute_fraction`` per recorded analysis cycle;
+        ``diagnosis_latency`` per diagnostic event (keyed by
+        ``detected_at`` instead of iteration)."""
+        if metric not in SLO_METRICS:
+            raise ValueError(f"unknown metric {metric!r}; "
+                             f"choose from {sorted(SLO_METRICS)}")
+        snap = self.snapshot()
+        gv = snap.group(group_id)
+        series: Dict[int, List[Dict[str, float]]] = {}
+        if metric == "diagnosis_latency":
+            pts = [{"detected_at": e.detected_at,
+                    "value": e.diagnosis_latency_s}
+                   for e in snap.events if e.group_id == group_id
+                   and (rank is None or e.straggler_rank == rank)]
+            return {"epoch": snap.epoch, "group_id": group_id,
+                    "metric": metric, "events": pts}
+        ranks = ([rank] if rank is not None
+                 else list(gv.ranks) if gv is not None else [])
+        for r in ranks:
+            hv = snap.history.get((group_id, r))
+            if hv is None:
+                continue
+            if metric == "iter_time":
+                series[r] = [{"iteration": i, "value": v}
+                             for i, v in hv.iter_times(start_iteration,
+                                                       end_iteration)]
+            else:                          # exposed_compute_fraction
+                series[r] = [
+                    {"iteration": i,
+                     "value": row[1] / row[0] if row[0] > 0 else 0.0}
+                    for i, row in hv.timelines(start_iteration,
+                                               end_iteration)]
+        return {"epoch": snap.epoch, "group_id": group_id,
+                "metric": metric, "series": series}
+
+    def query_blame_timeline(self, group_id: str, rank: int,
+                             start_iteration: Optional[int] = None,
+                             end_iteration: Optional[int] = None
+                             ) -> Dict[str, object]:
+        """One rank's retained per-iteration blame decompositions over
+        an iteration range (recorded at analysis-cycle cadence)."""
+        snap = self.snapshot()
+        hv = snap.history.get((group_id, rank))
+        rows = hv.timelines(start_iteration, end_iteration) if hv else []
+        return {
+            "epoch": snap.epoch, "group_id": group_id, "rank": rank,
+            "timelines": [
+                {"iteration": i, "iter_time": row[0], "compute": row[1],
+                 "host": row[2], "blocked_wait": row[3],
+                 "transfer": row[4], "residual": row[5]}
+                for i, row in rows]}
+
+    def search_events(self, group_id: Optional[str] = None,
+                      category: Optional[str] = None,
+                      root_cause: Optional[str] = None,
+                      rank: Optional[int] = None,
+                      since: Optional[float] = None,
+                      limit: int = 100) -> Dict[str, object]:
+        """Filtered diagnostic events in ascending ``detected_at``
+        order (the emission order — see module ordering contract),
+        keeping the most recent ``limit`` matches."""
+        snap = self.snapshot()
+        out: List[Dict[str, object]] = []
+        for e in snap.events:
+            if group_id is not None and e.group_id != group_id:
+                continue
+            if category is not None and e.category != category:
+                continue
+            if root_cause is not None and e.root_cause != root_cause:
+                continue
+            if rank is not None and e.straggler_rank != rank:
+                continue
+            if since is not None and e.detected_at < since:
+                continue
+            out.append(e.to_dict())
+        return {"epoch": snap.epoch, "events": out[-limit:]}
+
+    # -- SLO evaluation + fleet audit ---------------------------------------
+    def check_slos(self, snapshot: Optional[FleetSnapshot] = None
+                   ) -> List[SLOBreach]:
+        """Evaluate every registered SLO against one snapshot: expand
+        wildcard targets, compute each target's windowed value, emit a
+        breach per violating target."""
+        snap = snapshot if snapshot is not None else self.snapshot()
+        breaches: List[SLOBreach] = []
+        for slo in self._slos.values():
+            lower_better = SLO_METRICS[slo.metric]
+            for g, r in expand_slo_targets(slo, snap):
+                value = self._slo_value(slo, snap, g, r)
+                if value is None:
+                    continue
+                breached = (value > slo.threshold if lower_better
+                            else value < slo.threshold)
+                if breached:
+                    breaches.append(SLOBreach(
+                        slo=slo.name, metric=slo.metric, group_id=g,
+                        rank=r, value=value, threshold=slo.threshold,
+                        window=slo.window, epoch=snap.epoch,
+                        detected_at=snap.published_at))
+        return breaches
+
+    @staticmethod
+    def _slo_value(slo: SLO, snap: FleetSnapshot, g: str,
+                   r: Optional[int]) -> Optional[float]:
+        if slo.metric == "diagnosis_latency":
+            lats = [e.diagnosis_latency_s for e in snap.events
+                    if e.group_id == g]
+            return max(lats[-slo.window:]) if lats else None
+        hv = snap.history.get((g, r))
+        if hv is None:
+            return None
+        if slo.metric == "iter_time":
+            return hv.recent_mean_time(slo.window)
+        return hv.recent_compute_fraction(slo.window)
+
+    def audit(self, snapshot: Optional[FleetSnapshot] = None
+              ) -> List[AuditFinding]:
+        """Fleet audit: every SLO breach walked through the attribution
+        layer to its root ``(node, rank)``.  The walk follows the
+        snapshot's blame-root pointer for the breached group (a victim
+        group's pointer jumps straight to the cascade root), then
+        attaches the root group's most recent non-export diagnosis and
+        the root rank's latest recorded blame timeline as evidence."""
+        from repro.core.attribution import CASCADE_EXPORT_CAUSE
+        snap = snapshot if snapshot is not None else self.snapshot()
+        chips = getattr(self, "chips_per_node", 8)
+        findings: List[AuditFinding] = []
+        for breach in self.check_slos(snapshot=snap):
+            root = snap.blame_roots.get(breach.group_id)
+            if root is not None:
+                rg, rr = root.root_group, root.root_rank
+                chain: Tuple[str, ...] = root.chain
+            else:
+                rg, rr, chain = breach.group_id, None, (breach.group_id,)
+            ev = next(
+                (e for e in reversed(snap.events)
+                 if e.group_id == rg
+                 and e.root_cause != CASCADE_EXPORT_CAUSE), None)
+            if rr is None and ev is not None:
+                rr = (ev.verdict.culprit_rank
+                      if ev.verdict is not None
+                      and ev.verdict.culprit_rank is not None
+                      else ev.straggler_rank)
+            evidence: Dict[str, object] = {"chain": list(chain)}
+            if root is not None and root.kind == "export":
+                evidence["via_rank"] = root.via_rank
+                evidence["observed_wait"] = root.wait
+            if ev is not None:
+                evidence["root_event"] = {
+                    "root_cause": ev.root_cause,
+                    "category": ev.category,
+                    "detected_at": ev.detected_at,
+                    "straggler_rank": ev.straggler_rank,
+                }
+                if ev.verdict is not None:
+                    evidence["root_verdict"] = {
+                        "layer": ev.verdict.layer,
+                        "confidence": ev.verdict.confidence,
+                        "action": ev.verdict.action,
+                    }
+            if rr is not None:
+                hv = snap.history.get((rg, rr))
+                if hv is not None and hv.n_tl:
+                    i, row = hv.timelines()[-1]
+                    evidence["root_blame_timeline"] = {
+                        "iteration": i, "iter_time": row[0],
+                        "compute": row[1], "host": row[2],
+                        "blocked_wait": row[3], "transfer": row[4],
+                        "residual": row[5]}
+            findings.append(AuditFinding(
+                breach=breach, root_group=rg, root_rank=rr,
+                root_node=(rr // chips if rr is not None else None),
+                root_cause=ev.root_cause if ev is not None else None,
+                category=ev.category if ev is not None else None,
+                epoch=snap.epoch, evidence=evidence))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# the unified service protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class DiagnosisService(Protocol):
+    """The one protocol every diagnosis service implements —
+    ``CentralService`` and ``ShardedService`` are interchangeable
+    behind it, which is what lets the scenario matrix, the examples and
+    the equivalence tests drive both through identical call sites."""
+
+    def ingest(self, profile, job_id: str = ...) -> None: ...
+    def ingest_batch(self, batch) -> int: ...
+    def ingest_encoded(self, data: bytes) -> int: ...
+    def ingest_log_line(self, job_id: str, line: str): ...
+    def process(self) -> List["DiagnosticEvent"]: ...
+    def evict_group(self, group_id: str) -> None: ...
+    def stats(self) -> Dict[str, float]: ...
+    def event_counts(self) -> Dict[str, int]: ...
+    def snapshot(self) -> FleetSnapshot: ...
+    def query(self, kind: str, **params) -> Dict[str, object]: ...
+    def register_slo(self, slo: SLO) -> SLO: ...
+    def check_slos(self) -> List[SLOBreach]: ...
+    def audit(self) -> List[AuditFinding]: ...

@@ -61,6 +61,9 @@ from repro.core.diffdiag import Verdict, diagnose
 from repro.core.events import (CollectiveEvent, IterationProfile,
                                ProfileBatch)
 from repro.core.flamegraph import FlameGraph
+from repro.core.query import (BlameRoot, DiagnosisQueryAPI, EventLog,
+                              FleetSnapshot, GroupView, RankHistory,
+                              blame_roots_from)
 from repro.core.scenarios import (LEGACY_CATEGORIES, ScenarioRegistry,
                                   default_registry)
 from repro.core.straggler import StragglerAlert, StragglerDetector
@@ -98,8 +101,33 @@ class DiagnosticEvent:
     diagnosis_latency_s: float
     evidence: Dict[str, object] = dataclasses.field(default_factory=dict)
 
+    def to_dict(self) -> Dict[str, object]:
+        """Stable wire form — the one result envelope query responses
+        use from either service.  Field names match the dataclass;
+        ``verdict`` nests its own ``to_dict``.  ``detected_at`` stamps
+        are strictly increasing in emission order within a service
+        (see ``_sequence``), so serialized event streams sort back
+        into exactly the emission order."""
+        return {
+            "job_id": self.job_id, "group_id": self.group_id,
+            "category": self.category, "root_cause": self.root_cause,
+            "verdict": (self.verdict.to_dict()
+                        if self.verdict is not None else None),
+            "straggler_rank": self.straggler_rank,
+            "detected_at": self.detected_at,
+            "diagnosis_latency_s": self.diagnosis_latency_s,
+            "evidence": self.evidence,
+        }
 
-class CentralService:
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "DiagnosticEvent":
+        d = dict(d)
+        v = d.get("verdict")
+        d["verdict"] = Verdict.from_dict(v) if v is not None else None
+        return cls(**d)  # type: ignore[arg-type]
+
+
+class CentralService(DiagnosisQueryAPI):
     def __init__(self, window: int = 100, k: float = 2.0,
                  baseline_delta: float = 0.005,
                  iter_regression: float = 0.05,
@@ -110,7 +138,8 @@ class CentralService:
                  registry: Optional[ScenarioRegistry] = None,
                  attribution: bool = True,
                  min_root_lateness: float = 1e-4,
-                 chips_per_node: int = 8):
+                 chips_per_node: int = 8,
+                 retain: int = 512):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
         # rule-set immutability after service start: pin a frozen snapshot
@@ -182,6 +211,28 @@ class CentralService:
         # most recent cycle (bounded); root diagnoses attach their
         # group's edges as evidence
         self.last_edges: List = []
+        # most recent cycle's windowed blame summaries, by group id
+        # (publish-time GroupView input); refreshed by collect_cycle
+        self.last_summaries: Dict[str, object] = {}
+        # ---- queryable diagnosis plane (repro.core.query) ----
+        # retained per-(group, rank) history columns backing time-travel
+        # queries; bounded by `retain` rows per column via copy-on-trim
+        self.retain = retain
+        self._history: Dict[Tuple[str, int], RankHistory] = {}
+        # persistent per-group blame-root pointers from the most recent
+        # cycle that localized a cascade touching the group
+        self._blame_roots: Dict[str, BlameRoot] = {}
+        # last group iteration whose timelines were recorded (skip
+        # recomputation on idle groups)
+        self._tl_recorded: Dict[str, int] = {}
+        self._init_query_api()
+        # epoch 0: the empty snapshot, published at construction so
+        # readers never see None; process() publishes 1, 2, ...
+        self._epoch = 0
+        self._snapshot = FleetSnapshot(
+            epoch=0, published_at=time.monotonic(), groups=(),
+            history={}, events=EventLog(self.events, 0),
+            blame_roots={}, stats={})
 
     # -- ingestion -----------------------------------------------------------
     def _adopt(self, profile: ColumnarProfile) -> ColumnarProfile:
@@ -198,6 +249,11 @@ class CentralService:
         self._group_ranks[g].add(profile.rank)
         self._last_ingest[g] = time.monotonic()
         self._group_iter_time[g].append(profile.iter_time)
+        hist = self._history.get((g, profile.rank))
+        if hist is None:
+            hist = self._history[(g, profile.rank)] = \
+                RankHistory(self.retain)
+        hist.append(profile.iteration, profile.iter_time)
         if isinstance(profile, ColumnarProfile):
             if profile.tables is not self.tables:
                 profile = self._adopt(profile)
@@ -274,10 +330,18 @@ class CentralService:
         for r in self._group_ranks.pop(g, ()):
             self._latest.pop((g, r), None)
             self._rank_fg.pop((g, r), None)
+            self._history.pop((g, r), None)
         self.waterlines.pop(g, None)
         self._group_iter_time.pop(g, None)
         self._job_by_group.pop(g, None)
         self._last_ingest.pop(g, None)
+        # the queryable plane forgets the group too: retained history
+        # (above), blame-root pointers and exact-match SLO registrations
+        # all go; already-published snapshots keep serving their own
+        # captured views (copy-on-trim columns never dangle)
+        self._blame_roots.pop(g, None)
+        self._tl_recorded.pop(g, None)
+        self._drop_group_slos(g)
         self.detector.forget_group(g)
         self.groups_evicted += 1
 
@@ -318,6 +382,7 @@ class CentralService:
         alerts = [a for a in self.detector.check_windows(summaries)
                   if a.lateness >= self.min_root_lateness][:8]
         self.last_edges = self.detector.drain_edges()
+        self.last_summaries = summaries
         return alerts, summaries
 
     def _temporal_cycle(self, flagged, t0: float) -> List[DiagnosticEvent]:
@@ -347,6 +412,10 @@ class CentralService:
             # 1. alerts -> cascade localization -> diagnose roots only
             alerts, summaries = self.collect_cycle(t0)
             locs, exports = localize_cascades(alerts, summaries)
+            # retain this cycle's blame-root pointers for audit() walks
+            # (stamped with the epoch the coming publish will carry)
+            self._blame_roots.update(
+                blame_roots_from(locs, exports, self._epoch + 1))
             for loc in locs:
                 flagged.add(loc.root_group)
                 flagged.update(loc.affected_groups)
@@ -371,6 +440,12 @@ class CentralService:
         self._sequence(new_events, t0)
         for ev in new_events:
             self._record(ev)
+        # 3. read-side publication: record this cycle's blame timelines
+        # into the retained history, then publish the epoch snapshot
+        # (after _record, so the cycle's own events are queryable at
+        # the epoch they were diagnosed)
+        self._record_timelines()
+        self._publish_snapshot(t0)
         return new_events
 
     # -- straggler path ---------------------------------------------------------
@@ -431,21 +506,22 @@ class CentralService:
                             t0: float) -> Optional[DiagnosticEvent]:
         return self._diagnose_pair(alert.group_id, alert.rank, alert, t0)
 
-    def _rank_timeline(self, g: str, rank: int):
-        """Blame timeline of one rank's latest iteration, computed over
-        the whole group's latest profiles (instance starts need every
-        rank's aligned entry).  None when representations are mixed or
-        the rank's profile lags the group — matching a stale iteration
-        against current peers would read as a full-iteration wait."""
+    def _group_timelines(self, g: str):
+        """Blame timelines of one group's latest iteration, computed
+        over every rank's latest profile (instance starts need the whole
+        group's aligned entries).  Empty when representations are mixed
+        or fewer than two ranks share the latest iteration — matching a
+        stale iteration against current peers would read as a
+        full-iteration wait."""
         ranks = sorted(self._group_ranks.get(g, ()))
         profiles = [p for p in (self._latest.get((g, r)) for r in ranks)
                     if p is not None]
         if len(profiles) < 2:
-            return None
+            return []
         latest_iter = max(p.iteration for p in profiles)
         profiles = [p for p in profiles if p.iteration == latest_iter]
-        if len(profiles) < 2 or all(p.rank != rank for p in profiles):
-            return None
+        if len(profiles) < 2:
+            return []
         skew = self.detector.aligner.skew
         if all(isinstance(p, ColumnarProfile) for p in profiles):
             tls, _ = iteration_timelines(profiles, skew=skew,
@@ -453,8 +529,14 @@ class CentralService:
         elif all(isinstance(p, IterationProfile) for p in profiles):
             tls, _ = iteration_timelines_naive(profiles, skew=skew)
         else:
-            return None
-        return next((t for t in tls if t.rank == rank), None)
+            return []
+        return tls
+
+    def _rank_timeline(self, g: str, rank: int):
+        """Blame timeline of one rank's latest iteration (None when the
+        group can't produce one — see ``_group_timelines``)."""
+        return next((t for t in self._group_timelines(g)
+                     if t.rank == rank), None)
 
     def _diagnose_root(self, loc: Localization,
                        t0: float) -> Optional[DiagnosticEvent]:
@@ -581,6 +663,70 @@ class CentralService:
             out = out.merge(f)
         return out
 
+    # -- queryable diagnosis plane (publication side) ------------------------------
+    def _record_timelines(self) -> None:
+        """Append one blame-timeline row per (group, rank) to the
+        retained query history — once per analysis cycle, one vectorized
+        ``iteration_timelines`` pass per group that advanced since its
+        last recording (idle groups cost a dict lookup)."""
+        for g in self._group_ranks:
+            latest = max(
+                (p.iteration for p in
+                 (self._latest.get((g, r)) for r in self._group_ranks[g])
+                 if p is not None), default=None)
+            if latest is None or self._tl_recorded.get(g) == latest:
+                continue
+            tls = self._group_timelines(g)
+            if not tls:
+                continue
+            self._tl_recorded[g] = latest
+            for tl in tls:
+                hist = self._history.get((g, tl.rank))
+                if hist is None:
+                    hist = self._history[(g, tl.rank)] = \
+                        RankHistory(self.retain)
+                hist.append_timeline(
+                    tl.iteration,
+                    (tl.iter_time, tl.compute, tl.host, tl.blocked_wait,
+                     tl.transfer, tl.residual))
+
+    def _publish_snapshot(self, t0: float) -> None:
+        """Publish one immutable epoch-stamped ``FleetSnapshot`` of the
+        retained query state.  O(live groups + ranks) reference
+        captures — history columns are never copied (copy-on-trim keeps
+        captured views valid), and everything a view resolves (function
+        names, summaries) is materialized here so nothing in a snapshot
+        aliases mutable or interned service state."""
+        self._epoch += 1
+        hist = {key: h.view() for key, h in self._history.items()}
+        summaries = self.last_summaries
+        groups = []
+        for g in sorted(self._group_ranks):
+            ranks = tuple(sorted(self._group_ranks[g]))
+            last_it = -1
+            for r in ranks:
+                v = hist.get((g, r))
+                if v is not None and v.n_it:
+                    last_it = max(last_it, v.it[v.n_it - 1])
+            wl = self.waterlines.get(g)
+            s = summaries.get(g)
+            groups.append(GroupView(
+                group_id=g,
+                job_id=self._job_by_group.get(g, "job-0"),
+                ranks=ranks, last_iteration=last_it,
+                waterline_top=(tuple(wl.top_functions(5))
+                               if wl is not None else ()),
+                blame=s.as_dict() if s is not None else None))
+        self._snapshot = FleetSnapshot(
+            epoch=self._epoch, published_at=t0, groups=tuple(groups),
+            history=hist, events=EventLog(self.events),
+            blame_roots=dict(self._blame_roots), stats=self.stats())
+
+    def snapshot(self) -> FleetSnapshot:
+        """Current published snapshot — one GIL-atomic attribute read;
+        readers on other threads never block ingest or process()."""
+        return self._snapshot
+
     # -- reporting -----------------------------------------------------------------
     def event_counts(self) -> Dict[str, int]:
         return dict(self._counts)
@@ -598,4 +744,5 @@ class CentralService:
             "events": len(self.events),
             "baselines": len(self.baselines),
             "groups_evicted": self.groups_evicted,
+            "epoch": self._epoch,
         }

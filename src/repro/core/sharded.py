@@ -30,6 +30,8 @@ from typing import Dict, List, Optional
 
 from repro.core.attribution import localize_cascades
 from repro.core.events import IterationProfile, ProfileBatch
+from repro.core.query import (DiagnosisQueryAPI, FleetSnapshot,
+                              blame_roots_from)
 from repro.core.service import CentralService, DiagnosticEvent
 from repro.core.trace import decode_batch
 
@@ -42,7 +44,7 @@ def shard_of(group_id: str, n_shards: int) -> int:
     return zlib.crc32(group_id.encode()) % n_shards
 
 
-class ShardedService:
+class ShardedService(DiagnosisQueryAPI):
     """Drop-in ``CentralService`` facade over N group-partitioned shards."""
 
     def __init__(self, n_shards: int = 4, parallel: bool = False, **kwargs):
@@ -71,6 +73,18 @@ class ShardedService:
             s._tl_builder = self.shards[0]._tl_builder
             s._remaps = self.shards[0]._remaps
         self._log_rr = 0
+        # ---- queryable diagnosis plane (repro.core.query) ----
+        # the facade holds its OWN SLO registry and epoch counter and
+        # publishes a merged fleet snapshot per process() cycle, so the
+        # query/audit surface is identical to CentralService's (same
+        # epochs for the same call sequence — both start at the empty
+        # epoch-0 snapshot and advance by one per cycle)
+        self._init_query_api()
+        self._epoch = 0
+        self._known_groups: set = set()
+        self._snapshot = FleetSnapshot(
+            epoch=0, published_at=time.monotonic(), groups=(),
+            history={}, events=(), blame_roots={}, stats={})
 
     # -- routing -------------------------------------------------------------
     def shard_for(self, group_id: str) -> CentralService:
@@ -115,7 +129,15 @@ class ShardedService:
         return shard.ingest_log_line(job_id, line)
 
     def evict_group(self, group_id: str) -> None:
+        # facade-level exact-match SLO registrations retire with the
+        # group (the owning shard drops its own state + registrations)
+        self._drop_group_slos(group_id)
+        self._known_groups.discard(group_id)
         self.shard_for(group_id).evict_group(group_id)
+
+    @property
+    def chips_per_node(self) -> int:
+        return self.shards[0].chips_per_node
 
     # -- analysis ------------------------------------------------------------
     def process(self) -> List[DiagnosticEvent]:
@@ -131,6 +153,7 @@ class ShardedService:
         its group.  With ``attribution=False`` shards process
         independently as before (the pre-attribution pairwise path)."""
         if not self.shards[0].attribution:
+            t0 = time.monotonic()
             if self.parallel and self.n_shards > 1:
                 with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
                     results = list(ex.map(lambda s: s.process(),
@@ -141,6 +164,9 @@ class ShardedService:
             for evs in results:
                 merged.extend(evs)
             merged.sort(key=lambda e: e.detected_at)
+            # each shard's process() already published its own snapshot;
+            # merge them into the facade's fleet view
+            self._publish_merged(t0)
             return merged
 
         t0 = time.monotonic()
@@ -156,6 +182,12 @@ class ShardedService:
         for _, shard_summaries in collected:
             summaries.update(shard_summaries)
         locs, exports = localize_cascades(alerts, summaries)
+        # distribute this cycle's blame-root pointers to the shards
+        # owning each group, so per-shard and merged snapshots carry the
+        # same audit() walk state a single service would
+        for g, br in blame_roots_from(locs, exports,
+                                      self._epoch + 1).items():
+            self.shard_for(g)._blame_roots[g] = br
         emitted = []                 # (owning shard, event) in order
         flagged = set()
         for loc in locs:
@@ -176,7 +208,50 @@ class ShardedService:
         CentralService._sequence(events, t0)
         for shard, ev in emitted:
             shard._record(ev)
+        # read-side publication: shard-local snapshots first (this path
+        # bypasses shard.process(), so the facade drives them), then the
+        # merged fleet snapshot
+        for s in self.shards:
+            s._record_timelines()
+            s._publish_snapshot(t0)
+        self._publish_merged(t0)
         return events
+
+    # -- queryable diagnosis plane (merged publication) ----------------------
+    def _publish_merged(self, t0: float) -> None:
+        """Merge the shards' just-published snapshots into one facade
+        ``FleetSnapshot``.  Groups partition cleanly across shards, so
+        the merge is a union: group views re-sorted into the global
+        group-id order, history/blame-root maps unioned, events merged
+        by ``detected_at`` (strictly-increasing emission stamps make
+        that exactly the single-service order)."""
+        self._epoch += 1
+        groups = []
+        hist: Dict = {}
+        roots: Dict = {}
+        events: List[DiagnosticEvent] = []
+        for s in self.shards:
+            snap = s._snapshot
+            groups.extend(snap.groups)
+            hist.update(snap.history)
+            roots.update(snap.blame_roots)
+            events.extend(snap.events)
+        groups.sort(key=lambda gv: gv.group_id)
+        events.sort(key=lambda e: e.detected_at)
+        # facade-level exact-match SLOs follow TTL evictions that
+        # happened inside the shards' collection half
+        live = {gv.group_id for gv in groups}
+        for g in self._known_groups - live:
+            self._drop_group_slos(g)
+        self._known_groups = live
+        self._snapshot = FleetSnapshot(
+            epoch=self._epoch, published_at=t0, groups=tuple(groups),
+            history=hist, events=tuple(events), blame_roots=roots,
+            stats=self.stats())
+
+    def snapshot(self) -> FleetSnapshot:
+        """Current merged snapshot — one GIL-atomic attribute read."""
+        return self._snapshot
 
     # -- merged reporting view ----------------------------------------------
     @property
@@ -204,4 +279,7 @@ class ShardedService:
             for k, v in s.stats().items():
                 agg[k] += v
         agg["shards"] = self.n_shards
+        # shard epochs advance in lockstep with the facade's — report
+        # the facade epoch, not the meaningless per-shard sum
+        agg["epoch"] = self._epoch
         return dict(agg)

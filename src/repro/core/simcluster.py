@@ -827,6 +827,22 @@ def expect_cascade_export(victim_index: int, root_index: int):
     return _validate
 
 
+def fleet_slos(cluster, margin: float = 0.2, window: int = 8,
+               prefix: str = "iter-time") -> List:
+    """Per-group iteration-time SLOs for a simulated fleet: each group's
+    threshold is its base iteration time plus ``margin`` headroom, so a
+    healthy fleet is breach-free and an injected slowdown breaches
+    exactly the affected groups.  Register the returned ``SLO`` objects
+    on any ``DiagnosisService`` before calling ``audit()``."""
+    from repro.core.query import SLO
+    groups = (cluster.groups if isinstance(cluster, MultiGroupSimCluster)
+              else [cluster])
+    return [SLO(name=f"{prefix}/{g.group_id}", metric="iter_time",
+                threshold=g.base_iter_time * (1.0 + margin),
+                group_id=g.group_id, window=window)
+            for g in groups]
+
+
 # ---------------------------------------------------------------------------
 # scenario matrix: every registered scenario x every service path
 # ---------------------------------------------------------------------------

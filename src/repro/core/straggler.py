@@ -76,6 +76,17 @@ class GroupBlame:
     last_start: float
     instances: int
 
+    def as_dict(self) -> Dict[str, object]:
+        """Publish-time summary form carried by query snapshots —
+        plain scalars and dicts only, nothing aliasing detector state."""
+        return {
+            "group_id": self.group_id, "ranks": list(self.ranks),
+            "culprit_rank": self.culprit_rank,
+            "culprit_lateness": self.culprit_lateness,
+            "lateness": dict(self.lateness), "wait": dict(self.wait),
+            "peer_wait": self.peer_wait, "instances": self.instances,
+        }
+
 
 class ClockAligner:
     """Estimate per-rank clock skew from barrier exit residuals.

@@ -447,6 +447,12 @@ class ColumnarProfile:
         ms, me = merged_intervals(self.coll_entry, self.coll_exit)
         return total - float(interval_overlap(ks, ke, ms, me).sum())
 
+    def exposed_compute_fraction(self) -> float:
+        """Exposed kernel time as a fraction of the iteration — the
+        quantity exposed-compute SLOs audit (repro.core.query)."""
+        return (self.exposed_kernel_time() / self.iter_time
+                if self.iter_time > 0 else 0.0)
+
     # -- materialization back to the boundary schema ------------------------
     def cpu_samples(self) -> List[StackSample]:
         g = self.tables.strings.get

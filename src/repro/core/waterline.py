@@ -160,3 +160,24 @@ class CPUWaterline:
 
     def flagged_ranks(self) -> List[int]:
         return sorted({a.rank for a in self.check()})
+
+    def top_functions(self, n: int = 5) -> List[Tuple[str, float]]:
+        """Top-``n`` functions by group-mean windowed CPU fraction,
+        names resolved from the shared string table — the publish-time
+        summary the query snapshot carries (plain strings only; no
+        interned ids escape, so a held snapshot survives eviction)."""
+        ranks = list(self._history)
+        width = len(self._fns)
+        if not ranks or width == 0:
+            return []
+        m = np.zeros(width)
+        for r in ranks:
+            acc = self._acc.get(r)
+            if acc is not None:
+                k = min(acc.shape[0], width)
+                m[:k] += acc[:k] / max(len(self._history[r]), 1)
+        m /= len(ranks)
+        order = np.argsort(-m)[:n]
+        get = self.names.get
+        return [(get(self._fns[int(j)]), float(m[int(j)]))
+                for j in order if m[int(j)] > 0.0]

@@ -1,0 +1,421 @@
+"""Queryable diagnosis plane: the DiagnosisService protocol, the one
+result envelope (to_dict/from_dict round-trips + the detected_at
+ordering contract), SLO wildcard expansion, time-travel queries over
+snapshot-isolated read state, the eviction regression (a held snapshot
+stays readable, retained history and SLO registrations go), and the
+fleet audit() walk — identical from CentralService and ShardedService
+on a cascade fleet."""
+import pytest
+
+from repro.core import simcluster as sc
+from repro.core.attribution import BlameTimeline
+from repro.core.diffdiag import Verdict
+from repro.core.query import (SLO, AuditFinding, DiagnosisService,
+                              FleetSnapshot, SLOBreach, expand_slo_targets)
+from repro.core.service import CentralService, DiagnosticEvent
+from repro.core.sharded import ShardedService
+
+LAYOUT = [[0, 1, 2, 3, 4, 5, 6, 7], [7, 8, 9, 10, 11, 12, 13, 14]]
+
+
+def _drive(svc, *, seed=3, margin=0.05, samples=120):
+    """Healthy cascade fleet, register per-group iteration-time SLOs,
+    then inject a root fault in group 0 that cascades into group 1."""
+    cl = sc.cascade_fleet(LAYOUT, links=((0, 1),), seed=seed,
+                          samples_per_iter=samples)
+    for slo in sc.fleet_slos(cl, margin=margin):
+        svc.register_slo(slo)
+    cl.run(svc, 30)
+    cl.add_fleet_fault(sc.thermal_throttle(rank=2, start=30, factor=1.5))
+    cl.run(svc, 30)
+    return cl
+
+
+@pytest.fixture(scope="module")
+def driven():
+    central = CentralService()
+    cl = _drive(central)
+    sharded = ShardedService(n_shards=3)
+    _drive(sharded)
+    return cl, central, sharded
+
+
+# ---------------------------------------------------------------------------
+# unified service protocol
+# ---------------------------------------------------------------------------
+
+
+def test_both_services_implement_protocol():
+    assert isinstance(CentralService(), DiagnosisService)
+    assert isinstance(ShardedService(n_shards=2), DiagnosisService)
+
+
+def test_epoch_starts_at_zero_and_advances_per_cycle():
+    for svc in (CentralService(), ShardedService(n_shards=2)):
+        assert svc.snapshot().epoch == 0
+        assert svc.snapshot().groups == ()
+        svc.process()
+        svc.process()
+        assert svc.snapshot().epoch == 2
+        assert svc.stats()["epoch"] == 2
+
+
+def test_query_dispatcher_covers_every_kind(driven):
+    _cl, central, _sharded = driven
+    for kind in ("groups", "slos", "breaches", "audit"):
+        resp = central.query(kind)
+        assert resp["epoch"] == central.snapshot().epoch
+    g = central.snapshot().group_ids()[0]
+    assert central.query("metrics", group_id=g)["epoch"] >= 1
+    assert central.query("blame_timeline", group_id=g, rank=0)["epoch"] >= 1
+    assert central.query("events")["epoch"] >= 1
+    with pytest.raises(ValueError):
+        central.query("nope")
+
+
+# ---------------------------------------------------------------------------
+# one result envelope
+# ---------------------------------------------------------------------------
+
+
+def test_event_envelope_round_trips(driven):
+    _cl, central, _sharded = driven
+    assert central.events, "fixture fleet must have diagnosed something"
+    for ev in central.events:
+        d = ev.to_dict()
+        back = DiagnosticEvent.from_dict(d)
+        assert back == ev
+        if ev.verdict is not None:
+            assert Verdict.from_dict(d["verdict"]) == ev.verdict
+
+
+def test_detected_at_ordering_contract(driven):
+    """Stamps are strictly increasing in emission order, so serialized
+    streams sort back into exactly the emission order."""
+    _cl, central, sharded = driven
+    for svc in (central, sharded):
+        stamps = [e.detected_at for e in svc.events]
+        assert stamps == sorted(stamps)
+        assert len(set(stamps)) == len(stamps)
+
+
+def test_breach_and_finding_envelopes_round_trip(driven):
+    _cl, central, _sharded = driven
+    breaches = central.check_slos()
+    findings = central.audit()
+    assert breaches and findings
+    for b in breaches:
+        assert SLOBreach.from_dict(b.to_dict()) == b
+    for f in findings:
+        assert AuditFinding.from_dict(f.to_dict()) == f
+    slo = next(iter(central._slos.values()))
+    assert SLO.from_dict(slo.to_dict()) == slo
+
+
+def test_satellite_dict_forms(driven):
+    cl, central, _sharded = driven
+    tl = BlameTimeline.from_dict(
+        {"iter_time": 1.0, "compute": 0.6, "host": 0.1, "blocked_wait": 0.1,
+         "transfer": 0.1, "residual": 0.1}, group_id="g", rank=3,
+        iteration=7)
+    assert (tl.rank, tl.iteration, tl.compute) == (3, 7, 0.6)
+    g = cl.group_ids()[0]
+    blame = central.last_summaries.get(g)
+    if blame is not None:
+        d = blame.as_dict()
+        assert d["group_id"] == g and isinstance(d["lateness"], dict)
+
+
+# ---------------------------------------------------------------------------
+# SLOs: wildcard expansion + evaluation semantics
+# ---------------------------------------------------------------------------
+
+
+def test_wildcard_expansion_against_snapshot(driven):
+    cl, central, _sharded = driven
+    snap = central.snapshot()
+    g0, g1 = cl.group_ids()
+    every = expand_slo_targets(SLO("a", "iter_time", 1.0), snap)
+    assert set(every) == {(g, r) for g, ranks in zip((g0, g1), LAYOUT)
+                          for r in ranks}
+    one_rank = expand_slo_targets(
+        SLO("b", "iter_time", 1.0, group_id=g0, rank=2), snap)
+    assert one_rank == [(g0, 2)]
+    # rank not in the group -> no targets, not a phantom target
+    assert expand_slo_targets(
+        SLO("c", "iter_time", 1.0, group_id=g0, rank=99), snap) == []
+    # group-scoped metric expands to (group, None)
+    lat = expand_slo_targets(SLO("d", "diagnosis_latency", 1.0), snap)
+    assert set(lat) == {(g0, None), (g1, None)}
+    # prefix patterns match fnmatch-style
+    pref = expand_slo_targets(
+        SLO("e", "iter_time", 1.0, group_id=g0[:4] + "*", rank=0), snap)
+    assert pref == [(g0, 0)]
+
+
+def test_unknown_metric_and_window_rejected():
+    with pytest.raises(ValueError):
+        SLO("x", "made_up_metric", 1.0)
+    with pytest.raises(ValueError):
+        SLO("x", "iter_time", 1.0, window=0)
+    svc = CentralService()
+    with pytest.raises(ValueError):
+        svc.query_metrics(group_id="g", metric="made_up_metric")
+
+
+def test_healthy_fleet_is_breach_free():
+    svc = CentralService()
+    cl = sc.cascade_fleet(LAYOUT, links=((0, 1),), seed=5,
+                          samples_per_iter=120)
+    for slo in sc.fleet_slos(cl, margin=0.5):
+        svc.register_slo(slo)
+    cl.run(svc, 20)
+    assert svc.check_slos() == []
+    assert svc.audit() == []
+
+
+def test_exposed_compute_and_latency_slos(driven):
+    _cl, central, _sharded = driven
+    central.register_slo(SLO("compute-floor", "exposed_compute_fraction",
+                             0.99, group_id="*"))
+    central.register_slo(SLO("diag-lat", "diagnosis_latency", 1e-12))
+    try:
+        metrics = {b.metric for b in central.check_slos()}
+        assert "exposed_compute_fraction" in metrics
+        assert "diagnosis_latency" in metrics
+    finally:
+        central.remove_slo("compute-floor")
+        central.remove_slo("diag-lat")
+
+
+def test_exposed_compute_fraction():
+    """The trace satellite: kernel time outside collectives over the
+    iteration — the quantity exposed-compute SLOs audit."""
+    from repro.core.events import (CollectiveEvent, IterationProfile,
+                                   OSSignals)
+    from repro.core.events import KernelEvent
+    from repro.core.trace import TraceTables, profile_to_columnar
+    p = IterationProfile(
+        rank=0, iteration=0, group_id="g", iter_time=0.5,
+        cpu_samples=[],
+        kernel_events=[KernelEvent(0, "a", 0.00, 0.10),
+                       KernelEvent(0, "b", 0.30, 0.20)],
+        collectives=[CollectiveEvent(0, "g", "AllReduce", 0.40, 0.50,
+                                     1024, 0.1)],
+        os_signals=OSSignals(rank=0, timestamp=0.0))
+    cp = profile_to_columnar(p, TraceTables())
+    # kernel b overlaps the collective by 0.1 -> exposed = 0.1 + 0.1
+    assert cp.exposed_compute_fraction() == pytest.approx(0.2 / 0.5)
+
+
+# ---------------------------------------------------------------------------
+# time-travel queries
+# ---------------------------------------------------------------------------
+
+
+def test_query_metrics_iteration_range(driven):
+    cl, central, _sharded = driven
+    g = cl.group_ids()[0]
+    resp = central.query_metrics(group_id=g, rank=2, metric="iter_time",
+                                 start_iteration=40, end_iteration=45)
+    pts = resp["series"][2]
+    assert [p["iteration"] for p in pts] == list(range(40, 46))
+    # faulted window is visibly slower than the healthy baseline
+    healthy = central.query_metrics(group_id=g, rank=2, metric="iter_time",
+                                    start_iteration=10,
+                                    end_iteration=20)["series"][2]
+    assert (sum(p["value"] for p in pts) / len(pts)
+            > 1.2 * sum(p["value"] for p in healthy) / len(healthy))
+
+
+def test_query_blame_timeline_range_and_columns(driven):
+    cl, central, _sharded = driven
+    g = cl.group_ids()[0]
+    resp = central.query_blame_timeline(group_id=g, rank=2,
+                                        start_iteration=30)
+    assert resp["timelines"], "cycles past iteration 30 must be recorded"
+    for row in resp["timelines"]:
+        assert row["iteration"] >= 30
+        parts = (row["compute"] + row["host"] + row["blocked_wait"]
+                 + row["transfer"] + row["residual"])
+        assert parts == pytest.approx(row["iter_time"], rel=1e-6)
+
+
+def test_search_events_filters_and_limit(driven):
+    cl, central, _sharded = driven
+    g = cl.group_ids()[0]
+    resp = central.search_events(group_id=g, limit=3)
+    assert len(resp["events"]) <= 3
+    assert all(e["group_id"] == g for e in resp["events"])
+    stamps = [e["detected_at"] for e in resp["events"]]
+    assert stamps == sorted(stamps)
+    cause = central.events[-1].root_cause
+    by_cause = central.search_events(root_cause=cause)
+    assert all(e["root_cause"] == cause for e in by_cause["events"])
+
+
+def test_list_groups_summary(driven):
+    cl, central, _sharded = driven
+    resp = central.list_groups()
+    assert sorted(g["group_id"] for g in resp["groups"]) \
+        == sorted(cl.group_ids())
+    for g in resp["groups"]:
+        assert g["epoch"] == resp["epoch"]
+        assert g["n_ranks"] == 8 and g["mean_iter_time"] > 0
+        # step() stamps profiles with the pre-increment iteration index
+        assert g["last_iteration"] == cl.iteration - 1
+        # waterline names are resolved strings, never interned ids
+        assert all(isinstance(name, str) and isinstance(frac, float)
+                   for name, frac in g["waterline_top"])
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation + the eviction regression
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_immutable_under_further_ingest():
+    svc = CentralService()
+    cl = sc.SimCluster(n_ranks=4, seed=1, samples_per_iter=80)
+    cl.run(svc, 12, process_every=4)
+    held = svc.snapshot()
+    held_rows = held.history[(cl.group_id, 0)].iter_times()
+    held_events = len(held.events)
+    cl.run(svc, 12, process_every=4)
+    assert svc.snapshot().epoch > held.epoch
+    assert held.history[(cl.group_id, 0)].iter_times() == held_rows
+    assert len(held.events) == held_events
+
+
+def test_copy_on_trim_preserves_held_views():
+    svc = CentralService(retain=8)      # trim after 16 appends
+    cl = sc.SimCluster(n_ranks=2, seed=2, samples_per_iter=40)
+    cl.run(svc, 10, process_every=5)
+    held = svc.snapshot()
+    rows = held.history[(cl.group_id, 0)].iter_times()
+    cl.run(svc, 30, process_every=5)    # forces several trims
+    assert held.history[(cl.group_id, 0)].iter_times() == rows
+    fresh = svc.snapshot().history[(cl.group_id, 0)]
+    assert fresh.n_it <= 16
+
+
+def test_snapshot_survives_eviction_and_state_is_dropped():
+    """The satellite bugfix: eviction drops retained history, blame
+    roots and exact-match SLO registrations — while a snapshot held
+    across the eviction stays fully readable."""
+    svc = CentralService()
+    cl = sc.SimCluster(n_ranks=4, seed=4, samples_per_iter=80)
+    cl.run(svc, 12, process_every=4)
+    g = cl.group_id
+    svc.register_slo(SLO("exact", "iter_time", 1.0, group_id=g))
+    svc.register_slo(SLO("wild", "iter_time", 1.0, group_id="*"))
+    held = svc.snapshot()
+    held_rows = held.history[(g, 0)].iter_times()
+    held_groups = held.group_ids()
+
+    svc.evict_group(g)
+    svc.process()
+
+    # held snapshot: same answers as before the eviction
+    assert held.group_ids() == held_groups
+    assert held.history[(g, 0)].iter_times() == held_rows
+    for name, _frac in held.group(g).waterline_top:
+        assert isinstance(name, str)      # resolved names, never ids
+    # live state: history, blame roots and the exact SLO are gone
+    assert all(key[0] != g for key in svc._history)
+    assert g not in svc._blame_roots
+    assert "exact" not in svc._slos and "wild" in svc._slos
+    fresh = svc.snapshot()
+    assert fresh.group(g) is None
+    assert svc.query_metrics(group_id=g, rank=0)["series"] == {}
+
+
+def test_facade_eviction_drops_facade_slos():
+    svc = ShardedService(n_shards=2)
+    cl = sc.SimCluster(n_ranks=4, seed=4, samples_per_iter=80)
+    cl.run(svc, 8, process_every=4)
+    g = cl.group_id
+    svc.register_slo(SLO("exact", "iter_time", 1.0, group_id=g))
+    svc.register_slo(SLO("wild", "iter_time", 1.0, group_id="*"))
+    held = svc.snapshot()
+    svc.evict_group(g)
+    svc.process()
+    assert "exact" not in svc._slos and "wild" in svc._slos
+    assert svc.snapshot().group(g) is None
+    assert held.group(g) is not None          # held view unaffected
+
+
+def test_ttl_eviction_drops_query_state():
+    import time as _time
+    svc = CentralService(group_ttl_s=100.0)
+    cl = sc.SimCluster(n_ranks=4, seed=6, samples_per_iter=80)
+    cl.run(svc, 8, process_every=4)
+    g = cl.group_id
+    svc.register_slo(SLO("exact", "iter_time", 1.0, group_id=g))
+    svc._last_ingest[g] = _time.monotonic() - 101.0
+    svc.process()
+    assert all(key[0] != g for key in svc._history)
+    assert "exact" not in svc._slos
+    assert svc.snapshot().group(g) is None
+
+
+# ---------------------------------------------------------------------------
+# the fleet audit walk: central == sharded on a cascade
+# ---------------------------------------------------------------------------
+
+def _finding_key(f):
+    """Causal identity of a finding — everything except wall-clock
+    stamps, which legitimately differ between service instances."""
+    return (f.breach.slo, f.breach.metric, f.breach.group_id,
+            f.breach.rank, f.breach.value, f.breach.threshold,
+            f.breach.window, f.breach.epoch, f.root_group, f.root_rank,
+            f.root_node, f.root_cause, f.category, f.epoch,
+            tuple(f.evidence["chain"]))
+
+
+def test_audit_walks_every_breach_to_the_root(driven):
+    cl, central, _sharded = driven
+    root_g, victim_g = cl.group_ids()
+    findings = central.audit()
+    # every breached (group, rank) shows up exactly once
+    assert len(findings) == len(central.check_slos()) == 16
+    for f in findings:
+        assert f.root_group == root_g
+        assert f.root_rank == 2
+        assert f.root_node == 2 // central.chips_per_node
+        assert f.root_cause == "gpu_uniform_slowdown"
+        assert f.epoch == f.breach.epoch == central.snapshot().epoch
+    victims = [f for f in findings if f.breach.group_id == victim_g]
+    assert len(victims) == 8
+    for f in victims:
+        assert f.evidence["chain"] == [victim_g, root_g]
+        assert f.evidence["via_rank"] == 7          # the bridge rank
+        assert f.evidence["root_event"]["root_cause"] \
+            == "gpu_uniform_slowdown"
+    roots = [f for f in findings if f.breach.group_id == root_g]
+    assert any("root_blame_timeline" in f.evidence for f in roots)
+
+
+def test_audit_identical_central_vs_sharded(driven):
+    _cl, central, sharded = driven
+    fc = sorted(map(_finding_key, central.audit()))
+    fs = sorted(map(_finding_key, sharded.audit()))
+    assert fc == fs and len(fc) == 16
+
+
+def test_audit_without_blame_root_falls_back_to_local_event():
+    """A breach in a group with no cascade pointer still resolves to a
+    root via the group's own latest diagnosis."""
+    svc = CentralService()
+    cl = sc.SimCluster(n_ranks=8, seed=9, samples_per_iter=120)
+    for slo in sc.fleet_slos(cl, margin=0.05):
+        svc.register_slo(slo)
+    cl.run(svc, 20)
+    cl.add_fault(sc.thermal_throttle(rank=3, start=20, factor=1.5))
+    cl.run(svc, 20)
+    findings = svc.audit()
+    assert findings
+    for f in findings:
+        assert f.root_group == cl.group_id
+        assert f.root_rank == 3
+        assert f.evidence["chain"] == [cl.group_id]
