@@ -1,11 +1,12 @@
 """Scenario-registry matrix — coverage beyond the five §5.4 cases.
 
 Drives every scenario registered in ``repro.core.scenarios`` through all
-four service paths (legacy batch, streaming object, wire-encoded
-columnar, sharded front-end) via ``simcluster.run_scenario_matrix`` and
-reports, per scenario, the wall time over the four paths and whether
-every path produced the expected diagnosis.  The run *asserts* full
-coverage: one MISS anywhere fails the benchmark (and CI's bench gate).
+five service paths (legacy batch, streaming object, wire-encoded
+columnar, sharded front-end, hierarchical pod tier over wire v3
+sessions) via ``simcluster.run_scenario_matrix`` and reports, per
+scenario, the wall time over the five paths and whether every path
+produced the expected diagnosis.  The run *asserts* full coverage: one
+MISS anywhere fails the benchmark (and CI's bench gate).
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ from repro.core.simcluster import SERVICE_PATHS, run_scenario_matrix
 def run(out_lines: List[str]) -> Dict[str, float]:
     reg = default_registry()
     out_lines.append(
-        "# scenario matrix: scenario,us_over_4_paths,verdict "
+        "# scenario matrix: scenario,us_over_all_paths,verdict "
         f"(paths: {'/'.join(SERVICE_PATHS)})")
     total = ok = 0
     t_all = time.monotonic()

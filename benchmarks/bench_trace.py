@@ -27,8 +27,9 @@ from repro.core import simcluster as sc
 from repro.core.diffdiag import gpu_diff, per_kernel_means
 from repro.core.events import KernelEvent
 from repro.core.sharded import ShardedService
-from repro.core.trace import (ColumnarBatch, decode_batch, encode_batch,
-                              profile_to_columnar, to_dataclasses)
+from repro.core.trace import (ColumnarBatch, WireEncoder, decode_batch,
+                              encode_batch, profile_to_columnar,
+                              to_dataclasses)
 
 N_GROUPS = 32
 RANKS_PER_GROUP = 32
@@ -143,6 +144,28 @@ def _codec_throughput(out_lines: List[str], res: Dict[str, float]) -> None:
     ref_fleet, ref_steps = _fleet_steps(False, 1)
     assert (to_dataclasses(rt).profiles == ref_steps[0]), \
         "wire round-trip diverged from the dataclass representation"
+
+    # wire v3 dictionary-delta session vs stateless frames: same batch
+    # stream, one persistent encoder — the tables cross the wire once,
+    # so steady-state frames carry only the event columns
+    enc = WireEncoder(fleetc.tables)
+    sess_bytes = 0
+    t0 = time.perf_counter()
+    for b in batches:
+        sess_bytes += len(enc.encode(b))
+        enc.commit()
+    dt_sess = time.perf_counter() - t0
+    v2_bytes = sum(len(encode_batch(b, version=2)) for b in batches)
+    out_lines.append(f"trace_encode_session,{dt_sess/n*1e6:.2f},"
+                     f"{sess_bytes/dt_sess/1e6:.0f}_MB_per_s")
+    out_lines.append(f"trace_wire_bytes_per_profile_v2,0,{v2_bytes/n:.0f}")
+    out_lines.append(f"trace_wire_bytes_per_profile_v3_session,0,"
+                     f"{sess_bytes/n:.0f}")
+    out_lines.append(f"trace_wire_session_ratio,0,"
+                     f"{v2_bytes/sess_bytes:.1f}x_v2_over_v3_session")
+    res["wire_bytes_v2_per_profile"] = v2_bytes / n
+    res["wire_bytes_v3_session_per_profile"] = sess_bytes / n
+    res["wire_session_ratio"] = v2_bytes / sess_bytes
 
 
 def _gpu_diff_vectorized(out_lines: List[str], res: Dict[str, float]) -> None:

@@ -21,6 +21,11 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
                        guard (< 1.2x cycle slowdown) + sustained-ingest
                        query throughput/p99 floors
   bench_trace        — columnar wire codec + encoded-vs-dataclass ingest
+                       (incl. wire v3 session-vs-stateless volume)
+  bench_fleet        — 32k-rank pod-tier smoke cell: sub-second facade
+                       cycles, cascade root localized, wire v3
+                       bytes-per-rank-iteration >=3x under v2, peak RSS
+                       per rank
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
 
 Besides the CSV lines on stdout, every run writes ``BENCH_service.json``
@@ -47,6 +52,7 @@ MODULES = [
     "benchmarks.bench_service",
     "benchmarks.bench_query",
     "benchmarks.bench_trace",
+    "benchmarks.bench_fleet",
     "benchmarks.bench_roofline",
 ]
 

@@ -19,8 +19,9 @@ from repro.core.events import IterationProfile, ProfileBatch
 from repro.core.samplers import SamplingProfiler
 from repro.core.symbols.resolver import CentralResolver
 from repro.core.trace import (ColumnarBatch, ColumnarProfile, RemapCache,
-                              TraceTables, encode_batch, profile_to_columnar,
-                              remap_profile, stacks_profile)
+                              TraceTables, WireEncoder, WireFormatError,
+                              profile_to_columnar, remap_profile,
+                              stacks_profile)
 
 
 @dataclasses.dataclass
@@ -67,11 +68,16 @@ class NodeAgent:
         self._buffer: List[IterationProfile] = []
         self._lock = threading.Lock()
         self._remaps = RemapCache(self._tables)
+        # lazy stateful wire encoder: reusable output buffer + cross-
+        # batch dictionary session over the agent-lifetime tables, so
+        # string/stack tables ship once per agent lifetime, not per batch
+        self._wire: Optional[WireEncoder] = None
         self.uploads = 0
         self.dropped = 0
         self.upload_failures = 0
         self.encoded_uploads = 0
         self.bytes_uploaded = 0
+        self.session_resyncs = 0
 
     # -- the SYSOM_SOCK_PATH handshake (§4) ----------------------------------
     def register_process(self, pid: int, rank: int, job_id: str,
@@ -123,10 +129,14 @@ class NodeAgent:
         the not-yet-ingested remainder is re-buffered *in front of*
         anything submitted meanwhile, so a later flush preserves original
         submission order and nothing is lost.  Services exposing
-        ``ingest_encoded`` get the batch as wire-encoded columnar bytes;
-        services exposing only ``ingest_batch`` (legacy sharded
-        front-ends) get the dataclass batch in one call; plain services
-        get per-profile ``ingest``.
+        ``ingest_encoded`` get the batch as a wire v3 dictionary-delta
+        frame encoded into the agent's reusable buffer (zero copies, and
+        table entries ship once per agent lifetime); what gets
+        re-buffered on failure is the already-interned *columnar* view,
+        so a retry re-encodes the identical bytes without re-interning
+        or allocating new columns.  Services exposing only
+        ``ingest_batch`` (legacy sharded front-ends) get the dataclass
+        batch in one call; plain services get per-profile ``ingest``.
         """
         with self._lock:
             batch, self._buffer = self._buffer, []
@@ -137,8 +147,25 @@ class NodeAgent:
         sent = 0
         try:
             if hasattr(self.service, "ingest_encoded"):
-                data = encode_batch(self._columnar_batch(batch))
-                self.service.ingest_encoded(data)
+                cols = self._columnar_batch(batch)
+                # re-buffer columnar views on failure: the retry path is
+                # allocation-free (interning already happened) and its
+                # re-encode is byte-identical (session watermarks only
+                # advance on commit)
+                batch = cols.profiles
+                if self._wire is None:
+                    self._wire = WireEncoder(self._tables)
+                data = self._wire.encode(cols)
+                try:
+                    self.service.ingest_encoded(data)
+                except WireFormatError:
+                    # receiver lost (or never had) our dictionary
+                    # session: reopen fresh — the next flush sends a
+                    # self-contained frame under a new nonce
+                    self.session_resyncs += 1
+                    self._wire.reset()
+                    raise
+                self._wire.commit()
                 sent = len(batch)
                 self.encoded_uploads += 1
                 self.bytes_uploaded += len(data)

@@ -44,6 +44,26 @@ class DrainStats:
         return self.raw_bytes / max(self.drained_bytes, 1)
 
 
+def merge_stack_columns(pairs) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge many (stack id, weight) column pairs into one deduplicated
+    (stack id, summed weight) pair — one concatenate + unique-inverse +
+    bincount, no per-row dict churn.
+
+    This is the aggregation primitive the pod tier (``repro.core.pod``)
+    uses to pre-reduce a whole pod's per-rank flame columns into a single
+    pod digest before anything crosses toward the facade; it works just
+    as well for merging several agents' ``drain_columns()`` output."""
+    pairs = [(np.asarray(s, dtype=np.int64),
+              np.asarray(w, dtype=np.float64)) for s, w in pairs]
+    pairs = [(s, w) for s, w in pairs if s.shape[0]]
+    if not pairs:
+        return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float64))
+    cat_s = np.concatenate([s for s, _ in pairs])
+    cat_w = np.concatenate([w for _, w in pairs])
+    uniq, inv = np.unique(cat_s, return_inverse=True)
+    return uniq, np.bincount(inv, weights=cat_w)
+
+
 class StackAggregator:
     """Bounded stack -> count map with periodic drain.
 

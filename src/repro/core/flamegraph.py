@@ -53,6 +53,12 @@ class FlameGraph:
         fg.add_rows(rows, resolve)
         return fg
 
+    @property
+    def n_live(self) -> int:
+        """Live stack count — same reporting contract as
+        ``ColumnFlameGraph.n_live``."""
+        return len(self.counts)
+
     def merge(self, other: "FlameGraph") -> "FlameGraph":
         out = FlameGraph()
         for fg in (self, other):

@@ -1,0 +1,198 @@
+"""Hierarchical pod aggregation tier (§5 scale-out to ~80k ranks).
+
+The flat ``ShardedService`` facade walks every engine per ``process()``
+cycle: collection fan-out, alert concatenation, and summary merging are
+all O(engines), and at tens of thousands of ranks the facade itself
+becomes the bottleneck even though each engine's work is tiny.  The pod
+tier inserts one pre-reduction level between the agents and the facade:
+
+    agents ──▶ pod engines ──▶ pod groups (slices) ──▶ facade
+
+* A **pod** is one ``CentralService`` engine owning a group-partitioned
+  slice of the fleet (same crc32 routing as flat sharding, so a group's
+  diagnoses are bit-identical either way).  Per-rank flame graphs,
+  CPU waterlines, and straggler windows accumulate *inside* the pod —
+  the facade never touches per-rank state.
+* A :class:`PodAggregator` runs the pod's collection half and pre-reduces
+  it into a :class:`PodDigest`: the pod's straggler alerts, its
+  ``GroupBlame`` summaries, and its per-rank flame columns merged into
+  one deduplicated (stack id, weight) column pair
+  (:func:`repro.core.aggregate.merge_stack_columns`).  The digest is the
+  only thing that crosses the pod boundary.
+* Pods are sliced into fixed-size **pod groups** (``pods_per_shard``);
+  each slice merges its digests independently (in parallel when
+  ``parallel=True``), and the facade merges the per-slice digests.  The
+  facade's per-cycle work — thread fan-out, list/dict merging — scales
+  with ``n_pods / pods_per_shard`` merge slices, not with ranks.
+
+Equivalence: the two-level merge concatenates alerts in pod order and
+finishes with the same single stable lateness sort the flat facade uses,
+and summaries merge in the same pod order, so ``process()`` output (and
+therefore the published snapshots and ``audit()``) is event-for-event
+identical to ``ShardedService`` with ``n_shards == n_pods`` — asserted
+across every registered scenario by the "pod" column of
+``run_scenario_matrix`` and by tests/test_pod.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.aggregate import merge_stack_columns
+from repro.core.service import CentralService
+from repro.core.sharded import ShardedService
+
+__all__ = ["PodDigest", "PodAggregator", "PodTierService", "merge_digests"]
+
+
+@dataclasses.dataclass
+class PodDigest:
+    """Pre-reduced per-cycle view of one pod (or a merge of several).
+
+    ``alerts`` keep pod order and are *unsorted* — ordering is the
+    facade's job (one stable sort at the top, same as the flat facade),
+    so merging digests is pure concatenation.  ``flame_sids`` /
+    ``flame_weights`` are the pod's per-rank flame graphs collapsed into
+    one deduplicated column pair.
+    """
+    pod: int                       # pod index, -1 for a merged digest
+    alerts: List                   # List[StragglerAlert], pod order
+    summaries: Dict[str, object]   # group id -> GroupBlame
+    groups: int                    # live groups in the pod
+    ranks: int                     # ranks with a latest profile
+    flame_sids: np.ndarray         # int64 stack ids, deduplicated
+    flame_weights: np.ndarray      # float64 decayed sample weights
+
+    @property
+    def flame_total(self) -> float:
+        return float(self.flame_weights.sum()) if \
+            self.flame_weights.shape[0] else 0.0
+
+
+def merge_digests(digests: Sequence[PodDigest]) -> PodDigest:
+    """Merge digests *in the given order* into one.
+
+    Alert concatenation and summary update order follow the input order;
+    callers must pass pods (or already-merged slices) in pod-index order
+    to preserve the flat facade's deterministic merge (see
+    ``ShardedService._collect_fleet``).
+    """
+    alerts: List = []
+    summaries: Dict[str, object] = {}
+    for d in digests:
+        alerts.extend(d.alerts)
+        summaries.update(d.summaries)
+    sids, weights = merge_stack_columns(
+        [(d.flame_sids, d.flame_weights) for d in digests])
+    return PodDigest(
+        pod=-1, alerts=alerts, summaries=summaries,
+        groups=sum(d.groups for d in digests),
+        ranks=sum(d.ranks for d in digests),
+        flame_sids=sids, flame_weights=weights)
+
+
+class PodAggregator:
+    """Collection-side wrapper over one pod engine.
+
+    ``collect`` runs the engine's collection half (eviction, collective
+    materialization, straggler windows) and packages the result — plus
+    the pod-merged flame columns — as a :class:`PodDigest`.  Ingestion
+    still goes straight to the engine via the facade's routing; the
+    aggregator only owns the upward-facing reduction.
+    """
+
+    def __init__(self, index: int, engine: CentralService):
+        self.index = index
+        self.engine = engine
+
+    def flame_columns(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All of the pod's per-rank columnar flame graphs merged into
+        one deduplicated (stack id, weight) pair.  The rank vectors are
+        dense and indexed by the shared stack id space, so the merge is
+        one vector add per rank plus a single ``nonzero`` at the end —
+        no per-rank sparsification (32k ``nonzero`` calls per cycle was
+        a quarter of the facade's collection time).  Legacy dict-backed
+        graphs (non-columnar ingest) have no dense vector and are
+        skipped — the pod tier fronts the columnar upload path."""
+        acc = None
+        for fg in self.engine._rank_fg.values():
+            vec = getattr(fg, "_vec", None)
+            if vec is None or not vec.shape[0]:
+                continue
+            if acc is None or acc.shape[0] < vec.shape[0]:
+                grown = np.zeros(vec.shape[0])
+                if acc is not None:
+                    grown[:acc.shape[0]] = acc
+                acc = grown
+            acc[:vec.shape[0]] += vec
+        if acc is None:
+            return merge_stack_columns([])
+        nz = np.nonzero(acc)[0]
+        return nz, acc[nz]
+
+    def collect(self, t0: float) -> PodDigest:
+        alerts, summaries = self.engine.collect_cycle(t0)
+        sids, weights = self.flame_columns()
+        return PodDigest(
+            pod=self.index, alerts=list(alerts), summaries=dict(summaries),
+            groups=len(self.engine._group_ranks),
+            ranks=len(self.engine._latest),
+            flame_sids=sids, flame_weights=weights)
+
+
+class PodTierService(ShardedService):
+    """``ShardedService`` with the two-level pod -> pod-group collection
+    tree.  Routing, per-root diagnosis, temporal sequencing, publication,
+    and the query/audit plane are all inherited unchanged — only the
+    ``_collect_fleet`` hook is replaced, so everything downstream of
+    collection is provably the flat facade's code path."""
+
+    def __init__(self, n_pods: int = 8, pods_per_shard: int = 4,
+                 parallel: bool = False, **kwargs):
+        if pods_per_shard < 1:
+            raise ValueError("pods_per_shard must be >= 1")
+        super().__init__(n_shards=n_pods, parallel=parallel, **kwargs)
+        self.n_pods = n_pods
+        self.pods_per_shard = min(pods_per_shard, n_pods)
+        self.pods: List[PodAggregator] = [
+            PodAggregator(i, eng) for i, eng in enumerate(self.shards)]
+        # fixed pod-index-order slices: slice merge inside a worker,
+        # slice order preserved at the facade => same total merge order
+        # as the flat facade's engine walk
+        self.pod_slices: List[List[PodAggregator]] = [
+            self.pods[i:i + self.pods_per_shard]
+            for i in range(0, n_pods, self.pods_per_shard)]
+        self.last_digest: PodDigest = merge_digests([])
+
+    # -- collection tier ------------------------------------------------------
+    def _collect_fleet(self, t0: float):
+        """Two-level tree merge: each pod-group slice collects and
+        pre-merges its pods' digests (concurrently under ``parallel``);
+        the facade merges one digest per slice and applies the single
+        stable lateness sort.  Pod order is preserved end to end, so the
+        result is event-for-event identical to the flat walk."""
+        def slice_digest(pods: List[PodAggregator]) -> PodDigest:
+            return merge_digests([p.collect(t0) for p in pods])
+
+        if self.parallel and len(self.pod_slices) > 1:
+            with ThreadPoolExecutor(
+                    max_workers=len(self.pod_slices)) as ex:
+                merged = list(ex.map(slice_digest, self.pod_slices))
+        else:
+            merged = [slice_digest(s) for s in self.pod_slices]
+        top = merge_digests(merged)
+        self.last_digest = top
+        alerts = sorted(top.alerts, key=lambda a: -a.lateness)
+        return alerts, top.summaries
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        agg = dict(super().stats())
+        agg["pods"] = self.n_pods
+        agg["pod_slices"] = len(self.pod_slices)
+        agg["digest_ranks"] = self.last_digest.ranks
+        agg["digest_stacks"] = int(self.last_digest.flame_sids.shape[0])
+        return agg

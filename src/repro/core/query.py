@@ -128,17 +128,26 @@ class RankHistory:
                            self.tl_it, self.tl, len(self.tl_it))
 
 
-@dataclasses.dataclass(frozen=True)
 class HistoryView:
-    """Immutable window onto one rank's retained columns: the column
-    list objects as of publish plus the published lengths.  Appends past
-    ``n_it``/``n_tl`` (and trims, which rebind new lists) never show."""
-    it: Sequence[int]
-    t: Sequence[float]
-    n_it: int
-    tl_it: Sequence[int]
-    tl: Sequence[Tuple[float, ...]]
-    n_tl: int
+    """Immutable-by-convention window onto one rank's retained columns:
+    the column list objects as of publish plus the published lengths.
+    Appends past ``n_it``/``n_tl`` (and trims, which rebind new lists)
+    never show.  A plain ``__slots__`` class, not a frozen dataclass:
+    publication constructs one per (group, rank) every cycle, and at
+    32k ranks the frozen-dataclass ``__setattr__`` detour alone was
+    ~0.4 s of every snapshot."""
+
+    __slots__ = ("it", "t", "n_it", "tl_it", "tl", "n_tl")
+
+    def __init__(self, it: Sequence[int], t: Sequence[float], n_it: int,
+                 tl_it: Sequence[int], tl: Sequence[Tuple[float, ...]],
+                 n_tl: int):
+        self.it = it
+        self.t = t
+        self.n_it = n_it
+        self.tl_it = tl_it
+        self.tl = tl
+        self.n_tl = n_tl
 
     def iter_times(self, start: Optional[int] = None,
                    end: Optional[int] = None

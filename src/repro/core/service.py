@@ -50,13 +50,16 @@ import time
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.attribution import (CASCADE_EXPORT_CAUSE, CascadeExport,
                                     Localization, TimelineBuilder,
                                     iteration_timelines,
                                     iteration_timelines_naive,
                                     localize_cascades)
 from repro.core.baseline import BaselineStore, compare_to_baseline
-from repro.core.collective.instances import separate_instances
+from repro.core.collective.instances import (separate_instance_indices,
+                                             separate_instances)
 from repro.core.diffdiag import Verdict, diagnose
 from repro.core.events import (CollectiveEvent, IterationProfile,
                                ProfileBatch)
@@ -139,7 +142,8 @@ class CentralService(DiagnosisQueryAPI):
                  attribution: bool = True,
                  min_root_lateness: float = 1e-4,
                  chips_per_node: int = 8,
-                 retain: int = 512):
+                 retain: int = 512,
+                 publish_stride: int = 1):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
         # rule-set immutability after service start: pin a frozen snapshot
@@ -152,6 +156,9 @@ class CentralService(DiagnosisQueryAPI):
         # kernel diffs from different agents are directly comparable
         self.tables = TraceTables()
         self._remaps = RemapCache(self.tables)
+        # per-sender wire dictionary sessions (v3 delta frames): nonce ->
+        # gather arrays mapping session-scope ids into self.tables
+        self._wire_sessions: Dict[int, object] = {}
         self.detector = StragglerDetector(window=window, k=k,
                                           robust=robust_detector)
         self.waterlines: Dict[str, CPUWaterline] = defaultdict(
@@ -225,6 +232,15 @@ class CentralService(DiagnosisQueryAPI):
         # last group iteration whose timelines were recorded (skip
         # recomputation on idle groups)
         self._tl_recorded: Dict[str, int] = {}
+        # publication striding: with stride s > 1, each analysis cycle
+        # records timelines and refreshes waterline-top summaries for
+        # 1/s of the groups (rotating, so every group refreshes every s
+        # cycles).  Alerts, diagnoses, blame state and history ring
+        # buffers are NOT strided — only the read-side publication work.
+        # stride 1 (the default) is exactly the pre-stride behaviour.
+        self.publish_stride = max(1, publish_stride)
+        self._cycle_no = 0
+        self._wl_top_cache: Dict[str, tuple] = {}
         self._init_query_api()
         # epoch 0: the empty snapshot, published at construction so
         # readers never see None; process() publishes 1, 2, ...
@@ -301,11 +317,15 @@ class CentralService(DiagnosisQueryAPI):
             self.ingest(p, job_id=batch.job_id)
         return len(batch.profiles)
 
-    def ingest_encoded(self, data: bytes) -> int:
-        """One wire-encoded columnar upload: decode straight into the
-        service's global tables (one vectorized id gather per column),
-        then ingest the column views."""
-        return self.ingest_batch(decode_batch(data, tables=self.tables))
+    def ingest_encoded(self, data) -> int:
+        """One wire-encoded columnar upload (``bytes`` or any buffer —
+        no copy forced): decode straight into the service's global
+        tables (one vectorized id gather per column), then ingest the
+        column views.  v3 dictionary-delta frames resume their sender's
+        session from ``_wire_sessions``; an out-of-sync frame raises
+        ``WireFormatError`` back to the sender, which resyncs."""
+        return self.ingest_batch(decode_batch(data, tables=self.tables,
+                                              sessions=self._wire_sessions))
 
     def ingest_log_line(self, job_id: str, line: str) -> Optional[DiagnosticEvent]:
         for pattern, cause in LOG_SOP_RULES:
@@ -341,6 +361,7 @@ class CentralService(DiagnosisQueryAPI):
         # captured views (copy-on-trim columns never dangle)
         self._blame_roots.pop(g, None)
         self._tl_recorded.pop(g, None)
+        self._wl_top_cache.pop(g, None)
         self._drop_group_slos(g)
         self.detector.forget_group(g)
         self.groups_evicted += 1
@@ -356,7 +377,21 @@ class CentralService(DiagnosisQueryAPI):
     # -- analysis cycle (the "processed within minutes" loop) ----------------
     def _materialize_collectives(self) -> None:
         """Deferred columnar collectives -> instance separation ->
-        detector (blame-edge accumulation), once per cycle."""
+        detector (blame-edge accumulation), once per cycle.
+
+        All-columnar cycles (the production ingest shape) take the
+        array fast path: channels are keyed by interned (group, op) ids
+        straight off the wire columns and observed through the
+        detector's array methods — zero ``CollectiveEvent`` objects.
+        At 32k ranks the object route's per-event dataclass churn was
+        ~4 s of every analysis cycle.  A cycle that also holds
+        dataclass-ingested collectives falls back to the object route
+        for everything, so mixed representations stay on one ordering.
+        """
+        if self._pending_coll_profiles and not self._pending_collectives:
+            self._materialize_columnar_collectives()
+            self._pending_coll_profiles = []
+            return
         if self._pending_coll_profiles:
             for p in self._pending_coll_profiles:
                 self._pending_collectives.extend(p.collective_events())
@@ -365,6 +400,51 @@ class CentralService(DiagnosisQueryAPI):
             for inst in separate_instances(self._pending_collectives):
                 self.detector.observe_instance(inst)
             self._pending_collectives = []
+
+    def _materialize_columnar_collectives(self) -> None:
+        """Array twin of the object route, state-for-state identical:
+        channels form in the same first-seen order, events within a
+        channel scan in the same stable entry order, instance members
+        rank-sort the same way, and the final cross-channel pass sorts
+        by the same min-raw-entry key — so the detector's windows, sums
+        and blame edges come out in exactly the object route's order.
+
+        Channel grouping is one stable argsort over the concatenated
+        wire columns (profile order is the scan order), not a per-event
+        Python walk — at 32k ranks the dict-of-lists channel build was
+        ~15% of the analysis cycle."""
+        P = self._pending_coll_profiles
+        lens = np.fromiter((p.coll_entry.shape[0] for p in P),
+                           np.int64, len(P))
+        if not int(lens.sum()):
+            return
+        gis = np.concatenate([p.coll_group for p in P]).astype(np.int64)
+        ops = np.concatenate([p.coll_op for p in P]).astype(np.int64)
+        ens = np.concatenate([p.coll_entry for p in P])
+        exs = np.concatenate([p.coll_exit for p in P])
+        rks = np.repeat(np.fromiter((p.rank for p in P), np.int64, len(P)),
+                        lens)
+        key = gis * np.int64(len(self.tables.strings) + 1) + ops
+        uniq, first, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+        by_key = np.argsort(key, kind="stable")     # scan order within key
+        bounds = np.concatenate(([0], np.cumsum(np.bincount(inv))))
+        insts = []
+        # channels in first-seen order, like the object route's dict
+        for ci in np.argsort(first, kind="stable").tolist():
+            sl = by_key[bounds[ci]:bounds[ci + 1]]
+            ea, xa, rlist = ens[sl], exs[sl], rks[sl].tolist()
+            for start, idxs in separate_instance_indices(ea, xa, rlist):
+                insts.append((start, int(gis[sl[0]]), int(ops[sl[0]]),
+                              ea, xa, rlist, idxs))
+        insts.sort(key=lambda t: t[0])      # stable: ties keep channel order
+        name = self.tables.strings.get
+        observe = self.detector.observe_instance_arrays
+        for _start, gi, op, ea, xa, rks_c, idxs in insts:
+            if len(idxs) < 2:
+                continue
+            observe(name(gi), name(op), [rks_c[j] for j in idxs],
+                    ea[idxs], xa[idxs])
 
     def collect_cycle(self, t0: Optional[float] = None):
         """Run one cycle's *collection* half without emitting events:
@@ -668,8 +748,16 @@ class CentralService(DiagnosisQueryAPI):
         """Append one blame-timeline row per (group, rank) to the
         retained query history — once per analysis cycle, one vectorized
         ``iteration_timelines`` pass per group that advanced since its
-        last recording (idle groups cost a dict lookup)."""
-        for g in self._group_ranks:
+        last recording (idle groups cost a dict lookup).  With
+        ``publish_stride`` s > 1 only the cycle's rotating 1/s of the
+        groups record; the others keep their retained rows and catch up
+        on their stride turn."""
+        self._cycle_no += 1
+        stride = self.publish_stride
+        turn = self._cycle_no % stride
+        for i, g in enumerate(self._group_ranks):
+            if stride > 1 and i % stride != turn:
+                continue
             latest = max(
                 (p.iteration for p in
                  (self._latest.get((g, r)) for r in self._group_ranks[g])
@@ -700,8 +788,10 @@ class CentralService(DiagnosisQueryAPI):
         self._epoch += 1
         hist = {key: h.view() for key, h in self._history.items()}
         summaries = self.last_summaries
+        stride = self.publish_stride
+        turn = self._cycle_no % stride
         groups = []
-        for g in sorted(self._group_ranks):
+        for i, g in enumerate(sorted(self._group_ranks)):
             ranks = tuple(sorted(self._group_ranks[g]))
             last_it = -1
             for r in ranks:
@@ -710,12 +800,20 @@ class CentralService(DiagnosisQueryAPI):
                     last_it = max(last_it, v.it[v.n_it - 1])
             wl = self.waterlines.get(g)
             s = summaries.get(g)
+            # waterline top-5 extraction walks the group's function
+            # accumulators; under striding it refreshes on the group's
+            # rotation turn and republishes the cached tuple otherwise
+            wl_top = self._wl_top_cache.get(g) if stride > 1 else None
+            if wl_top is None or i % stride == turn:
+                wl_top = (tuple(wl.top_functions(5))
+                          if wl is not None else ())
+                if stride > 1:
+                    self._wl_top_cache[g] = wl_top
             groups.append(GroupView(
                 group_id=g,
                 job_id=self._job_by_group.get(g, "job-0"),
                 ranks=ranks, last_iteration=last_it,
-                waterline_top=(tuple(wl.top_functions(5))
-                               if wl is not None else ()),
+                waterline_top=wl_top,
                 blame=s.as_dict() if s is not None else None))
         self._snapshot = FleetSnapshot(
             epoch=self._epoch, published_at=t0, groups=tuple(groups),
@@ -733,7 +831,10 @@ class CentralService(DiagnosisQueryAPI):
 
     def stats(self) -> Dict[str, float]:
         """Bounded-state introspection for dashboards and benchmarks."""
-        live_stacks = sum(len(fg.counts) for fg in self._rank_fg.values())
+        # n_live avoids materializing a per-rank counts dict: at 32k
+        # ranks this sum runs twice per cycle (own snapshot + facade
+        # merge) and was the single hottest reporting line
+        live_stacks = sum(fg.n_live for fg in self._rank_fg.values())
         return {
             "ingested": self.ingested,
             "groups": len(self._group_iter_time),

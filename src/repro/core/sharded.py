@@ -73,6 +73,10 @@ class ShardedService(DiagnosisQueryAPI):
             s._tl_builder = self.shards[0]._tl_builder
             s._remaps = self.shards[0]._remaps
         self._log_rr = 0
+        # facade-level wire dictionary sessions: encoded uploads decode
+        # ONCE at the facade (into the shared tables) before routing, so
+        # the session store lives here, not in any shard
+        self._wire_sessions: Dict[int, object] = {}
         # ---- queryable diagnosis plane (repro.core.query) ----
         # the facade holds its OWN SLO registry and epoch counter and
         # publishes a merged fleet snapshot per process() cycle, so the
@@ -94,11 +98,13 @@ class ShardedService(DiagnosisQueryAPI):
     def ingest(self, profile: IterationProfile, job_id: str = "job-0") -> None:
         self.shard_for(profile.group_id).ingest(profile, job_id=job_id)
 
-    def ingest_encoded(self, data: bytes) -> int:
+    def ingest_encoded(self, data) -> int:
         """One wire-encoded columnar upload: decoded exactly once into the
-        shared tables, then the per-profile column views are routed to
-        their group's shard (no per-shard re-decode or re-map)."""
-        batch = decode_batch(data, tables=self.tables)
+        shared tables (v3 delta frames resume their sender's dictionary
+        session), then the per-profile column views are routed to their
+        group's shard (no per-shard re-decode or re-map)."""
+        batch = decode_batch(data, tables=self.tables,
+                             sessions=self._wire_sessions)
         return self.ingest_batch(batch)
 
     def ingest_batch(self, batch) -> int:
@@ -170,17 +176,7 @@ class ShardedService(DiagnosisQueryAPI):
             return merged
 
         t0 = time.monotonic()
-        if self.parallel and self.n_shards > 1:
-            with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
-                collected = list(ex.map(lambda s: s.collect_cycle(t0),
-                                        self.shards))
-        else:
-            collected = [s.collect_cycle(t0) for s in self.shards]
-        alerts = [a for shard_alerts, _ in collected for a in shard_alerts]
-        alerts.sort(key=lambda a: -a.lateness)
-        summaries = {}
-        for _, shard_summaries in collected:
-            summaries.update(shard_summaries)
+        alerts, summaries = self._collect_fleet(t0)
         locs, exports = localize_cascades(alerts, summaries)
         # distribute this cycle's blame-root pointers to the shards
         # owning each group, so per-shard and merged snapshots carry the
@@ -217,6 +213,30 @@ class ShardedService(DiagnosisQueryAPI):
         self._publish_merged(t0)
         return events
 
+    # -- collection tier -----------------------------------------------------
+    def _collect_fleet(self, t0: float):
+        """Run every engine's *collection* half and merge fleet-wide into
+        ``(alerts, summaries)`` for cascade localization.
+
+        This is the scaling hook: the flat facade walks every engine
+        itself; the pod tier (``repro.core.pod``) overrides it with a
+        two-level pod -> pod-group tree merge so facade-visible work
+        scales with pods, not engines.  Merge order is deterministic
+        (engine index, then a stable lateness sort), so every override
+        must preserve engine order to stay event-for-event identical."""
+        if self.parallel and self.n_shards > 1:
+            with ThreadPoolExecutor(max_workers=self.n_shards) as ex:
+                collected = list(ex.map(lambda s: s.collect_cycle(t0),
+                                        self.shards))
+        else:
+            collected = [s.collect_cycle(t0) for s in self.shards]
+        alerts = [a for shard_alerts, _ in collected for a in shard_alerts]
+        alerts.sort(key=lambda a: -a.lateness)
+        summaries = {}
+        for _, shard_summaries in collected:
+            summaries.update(shard_summaries)
+        return alerts, summaries
+
     # -- queryable diagnosis plane (merged publication) ----------------------
     def _publish_merged(self, t0: float) -> None:
         """Merge the shards' just-published snapshots into one facade
@@ -244,10 +264,20 @@ class ShardedService(DiagnosisQueryAPI):
         for g in self._known_groups - live:
             self._drop_group_slos(g)
         self._known_groups = live
+        # merged stats come from the stats each shard just froze into
+        # its own snapshot (state hasn't changed since: same cycle, no
+        # ingest in between) — re-walking every shard's per-rank flame
+        # state via self.stats() doubled the fleet's reporting cost
+        agg: Dict[str, float] = defaultdict(float)
+        for s in self.shards:
+            for k, v in s._snapshot.stats.items():
+                agg[k] += v
+        agg["shards"] = self.n_shards
+        agg["epoch"] = self._epoch
         self._snapshot = FleetSnapshot(
             epoch=self._epoch, published_at=t0, groups=tuple(groups),
             history=hist, events=tuple(events), blame_roots=roots,
-            stats=self.stats())
+            stats=dict(agg))
 
     def snapshot(self) -> FleetSnapshot:
         """Current merged snapshot — one GIL-atomic attribute read."""

@@ -220,14 +220,19 @@ def dataloader_starvation(start: int = 0, fraction: float = 0.10) -> Fault:
 
 
 def swap_thrash(rank: int, start: int = 0,
-                faults_per_window: int = 6000) -> Fault:
+                faults_per_window: int = 6000,
+                delay_s: float = 1.5e-3) -> Fault:
     """Memory pressure on one node: the training process takes major page
-    faults (swap-in) — too brief for sampled stacks, loud in vmstat."""
+    faults (swap-in) — too brief for sampled stacks, loud in vmstat.
+    ``delay_s`` scales the collective entry delay (cascade benches raise
+    it so the *victim* group's diluted share of the delay still clears
+    their noise floor); the diagnosis signal is ``major_faults`` either
+    way."""
     def os_fx(sig: Dict[str, object], rng: random.Random) -> None:
         sig["major_faults"] = faults_per_window + rng.randint(-500, 500)
 
     return Fault("memory_pressure_swap", [rank], start, os_effect=os_fx,
-                 entry_delay=lambda base: 1.5e-3)
+                 entry_delay=lambda base: delay_s)
 
 
 def pcie_link_degradation(rank: int, start: int = 0, replays: int = 600) -> Fault:
@@ -847,10 +852,13 @@ def fleet_slos(cluster, margin: float = 0.2, window: int = 8,
 # scenario matrix: every registered scenario x every service path
 # ---------------------------------------------------------------------------
 
-#: The four ingest/analysis paths a diagnosis must survive unchanged:
+#: The five ingest/analysis paths a diagnosis must survive unchanged:
 #: legacy batch (streaming=False), streaming object ingest, wire-encoded
-#: columnar upload, and the group-partitioned sharded front-end.
-SERVICE_PATHS: Tuple[str, ...] = ("legacy", "streaming", "columnar", "sharded")
+#: columnar upload, the group-partitioned sharded front-end, and the
+#: hierarchical pod tier (wire v3 dictionary-delta session uploads into
+#: ``PodTierService``'s two-level collection tree).
+SERVICE_PATHS: Tuple[str, ...] = (
+    "legacy", "streaming", "columnar", "sharded", "pod")
 
 
 @dataclasses.dataclass
@@ -879,9 +887,10 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
                     baseline_iters: int, fault_iters: int,
                     process_every: int, n_shards: int, window: int,
                     registry) -> ScenarioResult:
+    from repro.core.pod import PodTierService
     from repro.core.service import CentralService
     from repro.core.sharded import ShardedService
-    from repro.core.trace import ColumnarBatch, encode_batch
+    from repro.core.trace import ColumnarBatch, WireEncoder, encode_batch
 
     kwargs = dict(window=window, robust_detector=scenario.robust_detector,
                   registry=registry)
@@ -891,14 +900,21 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
         svc = CentralService(**kwargs)
     elif path == "sharded":
         svc = ShardedService(n_shards=n_shards, **kwargs)
+    elif path == "pod":
+        # same engine count/routing as "sharded" (so diagnoses match
+        # event-for-event), merged through the two-level pod tree
+        svc = PodTierService(n_pods=n_shards, pods_per_shard=2, **kwargs)
     else:
         raise ValueError(
             f"unknown service path {path!r}; choose from {SERVICE_PATHS}")
     # the columnar path doubles as the batched-collection gate: its
     # stacks reach the tables through the real batch unwinder + central
     # symbolization (NativeStackFeed), so every registered scenario's
-    # verdict is asserted end-to-end through the production-shaped path
-    columnar = path == "columnar"
+    # verdict is asserted end-to-end through the production-shaped path;
+    # the pod path rides the same columnar cluster but ships every
+    # upload as a wire v3 dictionary-delta frame over one persistent
+    # encoder session (tables cross the wire incrementally, once)
+    columnar = path in ("columnar", "pod")
     make_cluster = getattr(scenario, "make_cluster", None)
     if make_cluster is not None:
         # cascade scenarios bring their own fleet topology (overlapping
@@ -908,11 +924,16 @@ def _drive_scenario(scenario, path: str, *, n_ranks: int, seed: int,
     else:
         cl = SimCluster(n_ranks=n_ranks, seed=seed, columnar=columnar,
                         native_unwind=columnar)
+    enc = WireEncoder(cl.tables) if path == "pod" else None
 
     def run(iterations: int) -> None:
         for _ in range(iterations):
             profiles = cl.step()
-            if columnar:
+            if enc is not None:
+                svc.ingest_encoded(enc.encode(
+                    ColumnarBatch("job-0", profiles, "node-0", cl.tables)))
+                enc.commit()
+            elif columnar:
                 svc.ingest_encoded(encode_batch(
                     ColumnarBatch("job-0", profiles, "node-0", cl.tables)))
             else:

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from collections import defaultdict, deque
+from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -88,6 +88,63 @@ class GroupBlame:
         }
 
 
+class _RankRing:
+    """One group's fixed-window value rings: a (window, n_ranks) matrix
+    per tracked column, rank -> matrix column.  Appending one collective
+    instance is a handful of vectorized scatters instead of a Python
+    loop over per-rank deques; each matrix column holds exactly the
+    multiset the deque it replaced would, so order-independent
+    reductions over it (k-th smallest, elementwise running sums) are
+    bit-identical to the scalar path.  Capacity grows to the rank set
+    actually observed (membership is static after the first instance,
+    so growth is one concatenate per group lifetime in practice)."""
+
+    __slots__ = ("window", "colmap", "order", "bufs", "extras",
+                 "len_", "pos", "_colcache")
+
+    def __init__(self, window: int, n_bufs: int, n_extras: int):
+        self.window = window
+        self.colmap: Dict[int, int] = {}
+        self.order: List[int] = []
+        self.bufs = [np.empty((window, 0)) for _ in range(n_bufs)]
+        # per-column f64 side arrays (running sums / cached medians)
+        self.extras = [np.empty(0) for _ in range(n_extras)]
+        self.len_ = np.empty(0, np.int64)
+        self.pos = np.empty(0, np.int64)
+        self._colcache: Dict[Tuple[int, ...], np.ndarray] = {}
+
+    def cols(self, ranks: Sequence[int]) -> np.ndarray:
+        """Column indices for one instance's rank list (cached by the
+        rank tuple — instances of a group repeat the same membership)."""
+        key = tuple(ranks)
+        c = self._colcache.get(key)
+        if c is None:
+            cm = self.colmap
+            for r in key:
+                if r not in cm:
+                    cm[r] = len(self.order)
+                    self.order.append(r)
+            n = len(self.order)
+            if n > self.len_.shape[0]:
+                extra = n - self.len_.shape[0]
+                pad = np.zeros((self.window, extra))
+                self.bufs = [np.concatenate([b, pad], axis=1)
+                             for b in self.bufs]
+                self.extras = [np.concatenate([e, np.zeros(extra)])
+                               for e in self.extras]
+                zi = np.zeros(extra, np.int64)
+                self.len_ = np.concatenate([self.len_, zi])
+                self.pos = np.concatenate([self.pos, zi])
+            c = self._colcache[key] = np.fromiter(
+                (cm[r] for r in key), np.int64, len(key))
+        return c
+
+    def advance(self, cols: np.ndarray) -> None:
+        """Move the written columns' ring cursors one row forward."""
+        self.pos[cols] = (self.pos[cols] + 1) % self.window
+        self.len_[cols] = np.minimum(self.len_[cols] + 1, self.window)
+
+
 class ClockAligner:
     """Estimate per-rank clock skew from barrier exit residuals.
 
@@ -100,45 +157,95 @@ class ClockAligner:
     Streaming shape: clock skew is quasi-static, so the median residual is
     recomputed only every ``refresh_every`` observations per rank instead of
     re-sorting the window on every aligned entry — O(1) amortized per event.
-    """
+    State is per-group ring matrices (:class:`_RankRing`): one instance's
+    residuals land as one scatter, the per-rank skew gather is one cached
+    array read, and a refresh partitions every due rank of the group in a
+    single ``np.partition(axis=0)`` — at 32k ranks the per-key dict/deque
+    walk was the analysis cycle's single largest cost."""
+
+    # _RankRing layout: bufs=[resid], extras=[cached median, since, valid]
+    _CACHED, _SINCE, _VALID = 0, 1, 2
 
     def __init__(self, window: int = 100, refresh_every: int = 8):
-        self._resid: Dict[Tuple[str, int], Deque[float]] = defaultdict(
-            lambda: deque(maxlen=window))
+        self._window = window
         self._refresh = max(1, refresh_every)
-        self._cached: Dict[Tuple[str, int], float] = {}
-        self._since_refresh: Dict[Tuple[str, int], int] = defaultdict(int)
+        self._groups: Dict[str, _RankRing] = {}
 
     def observe_instance(self, events: Sequence[CollectiveEvent]) -> None:
         n = len(events)
         if n < 2:
             return
+        self.observe_arrays(
+            events[0].group_id, [e.rank for e in events],
+            np.fromiter((e.exit for e in events), np.float64, n))
+
+    def observe_arrays(self, group_id: str, ranks: Sequence[int],
+                       exits: np.ndarray) -> None:
+        """Array twin of :meth:`observe_instance`: one instance's ranks
+        and exit column, no event objects (the columnar hot path)."""
+        if exits.shape[0] < 2:
+            return
+        st = self._groups.get(group_id)
+        if st is None:
+            st = self._groups[group_id] = _RankRing(self._window, 1, 3)
+        cols = st.cols(ranks)
         # exit-residual update, vectorized over the instance's ranks
-        exits = np.fromiter((e.exit for e in events), np.float64, n)
-        resid = exits - exits.mean()
-        for e, rv in zip(events, resid.tolist()):
-            self._resid[(e.group_id, e.rank)].append(rv)
-            self._since_refresh[(e.group_id, e.rank)] += 1
+        st.bufs[0][st.pos[cols], cols] = exits - exits.mean()
+        st.extras[self._SINCE][cols] += 1.0
+        st.advance(cols)
+
+    def _refresh_cols(self, st: _RankRing, dcols: np.ndarray) -> None:
+        """Recompute the cached median residual for the given columns —
+        the same k-th-smallest selection the scalar path makes, over the
+        same window multiset, batched across ranks when lengths agree."""
+        cached = st.extras[self._CACHED]
+        lens = st.len_[dcols]
+        n0 = int(lens[0])
+        if bool((lens == n0).all()):
+            cached[dcols] = np.partition(
+                st.bufs[0][:n0, dcols], n0 // 2, axis=0)[n0 // 2]
+        else:
+            buf = st.bufs[0]
+            for c in dcols.tolist():
+                n = int(st.len_[c])
+                cached[c] = np.partition(buf[:n, c], n // 2)[n // 2]
+        st.extras[self._VALID][dcols] = 1.0
+        st.extras[self._SINCE][dcols] = 0.0
+
+    def skews_for(self, group_id: str, ranks: Sequence[int]) -> np.ndarray:
+        """Cached skews for one instance's rank list, refreshing every
+        due rank of the group in one batched partition."""
+        st = self._groups.get(group_id)
+        if st is None:
+            return np.zeros(len(ranks))
+        cols = st.cols(ranks)
+        seen = st.len_[cols] > 0
+        due = seen & ((st.extras[self._VALID][cols] == 0.0)
+                      | (st.extras[self._SINCE][cols] >= self._refresh))
+        if due.any():
+            self._refresh_cols(st, cols[due])
+        skews = st.extras[self._CACHED][cols]
+        if not seen.all():
+            skews = np.where(seen, skews, 0.0)   # never-observed ranks
+        return skews
 
     def skew(self, rank: int, group_id: str) -> float:
-        key = (group_id, rank)
-        r = self._resid.get(key)
-        if not r:
+        st = self._groups.get(group_id)
+        if st is None:
             return 0.0
-        if key not in self._cached or self._since_refresh[key] >= self._refresh:
-            arr = np.fromiter(r, np.float64, len(r))
-            k = arr.shape[0] // 2
-            self._cached[key] = float(np.partition(arr, k)[k])  # median
-            self._since_refresh[key] = 0
-        return self._cached[key]
+        c = st.colmap.get(rank)
+        if c is None or st.len_[c] == 0:
+            return 0.0
+        if (st.extras[self._VALID][c] == 0.0
+                or st.extras[self._SINCE][c] >= self._refresh):
+            self._refresh_cols(st, np.array([c], np.int64))
+        return float(st.extras[self._CACHED][c])
 
     def align_entry(self, e: CollectiveEvent) -> float:
         return e.entry - self.skew(e.rank, e.group_id)
 
     def forget_group(self, group_id: str) -> None:
-        for d in (self._resid, self._cached, self._since_refresh):
-            for key in [k for k in d if k[0] == group_id]:
-                del d[key]
+        self._groups.pop(group_id, None)
 
 
 class StragglerDetector:
@@ -160,18 +267,10 @@ class StragglerDetector:
         self.min_instances = min_instances
         self.robust = robust
         self.aligner = ClockAligner(window)
-        # lateness[group][rank] = deque of per-instance entry lateness
-        self._late: Dict[str, Dict[int, Deque[float]]] = defaultdict(
-            lambda: defaultdict(lambda: deque(maxlen=window)))
-        # running window sums so check() never re-walks the deques
-        self._late_sum: Dict[str, Dict[int, float]] = defaultdict(
-            lambda: defaultdict(float))
-        # absolute blocked-wait per rank (blame the rank *received* from
-        # the instance's culprit), windowed the same way as lateness
-        self._wait: Dict[str, Dict[int, Deque[float]]] = defaultdict(
-            lambda: defaultdict(lambda: deque(maxlen=window)))
-        self._wait_sum: Dict[str, Dict[int, float]] = defaultdict(
-            lambda: defaultdict(float))
+        # per-group ring matrices: bufs=[lateness, wait] per-instance
+        # windows, extras=[lateness sum, wait sum] running window sums
+        # so check() never re-walks the windows
+        self._groups: Dict[str, _RankRing] = {}
         self._last_start: Dict[str, float] = {}
         # per-collective blame edges; bounded (drained every service
         # cycle, deque-capped against an undrained consumer)
@@ -184,38 +283,57 @@ class StragglerDetector:
         n = len(events)
         if n < 2:
             return
-        self.aligner.observe_instance(events)
-        group = events[0].group_id
+        self.observe_instance_arrays(
+            events[0].group_id, events[0].op, [e.rank for e in events],
+            np.fromiter((e.entry for e in events), np.float64, n),
+            np.fromiter((e.exit for e in events), np.float64, n))
+
+    def observe_instance_arrays(self, group: str, op: str,
+                                ranks: Sequence[int], entries: np.ndarray,
+                                exits: np.ndarray) -> None:
+        """Array twin of :meth:`observe_instance`: one matched instance
+        as rank-sorted parallel columns, no ``CollectiveEvent`` objects
+        anywhere — what the columnar service feeds straight from wire
+        columns.  Same arithmetic in the same order as the object path."""
+        n = entries.shape[0]
+        if n < 2:
+            return
+        self.aligner.observe_arrays(group, ranks, exits)
         # aligned-entry lateness, vectorized over the instance's ranks
-        entries = np.fromiter((e.entry for e in events), np.float64, n)
-        skew = self.aligner.skew
-        skews = np.fromiter((skew(e.rank, group) for e in events),
-                            np.float64, n)
+        skews = self.aligner.skews_for(group, ranks)
         aligned = entries - skews
         lateness = aligned - aligned.mean()
         # barrier semantics: the instance starts when the last rank
         # arrives; everyone else's wait is blame on that culprit
         start = float(aligned.max())
-        culprit = events[int(np.argmax(aligned))].rank
+        ci = int(np.argmax(aligned))
+        culprit = ranks[ci]
         waits = start - aligned
         self._last_start[group] = start
-        late_g, lsum_g = self._late[group], self._late_sum[group]
-        wait_g, wsum_g = self._wait[group], self._wait_sum[group]
-        op = events[0].op
-        for e, lv, wv in zip(events, lateness.tolist(), waits.tolist()):
-            d = late_g[e.rank]
-            if len(d) == d.maxlen:          # evict oldest from the sum
-                lsum_g[e.rank] -= d[0]
-            d.append(lv)
-            lsum_g[e.rank] += lv
-            w = wait_g[e.rank]
-            if len(w) == w.maxlen:
-                wsum_g[e.rank] -= w[0]
-            w.append(wv)
-            wsum_g[e.rank] += wv
-            if e.rank != culprit and wv >= self.min_lateness:
+        st = self._groups.get(group)
+        if st is None:
+            st = self._groups[group] = _RankRing(self.window, 2, 2)
+        cols = st.cols(ranks)
+        pos = st.pos[cols]
+        late_buf, wait_buf = st.bufs
+        lsum, wsum = st.extras
+        # evict the overwritten row from the running sums, then add the
+        # new instance — subtract-before-add per rank, like the scalar
+        # path (a not-yet-full column subtracts 0.0, an exact noop)
+        full = st.len_[cols] == st.window
+        lsum[cols] -= np.where(full, late_buf[pos, cols], 0.0)
+        lsum[cols] += lateness
+        wsum[cols] -= np.where(full, wait_buf[pos, cols], 0.0)
+        wsum[cols] += waits
+        late_buf[pos, cols] = lateness
+        wait_buf[pos, cols] = waits
+        st.advance(cols)
+        floor = self.min_lateness
+        for i in np.nonzero(waits >= floor)[0].tolist():
+            rk = ranks[i]
+            if rk != culprit:
                 self._edges.append(BlameEdge(
-                    group, op, start, culprit, e.rank, wv))
+                    group, op, start, culprit, rk, float(waits[i])))
 
     def drain_edges(self) -> List[BlameEdge]:
         """Hand off (and clear) the per-collective blame edges emitted
@@ -226,10 +344,7 @@ class StragglerDetector:
 
     def forget_group(self, group_id: str) -> None:
         """Drop all windowed state for a retired communication group."""
-        self._late.pop(group_id, None)
-        self._late_sum.pop(group_id, None)
-        self._wait.pop(group_id, None)
-        self._wait_sum.pop(group_id, None)
+        self._groups.pop(group_id, None)
         self._last_start.pop(group_id, None)
         self.aligner.forget_group(group_id)
 
@@ -238,14 +353,14 @@ class StragglerDetector:
                          ) -> Optional[Tuple[Dict[int, float], int]]:
         """Per-rank windowed mean lateness (and instance count) for one
         group, or None below the minimum-evidence thresholds."""
-        ranks = self._late.get(g, {})
-        if len(ranks) < 2:
+        st = self._groups.get(g)
+        if st is None or len(st.order) < 2:
             return None
-        n_inst = min((len(d) for d in ranks.values()), default=0)
+        n_inst = int(st.len_.min())
         if n_inst < self.min_instances:
             return None
-        sums = self._late_sum[g]
-        return {r: sums[r] / len(d) for r, d in ranks.items()}, n_inst
+        means = (st.extras[0] / st.len_).tolist()
+        return dict(zip(st.order, means)), n_inst
 
     def blame_summary(self, g: str) -> Optional[GroupBlame]:
         """Windowed blame state of one group (None below evidence
@@ -254,9 +369,8 @@ class StragglerDetector:
         if win is None:
             return None
         mean_late, n_inst = win
-        wsums, wdeq = self._wait_sum[g], self._wait[g]
-        mean_wait = {r: (wsums[r] / len(wdeq[r]) if wdeq.get(r) else 0.0)
-                     for r in mean_late}
+        st = self._groups[g]
+        mean_wait = dict(zip(st.order, (st.extras[1] / st.len_).tolist()))
         mu = sum(mean_late.values()) / len(mean_late)
         culprit = max(mean_late, key=mean_late.get)
         peers = [w for r, w in mean_wait.items() if r != culprit]
@@ -271,7 +385,7 @@ class StragglerDetector:
     def blame_summaries(self) -> Dict[str, GroupBlame]:
         """Every group currently holding enough windowed evidence."""
         out: Dict[str, GroupBlame] = {}
-        for g in self._late:
+        for g in self._groups:
             s = self.blame_summary(g)
             if s is not None:
                 out[g] = s
@@ -281,7 +395,7 @@ class StragglerDetector:
         """Alerts as a *view* over the windowed blame state: a rank is
         flagged when its mean lateness exceeds mu + k*sigma (or the
         robust median/MAD equivalent) across the group."""
-        groups = [group_id] if group_id else list(self._late)
+        groups = [group_id] if group_id else list(self._groups)
         wins = {}
         for g in groups:
             win = self._window_lateness(g)

@@ -43,6 +43,7 @@ Invariants:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import struct
 import threading
 from collections import OrderedDict
@@ -58,17 +59,21 @@ __all__ = [
     "StringTable", "TraceTables", "ColumnFlameGraph", "ColumnarProfile",
     "ColumnarBatch", "profile_to_columnar", "stacks_profile", "to_columnar",
     "to_dataclasses", "batch_fraction_rows", "TableRemap", "RemapCache",
-    "remap_profile", "encode_batch", "decode_batch",
-    "merged_intervals", "interval_overlap",
+    "remap_profile", "encode_batch", "decode_batch", "WireEncoder",
+    "FLAG_DELTA", "merged_intervals", "interval_overlap",
 ]
 
 WIRE_MAGIC = b"SYTC"
-#: Current wire version.  v2 appends the extended OS counter columns
+#: Current wire version.  v3 compresses every numeric column (zigzag-
+#: delta LEB128 varints for integers, xor-delta varints for floats, with
+#: a raw fallback tag per column) and adds dictionary-delta *session*
+#: frames (``WireEncoder``) that ship each string/stack table entry once
+#: per agent lifetime.  v2 appends the extended OS counter columns
 #: (major_faults, cpu_freq_mhz, pcie_replays, ecc_remapped_rows,
 #: numa_remote_ratio); v1 payloads still decode (extended fields read as
 #: their defaults).  Full byte layout + negotiation rules:
 #: docs/WIRE_FORMAT.md.
-WIRE_VERSION = 2
+WIRE_VERSION = 3
 #: Oldest version this decoder still accepts.
 WIRE_MIN_VERSION = 1
 
@@ -283,6 +288,12 @@ class ColumnFlameGraph:
         """Live {stack id: weight} view (reporting/tests, not hot path)."""
         nz = np.nonzero(self._vec)[0]
         return dict(zip(nz.tolist(), self._vec[nz].tolist()))
+
+    @property
+    def n_live(self) -> int:
+        """Live stack count without materializing the ``counts`` dict —
+        what per-cycle ``stats()`` sums over every rank at fleet scale."""
+        return int(np.count_nonzero(self._vec))
 
     def function_fractions(self) -> Dict[str, float]:
         """Inclusive per-function fractions, keyed by *name* so diffs and
@@ -762,38 +773,199 @@ def remap_profile(p: ColumnarProfile, remap: TableRemap) -> ColumnarProfile:
 # ---------------------------------------------------------------------------
 
 _HDR = struct.Struct("<4sHH")
+#: v3 dictionary-delta session header: nonce, seq, strings_base,
+#: stacks_base (the sender's table watermarks this frame extends).
+_SESSION_HDR = struct.Struct("<QIII")
+#: header flag bit: payload is a session dictionary-delta frame.
+FLAG_DELTA = 0x1
+
+#: per-column compression tags (wire v3 integer/float columns)
+_TAG_RAW = 0
+_TAG_VARINT = 1
+_MAX_VARINT_BYTES = 10
+
+_U8 = np.dtype("u1")
 
 
-def _put_bytes(out: List[bytes], b: bytes) -> None:
-    out.append(struct.pack("<I", len(b)))
-    out.append(b)
+class _Writer:
+    """Append-only binary writer over a (reusable) ``bytearray``.
+
+    Numpy columns are appended via the buffer protocol — ``buf +=
+    memoryview(arr)`` copies column memory straight into the output
+    buffer, with no intermediate per-column ``bytes`` object and no
+    final ``b"".join`` pass (the two extra copies the v2 encoder paid
+    per column).  Hand it a long-lived bytearray (see ``WireEncoder``)
+    and encoding becomes allocation-free in steady state."""
+
+    __slots__ = ("buf",)
+
+    def __init__(self, buf: Optional[bytearray] = None):
+        self.buf = bytearray() if buf is None else buf
+
+    def u8(self, v: int) -> None:
+        self.buf.append(v)
+
+    def u32(self, v: int) -> None:
+        self.buf += struct.pack("<I", v)
+
+    def raw(self, b) -> None:
+        self.buf += b
+
+    def str_(self, s: str) -> None:
+        b = s.encode("utf-8")
+        self.buf += struct.pack("<I", len(b))
+        self.buf += b
+
+    def array(self, a, dtype) -> None:
+        """u32 count + raw little-endian body (the v1/v2 column shape)."""
+        a = np.ascontiguousarray(np.asarray(a), dtype=dtype)
+        self.buf += struct.pack("<I", a.shape[0])
+        self.buf += memoryview(a)
+
+    def array_body(self, a, dtype) -> None:
+        """Raw little-endian body only (count carried elsewhere)."""
+        a = np.ascontiguousarray(np.asarray(a), dtype=dtype)
+        self.buf += memoryview(a)
 
 
-def _put_arr(out: List[bytes], a: np.ndarray, dtype) -> None:
-    a = np.ascontiguousarray(np.asarray(a), dtype=dtype)
-    out.append(struct.pack("<I", a.shape[0]))
-    out.append(a.tobytes())
+# ---------------------------------------------------------------------------
+# v3 column codecs: vectorized LEB128 varint over zigzag deltas
+# ---------------------------------------------------------------------------
 
 
-def _put_offsets(out: List[bytes], lens: List[int]) -> None:
-    off = np.zeros(len(lens) + 1, dtype=np.int64)
-    np.cumsum(np.array(lens, dtype=np.int64), out=off[1:])
-    out.append(off.astype(_I64).tobytes())
+def _varint_encode(u: np.ndarray) -> np.ndarray:
+    """LEB128-encode a uint64 vector, fully vectorized: one comparison
+    pass to size every value, one cumsum for positions, then at most ten
+    masked fill passes (one per byte slot) — no per-value Python loop."""
+    n = u.shape[0]
+    if n == 0:
+        return np.empty(0, dtype=np.uint8)
+    nb = np.ones(n, dtype=np.int64)
+    for k in range(1, _MAX_VARINT_BYTES):
+        nb += u >= (np.uint64(1) << np.uint64(7 * k))
+    pos = np.empty(n, dtype=np.int64)
+    pos[0] = 0
+    np.cumsum(nb[:-1], out=pos[1:])
+    out = np.empty(int(pos[-1] + nb[-1]), dtype=np.uint8)
+    for k in range(_MAX_VARINT_BYTES):
+        sel = np.flatnonzero(nb > k)
+        if sel.shape[0] == 0:
+            break
+        chunk = ((u[sel] >> np.uint64(7 * k))
+                 & np.uint64(0x7F)).astype(np.uint8)
+        cont = (nb[sel] > k + 1).astype(np.uint8) << 7
+        out[pos[sel] + k] = chunk | cont
+    return out
+
+
+def _varint_decode(b: np.ndarray, count: int) -> np.ndarray:
+    """Inverse of :func:`_varint_encode` for exactly ``count`` values.
+    Terminator positions come from one ``flatnonzero`` over the high
+    bit; values are rebuilt with at most ten masked gather/or passes."""
+    if count == 0:
+        if b.shape[0]:
+            raise WireFormatError("varint stream longer than column")
+        return np.empty(0, dtype=np.uint64)
+    ends = np.flatnonzero(b < 0x80)
+    if ends.shape[0] != count or int(ends[-1]) != b.shape[0] - 1:
+        raise WireFormatError("corrupt varint stream")
+    starts = np.empty(count, dtype=np.int64)
+    starts[0] = 0
+    np.add(ends[:-1], 1, out=starts[1:])
+    lens = ends - starts + 1
+    longest = int(lens.max())
+    if longest > _MAX_VARINT_BYTES:
+        raise WireFormatError("varint value overruns 64 bits")
+    out = np.zeros(count, dtype=np.uint64)
+    for k in range(longest):
+        sel = np.flatnonzero(lens > k)
+        out[sel] |= ((b[starts[sel] + k] & 0x7F).astype(np.uint64)
+                     << np.uint64(7 * k))
+    return out
+
+
+def _zigzag(v: np.ndarray) -> np.ndarray:
+    return ((v << 1) ^ (v >> 63)).view(np.uint64)
+
+
+def _unzigzag(u: np.ndarray) -> np.ndarray:
+    return ((u >> np.uint64(1)).view(np.int64)
+            ^ -np.bitwise_and(u, np.uint64(1)).view(np.int64))
+
+
+def _delta(v: np.ndarray) -> np.ndarray:
+    d = np.empty_like(v)
+    d[0] = v[0]
+    np.subtract(v[1:], v[:-1], out=d[1:])        # int64 wraparound is fine:
+    return d                                     # cumsum wraps back exactly
+
+
+def _xor_delta(x: np.ndarray) -> np.ndarray:
+    d = np.empty_like(x)
+    d[0] = x[0]
+    np.bitwise_xor(x[1:], x[:-1], out=d[1:])
+    return d
+
+
+def _put_ivar(w: _Writer, a) -> None:
+    """v3 integer column: u32 count, then tag 0 (raw i64 body) or tag 1
+    (u32 payload size + LEB128 varints of zigzag deltas) — whichever is
+    smaller.  Timestamp-like monotone columns and small-id dictionary
+    columns collapse to ~1-2 bytes/value; adversarial data falls back to
+    raw at zero size penalty beyond the tag byte."""
+    a = np.ascontiguousarray(np.asarray(a), dtype=_I64)
+    n = a.shape[0]
+    w.u32(n)
+    if n == 0:
+        return
+    payload = _varint_encode(_zigzag(_delta(a)))
+    if payload.shape[0] < a.nbytes:
+        w.u8(_TAG_VARINT)
+        w.u32(payload.shape[0])
+        w.raw(memoryview(payload))
+    else:
+        w.u8(_TAG_RAW)
+        w.raw(memoryview(a))
+
+
+def _put_fvar(w: _Writer, a) -> None:
+    """v3 float column: tag 0 (raw f64) or tag 1 (varints of xor-deltas
+    over the u64 bit patterns — bit-lossless, including NaN payloads)."""
+    a = np.ascontiguousarray(np.asarray(a), dtype=_F64)
+    n = a.shape[0]
+    w.u32(n)
+    if n == 0:
+        return
+    payload = _varint_encode(_xor_delta(a.view(np.uint64)))
+    if payload.shape[0] < a.nbytes:
+        w.u8(_TAG_VARINT)
+        w.u32(payload.shape[0])
+        w.raw(memoryview(payload))
+    else:
+        w.u8(_TAG_RAW)
+        w.raw(memoryview(a))
 
 
 class _Reader:
     __slots__ = ("buf", "pos")
 
-    def __init__(self, buf: bytes, pos: int = 0):
+    def __init__(self, buf, pos: int = 0):
         self.buf = buf
         self.pos = pos
+
+    def u8(self) -> int:
+        if self.pos >= len(self.buf):
+            raise WireFormatError("truncated payload")
+        v = self.buf[self.pos]
+        self.pos += 1
+        return v
 
     def u32(self) -> int:
         (v,) = struct.unpack_from("<I", self.buf, self.pos)
         self.pos += 4
         return v
 
-    def raw(self, n: int) -> bytes:
+    def raw(self, n: int):
         b = self.buf[self.pos:self.pos + n]
         if len(b) != n:
             raise WireFormatError("truncated payload")
@@ -801,16 +973,10 @@ class _Reader:
         return b
 
     def str_(self) -> str:
-        return self.raw(self.u32()).decode("utf-8")
+        return bytes(self.raw(self.u32())).decode("utf-8")
 
     def arr(self, dtype) -> np.ndarray:
-        n = self.u32()
-        nbytes = n * dtype.itemsize
-        if self.pos + nbytes > len(self.buf):
-            raise WireFormatError("truncated column")
-        a = np.frombuffer(self.buf, dtype=dtype, count=n, offset=self.pos)
-        self.pos += nbytes
-        return a
+        return self.fixed(self.u32(), dtype)
 
     def fixed(self, n: int, dtype) -> np.ndarray:
         nbytes = n * dtype.itemsize
@@ -821,18 +987,77 @@ class _Reader:
         return a
 
 
-def _encode_string_table(out: List[bytes], strings: List[str]) -> None:
+def _read_ivar(r: _Reader) -> np.ndarray:
+    n = r.u32()
+    if n == 0:
+        return _EMPTY_I
+    tag = r.u8()
+    if tag == _TAG_RAW:
+        return r.fixed(n, _I64)
+    if tag != _TAG_VARINT:
+        raise WireFormatError(f"unknown integer column tag {tag}")
+    payload = r.fixed(r.u32(), _U8)
+    return np.cumsum(_unzigzag(_varint_decode(payload, n)))
+
+
+def _read_fvar(r: _Reader) -> np.ndarray:
+    n = r.u32()
+    if n == 0:
+        return _EMPTY_F
+    tag = r.u8()
+    if tag == _TAG_RAW:
+        return r.fixed(n, _F64)
+    if tag != _TAG_VARINT:
+        raise WireFormatError(f"unknown float column tag {tag}")
+    payload = r.fixed(r.u32(), _U8)
+    bits = np.bitwise_xor.accumulate(_varint_decode(payload, n))
+    return bits.view(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# table serialization (v1/v2 offset-based, v3 varint-length-based)
+# ---------------------------------------------------------------------------
+
+
+def _put_offsets(w: _Writer, lens) -> None:
+    off = np.zeros(len(lens) + 1, dtype=np.int64)
+    np.cumsum(np.asarray(lens, dtype=np.int64), out=off[1:])
+    w.array_body(off, _I64)
+
+
+def _encode_string_table(w: _Writer, strings: List[str]) -> None:
     blobs = [s.encode("utf-8") for s in strings]
-    out.append(struct.pack("<I", len(blobs)))
-    _put_offsets(out, [len(b) for b in blobs])
-    out.append(b"".join(blobs))
+    w.u32(len(blobs))
+    _put_offsets(w, [len(b) for b in blobs])
+    w.raw(b"".join(blobs))
 
 
 def _decode_string_table(r: _Reader) -> List[str]:
     n = r.u32()
     off = r.fixed(n + 1, _I64)
-    blob = r.raw(int(off[-1])) if n else b""
+    blob = bytes(r.raw(int(off[-1]))) if n else b""
     return [blob[off[i]:off[i + 1]].decode("utf-8") for i in range(n)]
+
+
+def _encode_string_table_v3(w: _Writer, strings: List[str]) -> None:
+    blobs = [s.encode("utf-8") for s in strings]
+    w.u32(len(blobs))
+    _put_ivar(w, [len(b) for b in blobs])
+    w.raw(b"".join(blobs))
+
+
+def _decode_string_table_v3(r: _Reader) -> List[str]:
+    n = r.u32()
+    lens = _read_ivar(r)
+    if lens.shape[0] != n:
+        raise WireFormatError("string table length mismatch")
+    blob = bytes(r.raw(int(lens.sum()))) if n else b""
+    out: List[str] = []
+    pos = 0
+    for ln in lens.tolist():
+        out.append(blob[pos:pos + ln].decode("utf-8"))
+        pos += ln
+    return out
 
 
 # extended OS counter fields appended by wire v2, in column order
@@ -845,6 +1070,11 @@ def _has_extended_os(sig: OSSignals) -> bool:
     return any(getattr(sig, f) for f, _dt in _OS_EXT_FIELDS)
 
 
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
 def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
     """Encode a ``ColumnarBatch`` (or ``ProfileBatch``, converted on the
     fly) into the versioned wire format.
@@ -855,12 +1085,21 @@ def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
     growing tables never inflate a small flush.  The referenced-entry
     snapshot also makes encoding safe against concurrent interning into
     shared tables: referenced ids existed when the columns were built,
-    and both backing lists are append-only.
+    and both backing lists are append-only.  (For cross-batch dictionary
+    reuse — ship each table entry once per agent lifetime — use the
+    stateful :class:`WireEncoder` instead.)
 
     ``version`` downlevels the payload for an older decoder (version
     negotiation, docs/WIRE_FORMAT.md): encoding is refused — never
     silently lossy — when the batch carries data the requested version
     cannot represent (non-default extended OS counters need v2)."""
+    w = _Writer()
+    _encode_into(w, batch, version, enc=None)
+    return bytes(w.buf)
+
+
+def _encode_into(w: _Writer, batch, version: int,
+                 enc: Optional["WireEncoder"]) -> Optional[Tuple[int, int]]:
     if not WIRE_MIN_VERSION <= version <= WIRE_VERSION:
         raise WireFormatError(
             f"cannot encode wire version {version} "
@@ -891,58 +1130,105 @@ def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
                                 [intern(k) for k in
                                  sig.softirq_residency]))
 
-    # referenced-only tables -------------------------------------------------
-    stack_used = (np.unique(np.concatenate([p.stack_id for p in ps]))
-                  if ps else _EMPTY_I)
-    frame_ids = np.array(
-        [f for sid in stack_used.tolist() for f in t.stacks[sid]],
-        dtype=np.int64)
-    os_key_ids = np.array([i for _s, irq, soft in os_sigs
-                           for i in irq + soft], dtype=np.int64)
-    id_pools = [group_sids, frame_ids, os_key_ids]
-    if ps:
-        for name in ("stack_kind", "kern_name", "coll_op", "coll_group"):
-            id_pools.append(np.concatenate([getattr(p, name) for p in ps]))
-    str_used = np.unique(np.concatenate(id_pools))
-    g2l = np.full(int(str_used[-1]) + 1 if str_used.size else 0, -1,
-                  dtype=np.int64)
-    g2l[str_used] = np.arange(str_used.shape[0])
-    s2l = np.full(int(stack_used[-1]) + 1 if stack_used.size else 0, -1,
-                  dtype=np.int64)
-    s2l[stack_used] = np.arange(stack_used.shape[0])
+    delta = enc is not None
+    if delta:
+        # session frame: columns carry table-scope ids directly and the
+        # payload ships only the table tail past the session watermarks
+        # — no per-batch repack, dictionaries cross batches.
+        strings_base, stacks_base = enc._strings_sent, enc._stacks_sent
+        strings_hi, stacks_hi = len(t.strings), len(t.stacks)
+        g2l = s2l = None
+    else:
+        # referenced-only tables (stateless frames)
+        stack_used = (np.unique(np.concatenate([p.stack_id for p in ps]))
+                      if ps else _EMPTY_I)
+        frame_ids = np.array(
+            [f for sid in stack_used.tolist() for f in t.stacks[sid]],
+            dtype=np.int64)
+        os_key_ids = np.array([i for _s, irq, soft in os_sigs
+                               for i in irq + soft], dtype=np.int64)
+        id_pools = [group_sids, frame_ids, os_key_ids]
+        if ps:
+            for name in ("stack_kind", "kern_name", "coll_op", "coll_group"):
+                id_pools.append(
+                    np.concatenate([getattr(p, name) for p in ps]))
+        str_used = np.unique(np.concatenate(id_pools))
+        g2l = np.full(int(str_used[-1]) + 1 if str_used.size else 0, -1,
+                      dtype=np.int64)
+        g2l[str_used] = np.arange(str_used.shape[0])
+        s2l = np.full(int(stack_used[-1]) + 1 if stack_used.size else 0, -1,
+                      dtype=np.int64)
+        s2l[stack_used] = np.arange(stack_used.shape[0])
 
-    out: List[bytes] = [_HDR.pack(WIRE_MAGIC, version, 0)]
-    _put_bytes(out, batch.job_id.encode("utf-8"))
-    _put_bytes(out, batch.node_id.encode("utf-8"))
+    w.raw(_HDR.pack(WIRE_MAGIC, version, FLAG_DELTA if delta else 0))
+    w.str_(batch.job_id)
+    w.str_(batch.node_id)
+    if delta:
+        w.raw(_SESSION_HDR.pack(enc._nonce, enc._seq,
+                                strings_base, stacks_base))
 
-    # tables (payload-local id space) ---------------------------------------
+    # tables ----------------------------------------------------------------
     strings = t.strings.strings
-    _encode_string_table(out, [strings[int(i)] for i in str_used.tolist()])
-    out.append(struct.pack("<I", stack_used.shape[0]))
-    _put_offsets(out, [len(t.stacks[int(sid)])
-                       for sid in stack_used.tolist()])
-    out.append(np.ascontiguousarray(g2l[frame_ids], dtype=_U32).tobytes())
+    if version >= 3:
+        if delta:
+            _encode_string_table_v3(w, strings[strings_base:strings_hi])
+            tail = t.stacks[stacks_base:stacks_hi]
+            w.u32(len(tail))
+            _put_ivar(w, [len(fr) for fr in tail])
+            _put_ivar(w, np.array([f for fr in tail for f in fr],
+                                  dtype=np.int64))
+        else:
+            _encode_string_table_v3(
+                w, [strings[int(i)] for i in str_used.tolist()])
+            w.u32(stack_used.shape[0])
+            _put_ivar(w, [len(t.stacks[int(sid)])
+                          for sid in stack_used.tolist()])
+            _put_ivar(w, g2l[frame_ids] if frame_ids.size else frame_ids)
+    else:
+        _encode_string_table(w, [strings[int(i)]
+                                 for i in str_used.tolist()])
+        w.u32(stack_used.shape[0])
+        _put_offsets(w, [len(t.stacks[int(sid)])
+                         for sid in stack_used.tolist()])
+        w.array_body(g2l[frame_ids], _U32)
 
     # per-profile scalars ---------------------------------------------------
     n = len(ps)
-    out.append(struct.pack("<I", n))
-    out.append(_arr_bytes([p.rank for p in ps], _I64))
-    out.append(_arr_bytes([p.iteration for p in ps], _I64))
-    out.append(_arr_bytes(g2l[group_sids] if n else group_sids, _U32))
-    out.append(_arr_bytes([p.iter_time for p in ps], _F64))
+    w.u32(n)
+    groups = group_sids if delta else (g2l[group_sids] if n else group_sids)
+    if version >= 3:
+        _put_ivar(w, [p.rank for p in ps])
+        _put_ivar(w, [p.iteration for p in ps])
+        _put_ivar(w, groups)
+        _put_fvar(w, [p.iter_time for p in ps])
+    else:
+        w.array([p.rank for p in ps], _I64)
+        w.array([p.iteration for p in ps], _I64)
+        w.array(groups, _U32)
+        w.array([p.iter_time for p in ps], _F64)
 
-    # batch-concatenated event columns -------------------------------------
+    # batch-concatenated event columns --------------------------------------
     def block(cols: List[Tuple[str, np.dtype, str]],
               lens: List[int]) -> None:
-        _put_offsets(out, lens)
+        if version >= 3:
+            _put_ivar(w, lens)
+        else:
+            _put_offsets(w, lens)
         for name, dtype, kind in cols:
             cat = (np.concatenate([getattr(p, name) for p in ps]) if ps
                    else np.empty(0, dtype=dtype))
-            if kind == "str":
-                cat = g2l[cat]
-            elif kind == "stack":
-                cat = s2l[cat]
-            out.append(np.ascontiguousarray(cat, dtype=dtype).tobytes())
+            if not delta:
+                if kind == "str":
+                    cat = g2l[cat]
+                elif kind == "stack":
+                    cat = s2l[cat]
+            if version >= 3:
+                if dtype is _F64:
+                    _put_fvar(w, cat)
+                else:
+                    _put_ivar(w, cat)
+            else:
+                w.array_body(cat, dtype)
 
     block([("stack_ts", _F64, "-"), ("stack_weight", _I64, "-"),
            ("stack_kind", _U32, "str"), ("stack_id", _U32, "stack")],
@@ -957,18 +1243,27 @@ def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
           [p.coll_op.shape[0] for p in ps])
 
     # OS signals ------------------------------------------------------------
-    flags = np.array([1 if p.os_signals is not None else 0 for p in ps],
-                     dtype=np.uint8)
-    out.append(flags.tobytes())
+    osflags = np.array([1 if p.os_signals is not None else 0 for p in ps],
+                       dtype=np.uint8)
+    w.raw(memoryview(osflags))
     sigs = [s for s, _irq, _soft in os_sigs]
-    out.append(_arr_bytes([s.rank for s in sigs], _I64))
-    out.append(_arr_bytes([s.timestamp for s in sigs], _F64))
-    out.append(_arr_bytes([s.sched_latency_p99 for s in sigs], _F64))
-    out.append(_arr_bytes([s.numa_migrations for s in sigs], _I64))
-    out.append(_arr_bytes([s.cpu_steal for s in sigs], _F64))
+    base_cols = ((lambda: [s.rank for s in sigs], _I64),
+                 (lambda: [s.timestamp for s in sigs], _F64),
+                 (lambda: [s.sched_latency_p99 for s in sigs], _F64),
+                 (lambda: [s.numa_migrations for s in sigs], _I64),
+                 (lambda: [s.cpu_steal for s in sigs], _F64))
+    for getcol, dtype in base_cols:
+        if version >= 3:
+            (_put_fvar if dtype is _F64 else _put_ivar)(w, getcol())
+        else:
+            w.array(getcol(), dtype)
     if version >= 2:
         for field, vdtype in _OS_EXT_FIELDS:
-            out.append(_arr_bytes([getattr(s, field) for s in sigs], vdtype))
+            col = [getattr(s, field) for s in sigs]
+            if version >= 3:
+                (_put_fvar if vdtype is _F64 else _put_ivar)(w, col)
+            else:
+                w.array(col, vdtype)
     else:
         lossy = [s for s in sigs if _has_extended_os(s)]
         if lossy:
@@ -978,86 +1273,290 @@ def encode_batch(batch, version: int = WIRE_VERSION) -> bytes:
                 f"encode with version >= 2")
     for pick, field, vdtype in ((1, "interrupts", _I64),
                                 (2, "softirq_residency", _F64)):
-        _put_offsets(out, [len(entry[pick]) for entry in os_sigs])
         keys = np.array([i for entry in os_sigs for i in entry[pick]],
                         dtype=np.int64)
+        if not delta and keys.size:
+            keys = g2l[keys]
         vals = [v for entry in os_sigs
                 for v in getattr(entry[0], field).values()]
-        out.append(np.ascontiguousarray(
-            g2l[keys] if keys.size else keys, dtype=_U32).tobytes())
-        out.append(np.array(vals, dtype=vdtype).tobytes())
+        if version >= 3:
+            _put_ivar(w, [len(entry[pick]) for entry in os_sigs])
+            _put_ivar(w, keys)
+            (_put_fvar if vdtype is _F64 else _put_ivar)(w, vals)
+        else:
+            _put_offsets(w, [len(entry[pick]) for entry in os_sigs])
+            w.array_body(keys, _U32)
+            w.array_body(np.asarray(vals, dtype=vdtype), vdtype)
 
-    return b"".join(out)
+    return (strings_hi, stacks_hi) if delta else None
 
 
-def _arr_bytes(values, dtype) -> bytes:
-    a = np.asarray(list(values), dtype=dtype)
-    return struct.pack("<I", a.shape[0]) + a.tobytes()
+# ---------------------------------------------------------------------------
+# stateful encoder: reusable buffer + cross-batch dictionary sessions
+# ---------------------------------------------------------------------------
+
+_nonce_lock = threading.Lock()
+_nonce_iter = itertools.count(1)
 
 
-def decode_batch(data: bytes,
-                 tables: Optional[TraceTables] = None) -> ColumnarBatch:
-    """Decode wire bytes into a ``ColumnarBatch``.
+def _fresh_nonce() -> int:
+    with _nonce_lock:
+        return next(_nonce_iter)
+
+
+@dataclasses.dataclass
+class _WireSession:
+    """Decoder-side state for one encoder session: gather arrays mapping
+    session-scope string/stack ids into the ingesting table set, plus
+    the last applied frame sequence number."""
+    smap: np.ndarray
+    kmap: np.ndarray
+    seq: int
+
+
+class WireEncoder:
+    """Stateful agent-side encoder: a reusable output buffer plus a
+    cross-batch dictionary *session* (wire v3 delta frames).
+
+    Each ``encode()`` writes into the same internal bytearray and
+    returns a ``memoryview`` over it — zero copies between column memory
+    and the upload buffer.  If a receiver still holds ``np.frombuffer``
+    views into the previous frame (in-process ingest), the buffer is
+    pinned by those exports; the encoder detects that via the resize
+    ``BufferError`` probe and rotates to a fresh bytearray
+    (``buf_rotations`` counts how often).  Over a real transport the
+    bytes leave the process and the same buffer is reused forever.
+
+    Dictionary sessions ship every string/stack table entry once per
+    agent lifetime: frame *k* carries only the table tail past the
+    watermarks acknowledged by ``commit()``, and columns carry
+    table-scope ids directly (no per-batch repack).  ``commit()`` is
+    called after a *successful* upload — a failed upload retried before
+    commit re-encodes the identical bytes (same nonce, seq, watermarks).
+    On a receiver-reported session error (``WireFormatError``), call
+    ``reset()``: the next frame opens a new session (fresh nonce, full
+    dictionary), and the decoder starts clean."""
+
+    __slots__ = ("tables", "version", "buf_rotations",
+                 "_buf", "_nonce", "_seq", "_strings_sent", "_stacks_sent",
+                 "_staged")
+
+    def __init__(self, tables: TraceTables, version: int = WIRE_VERSION):
+        if version < 3:
+            raise WireFormatError(
+                "dictionary-delta sessions need wire v3+ "
+                "(use encode_batch for stateless downlevel frames)")
+        if version > WIRE_VERSION:
+            raise WireFormatError(f"cannot encode wire version {version}")
+        self.tables = tables
+        self.version = version
+        self.buf_rotations = 0
+        self._buf = bytearray()
+        self._nonce = _fresh_nonce()
+        self._seq = 0
+        self._strings_sent = 0
+        self._stacks_sent = 0
+        self._staged: Optional[Tuple[int, int]] = None
+
+    @property
+    def nonce(self) -> int:
+        return self._nonce
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    def encode(self, batch: ColumnarBatch) -> memoryview:
+        """Encode one delta frame; returns a view into the reusable
+        buffer (valid until the next ``encode``).  Watermarks advance
+        only on ``commit()``, so re-encoding after a failed upload
+        yields byte-identical output."""
+        if batch.tables is not self.tables:
+            raise ValueError(
+                "WireEncoder is bound to one TraceTables; encode batches "
+                "built over encoder.tables (session ids are table-scoped)")
+        try:
+            del self._buf[:]
+        except BufferError:
+            # receiver-side np.frombuffer views still pin the old frame:
+            # rotate instead of corrupting them
+            self._buf = bytearray()
+            self.buf_rotations += 1
+        w = _Writer(self._buf)
+        self._staged = _encode_into(w, batch, self.version, enc=self)
+        return memoryview(self._buf)
+
+    def commit(self) -> None:
+        """Acknowledge the last encoded frame as delivered: advance the
+        dictionary watermarks and the frame sequence number."""
+        if self._staged is None:
+            return
+        self._strings_sent, self._stacks_sent = self._staged
+        self._seq += 1
+        self._staged = None
+
+    def reset(self) -> None:
+        """Abandon the session (receiver lost state / reported a gap):
+        the next frame is self-contained under a fresh nonce."""
+        self._nonce = _fresh_nonce()
+        self._seq = 0
+        self._strings_sent = 0
+        self._stacks_sent = 0
+        self._staged = None
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def decode_batch(data, tables: Optional[TraceTables] = None,
+                 sessions: Optional[Dict[int, _WireSession]] = None
+                 ) -> ColumnarBatch:
+    """Decode wire bytes (``bytes``, ``bytearray`` or ``memoryview`` —
+    no copy is forced) into a ``ColumnarBatch``.
 
     With ``tables`` (the ingesting service's), every interned column is
     re-mapped into that table with one vectorized gather — profiles come
     out speaking the service's global id space.  Without it, a fresh
-    table set is built from the payload.  Any truncated or corrupt
-    payload raises ``WireFormatError``."""
+    table set is built from the payload.  ``sessions`` is the receiver's
+    dictionary-session store (any mutable mapping), required to decode
+    v3 delta frames that extend an earlier frame's tables; a missing or
+    out-of-sync session raises ``WireFormatError`` (the sender then
+    ``reset()``s and re-opens).  Any truncated or corrupt payload raises
+    ``WireFormatError``."""
     try:
-        return _decode_batch(data, tables)
+        return _decode_batch(data, tables, sessions)
     except WireFormatError:
         raise
     except (struct.error, IndexError, ValueError) as e:
         raise WireFormatError(f"truncated or corrupt payload: {e}") from e
 
 
-def _decode_batch(data: bytes,
-                  tables: Optional[TraceTables]) -> ColumnarBatch:
-    if data[:4] != WIRE_MAGIC:
+def _decode_batch(data, tables: Optional[TraceTables],
+                  sessions: Optional[Dict[int, _WireSession]]
+                  ) -> ColumnarBatch:
+    if bytes(data[:4]) != WIRE_MAGIC:
         raise WireFormatError("bad magic — not a trace batch")
-    _magic, version, _flags = _HDR.unpack_from(data, 0)
+    _magic, version, hdr_flags = _HDR.unpack_from(data, 0)
     if not WIRE_MIN_VERSION <= version <= WIRE_VERSION:
         raise WireFormatError(f"unsupported wire version {version}")
     r = _Reader(data, _HDR.size)
     job_id = r.str_()
     node_id = r.str_()
 
-    strings = _decode_string_table(r)
-    n_stacks = r.u32()
-    stack_off = r.fixed(n_stacks + 1, _I64)
-    stack_flat = r.fixed(int(stack_off[-1]), _U32).astype(np.int64)
-
+    delta = bool(hdr_flags & FLAG_DELTA)
     t = tables if tables is not None else TraceTables()
-    smap = np.array([t.strings.intern(s) for s in strings],
-                    dtype=np.int64) if strings else _EMPTY_I
+    sess: Optional[_WireSession] = None
+    smap0 = kmap0 = _EMPTY_I
+    if delta:
+        if version < 3:
+            raise WireFormatError(
+                f"delta frame flagged on wire v{version} (needs v3)")
+        nonce, seq, strings_base, stacks_base = _SESSION_HDR.unpack_from(
+            data, r.pos)
+        r.pos += _SESSION_HDR.size
+        if strings_base == 0 and stacks_base == 0 and seq == 0:
+            pass                    # session-opening frame: self-contained
+        else:
+            if sessions is None:
+                raise WireFormatError(
+                    "mid-session delta frame but no session store")
+            sess = sessions.get(nonce)
+            if sess is None:
+                raise WireFormatError(f"unknown wire session {nonce}")
+            if seq != sess.seq + 1:
+                raise WireFormatError(
+                    f"session {nonce} sequence gap "
+                    f"(got {seq}, expected {sess.seq + 1})")
+            if (strings_base != sess.smap.shape[0]
+                    or stacks_base != sess.kmap.shape[0]):
+                raise WireFormatError(
+                    f"session {nonce} dictionary gap "
+                    f"(bases {strings_base}/{stacks_base}, have "
+                    f"{sess.smap.shape[0]}/{sess.kmap.shape[0]})")
+            smap0, kmap0 = sess.smap, sess.kmap
+
+    # tables ----------------------------------------------------------------
+    if version >= 3:
+        new_strings = _decode_string_table_v3(r)
+        n_stacks = r.u32()
+        stack_lens = _read_ivar(r)
+        if stack_lens.shape[0] != n_stacks:
+            raise WireFormatError("stack table length mismatch")
+        stack_off = np.zeros(n_stacks + 1, dtype=np.int64)
+        np.cumsum(stack_lens, out=stack_off[1:])
+        stack_flat = _read_ivar(r)
+        if stack_flat.shape[0] != int(stack_off[-1]):
+            raise WireFormatError("stack table frame-id mismatch")
+    else:
+        new_strings = _decode_string_table(r)
+        n_stacks = r.u32()
+        stack_off = r.fixed(n_stacks + 1, _I64)
+        stack_flat = r.fixed(int(stack_off[-1]), _U32).astype(np.int64)
+
+    new_smap = np.array([t.strings.intern(s) for s in new_strings],
+                        dtype=np.int64) if new_strings else _EMPTY_I
+    smap = np.concatenate([smap0, new_smap]) if smap0.size else new_smap
+    if stack_flat.size and (int(stack_flat.min()) < 0
+                            or int(stack_flat.max()) >= smap.shape[0]):
+        raise WireFormatError("stack frame id outside string table")
     flat_mapped = smap[stack_flat] if stack_flat.size else stack_flat
-    kmap = np.array(
+    new_kmap = np.array(
         [t.intern_stack_ids(tuple(int(f) for f in
                                   flat_mapped[stack_off[i]:stack_off[i + 1]]))
          for i in range(n_stacks)], dtype=np.int64) \
         if n_stacks else _EMPTY_I
+    kmap = np.concatenate([kmap0, new_kmap]) if kmap0.size else new_kmap
+    if delta and sessions is not None:
+        if sess is None:
+            sessions[nonce] = _WireSession(smap, kmap, seq)
+        else:
+            sess.smap, sess.kmap, sess.seq = smap, kmap, seq
 
+    # per-profile scalars ---------------------------------------------------
     n = r.u32()
-    ranks = r.arr(_I64)
-    iters = r.arr(_I64)
-    raw_groups = r.arr(_U32)           # always consume, even when n == 0
-    group_sids = smap[raw_groups.astype(np.int64)] if raw_groups.size \
-        else _EMPTY_I
-    iter_times = r.arr(_F64)
+    if version >= 3:
+        ranks = _read_ivar(r)
+        iters = _read_ivar(r)
+        raw_groups = _read_ivar(r)
+        iter_times = _read_fvar(r)
+        if not (ranks.shape[0] == iters.shape[0] == raw_groups.shape[0]
+                == iter_times.shape[0] == n):
+            raise WireFormatError("profile scalar column mismatch")
+        group_sids = smap[raw_groups] if raw_groups.size else _EMPTY_I
+    else:
+        ranks = r.arr(_I64)
+        iters = r.arr(_I64)
+        raw_groups = r.arr(_U32)       # always consume, even when n == 0
+        group_sids = smap[raw_groups.astype(np.int64)] if raw_groups.size \
+            else _EMPTY_I
+        iter_times = r.arr(_F64)
 
     def read_block(specs):
-        off = r.fixed(n + 1, _I64)
+        if version >= 3:
+            lens = _read_ivar(r)
+            if lens.shape[0] != n:
+                raise WireFormatError("event block length mismatch")
+            off = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(lens, out=off[1:])
+        else:
+            off = r.fixed(n + 1, _I64)
         total = int(off[-1])
         cols = []
         for kind, dtype in specs:
-            a = r.fixed(total, dtype)
+            if version >= 3:
+                a = _read_fvar(r) if dtype is _F64 else _read_ivar(r)
+                if a.shape[0] != total:
+                    raise WireFormatError("event column length mismatch")
+            else:
+                a = r.fixed(total, dtype)
+                if dtype is _U32:
+                    a = a.astype(np.int64)
             if kind == "str":
-                a = smap[a.astype(np.int64)] if total else _EMPTY_I
+                a = smap[a] if total else _EMPTY_I
             elif kind == "stack":
-                a = kmap[a.astype(np.int64)] if total else _EMPTY_I
-            elif dtype is _U32:
-                a = a.astype(np.int64)
+                a = kmap[a] if total else _EMPTY_I
             cols.append(a)
         return off, cols
 
@@ -1071,22 +1570,43 @@ def _decode_batch(data: bytes,
          ("i", _I64), ("f", _F64), ("i", _I64), ("i", _I64)])
 
     flags = np.frombuffer(r.raw(n), dtype=np.uint8)
-    os_rank = r.arr(_I64)
-    os_ts = r.arr(_F64)
-    os_sched = r.arr(_F64)
-    os_numa = r.arr(_I64)
-    os_steal = r.arr(_F64)
-    if version >= 2:
-        os_ext = {field: r.arr(dt) for field, dt in _OS_EXT_FIELDS}
-    else:   # v1 payload: extended counters decode as their defaults
-        os_ext = {field: np.zeros(os_rank.shape[0], dtype=dt)
+    if version >= 3:
+        os_rank = _read_ivar(r)
+        os_ts = _read_fvar(r)
+        os_sched = _read_fvar(r)
+        os_numa = _read_ivar(r)
+        os_steal = _read_fvar(r)
+        os_ext = {field: (_read_fvar(r) if dt is _F64 else _read_ivar(r))
                   for field, dt in _OS_EXT_FIELDS}
+    else:
+        os_rank = r.arr(_I64)
+        os_ts = r.arr(_F64)
+        os_sched = r.arr(_F64)
+        os_numa = r.arr(_I64)
+        os_steal = r.arr(_F64)
+        if version >= 2:
+            os_ext = {field: r.arr(dt) for field, dt in _OS_EXT_FIELDS}
+        else:   # v1 payload: extended counters decode as their defaults
+            os_ext = {field: np.zeros(os_rank.shape[0], dtype=dt)
+                      for field, dt in _OS_EXT_FIELDS}
     os_blocks = {}
     for field, vdtype in (("interrupts", _I64), ("softirq_residency", _F64)):
-        noff = r.fixed(len(os_rank) + 1, _I64)
-        keys = r.fixed(int(noff[-1]), _U32)
-        keys = smap[keys.astype(np.int64)] if keys.size else _EMPTY_I
-        vals = r.fixed(int(noff[-1]), vdtype)
+        if version >= 3:
+            klens = _read_ivar(r)
+            if klens.shape[0] != os_rank.shape[0]:
+                raise WireFormatError("OS map length mismatch")
+            noff = np.zeros(klens.shape[0] + 1, dtype=np.int64)
+            np.cumsum(klens, out=noff[1:])
+            keys = _read_ivar(r)
+            vals = (_read_fvar(r) if vdtype is _F64 else _read_ivar(r))
+            if keys.shape[0] != int(noff[-1]) \
+                    or vals.shape[0] != int(noff[-1]):
+                raise WireFormatError("OS map column mismatch")
+        else:
+            noff = r.fixed(len(os_rank) + 1, _I64)
+            keys = r.fixed(int(noff[-1]), _U32).astype(np.int64)
+            vals = r.fixed(int(noff[-1]), vdtype)
+        keys = smap[keys] if keys.size else _EMPTY_I
         os_blocks[field] = (noff, keys, vals)
 
     sget = t.strings.get

@@ -111,3 +111,79 @@ def test_drop_then_flush_keeps_newest():
     assert agent.flush() == 3
     assert svc.seen == [3, 4, 5]
     assert agent.dropped == 3
+
+
+def test_encoded_retry_is_byte_identical_and_allocation_free():
+    """§7 + wire v3: a failed encoded upload re-buffers the already-
+    interned columnar views (no re-interning, no new column arrays) and
+    the retry re-encodes the *identical bytes* — session watermarks only
+    advance on commit, so the receiver can apply either attempt."""
+    from repro.core.trace import ColumnarProfile, decode_batch
+
+    class _FlakyEncoded:
+        def __init__(self):
+            self.frames = []
+            self.fail_next = True
+
+        def ingest_encoded(self, data) -> int:
+            if self.fail_next:
+                self.fail_next = False
+                # capture what the failed attempt would have sent
+                self.failed_frame = bytes(data)
+                raise ConnectionError("upload interrupted")
+            self.frames.append(bytes(data))
+            return 1
+
+    svc = _FlakyEncoded()
+    agent = NodeAgent(AgentConfig(), service=svc)
+    for i in range(3):
+        agent.submit(_profile(i))
+    assert agent.flush() == 0
+    assert agent.upload_failures == 1
+    # what is re-buffered is the interned columnar view, not dataclasses
+    rebuffered = list(agent._buffer)
+    assert all(isinstance(p, ColumnarProfile) for p in rebuffered)
+    assert [p.iteration for p in rebuffered] == [0, 1, 2]
+
+    assert agent.flush() == 3
+    assert agent.uploads == 3 and agent.encoded_uploads == 1
+    # the retry shipped exactly the bytes the failed attempt held
+    assert svc.frames == [svc.failed_frame]
+    # and no new column objects were built for the retry: the encoded
+    # frame decodes back to the same profiles the first attempt carried
+    out = decode_batch(svc.frames[0])
+    assert [p.iteration for p in out.profiles] == [0, 1, 2]
+    # identity: the buffered views were reused, not re-interned copies
+    second = agent._columnar_batch(rebuffered)
+    assert all(a is b for a, b in zip(second.profiles, rebuffered))
+
+
+def test_encoded_session_resync_after_receiver_restart():
+    """A receiver that lost the dictionary session answers with
+    WireFormatError; the agent resets and the next flush opens a fresh
+    self-contained session the new receiver can decode."""
+    from repro.core.service import CentralService
+    from repro.core.trace import WireFormatError
+
+    svc = CentralService()
+    agent = NodeAgent(AgentConfig(), service=svc)
+    agent.submit(_profile(0))
+    assert agent.flush() == 1
+
+    # receiver restarts: fresh service, no session state
+    class _Restarted:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def ingest_encoded(self, data) -> int:
+            return self.inner.ingest_encoded(data)
+
+    agent.service = _Restarted(CentralService())
+    agent.submit(_profile(1))
+    assert agent.flush() == 0                   # mid-session frame refused
+    assert agent.session_resyncs == 1
+    assert agent.upload_failures == 1
+    fresh = CentralService()
+    agent.service = fresh
+    assert agent.flush() == 1                   # self-contained reopen
+    assert agent.session_resyncs == 1

@@ -1,0 +1,212 @@
+"""Hierarchical pod aggregation tier (§5 scale-out): digest merge
+semantics, and the facade-equivalence contract — ``process()`` output,
+published snapshots and the ``audit()`` walk are event-for-event
+identical to the flat ``ShardedService`` with ``n_shards == n_pods``."""
+import numpy as np
+import pytest
+
+from repro.core import simcluster as sc
+from repro.core.aggregate import merge_stack_columns
+from repro.core.pod import (PodAggregator, PodDigest, PodTierService,
+                            merge_digests)
+from repro.core.sharded import ShardedService
+from repro.core.trace import ColumnarBatch, WireEncoder, encode_batch
+
+LAYOUT = [[0, 1, 2, 3, 4, 5, 6, 7], [7, 8, 9, 10, 11, 12, 13, 14]]
+
+
+def _drive(svc, *, session: bool = False, seed: int = 3,
+           layout=LAYOUT, samples: int = 120, iters: int = (30, 30),
+           fault_rank: int = 2):
+    """Cascade fleet over the columnar wire: healthy baseline, then a
+    thermal-throttle root in group 0 that cascades into group 1.  With
+    ``session=True`` uploads ride one persistent WireEncoder session
+    (v3 dictionary-delta frames) instead of stateless frames."""
+    cl = sc.cascade_fleet(layout, links=((0, 1),), seed=seed,
+                          columnar=True, samples_per_iter=samples)
+    for slo in sc.fleet_slos(cl, margin=0.05):
+        svc.register_slo(slo)
+    enc = WireEncoder(cl.tables) if session else None
+
+    def run(iterations):
+        for _ in range(iterations):
+            profiles = cl.step()
+            batch = ColumnarBatch("job-0", profiles, "node-0", cl.tables)
+            if enc is not None:
+                svc.ingest_encoded(enc.encode(batch))
+                enc.commit()
+            else:
+                svc.ingest_encoded(encode_batch(batch))
+            if cl.iteration % 10 == 0:
+                svc.process()
+        svc.process()
+
+    baseline, fault = iters
+    run(baseline)
+    cl.add_fleet_fault(sc.thermal_throttle(rank=fault_rank, start=cl.iteration,
+                                           factor=1.5))
+    run(fault)
+    return cl
+
+
+def _event_keys(svc):
+    """Events minus the wall-clock stamps (detected_at and latency
+    legitimately differ between service instances)."""
+    out = []
+    for e in svc.events:
+        d = e.to_dict()
+        d.pop("detected_at")
+        d.pop("diagnosis_latency_s")
+        out.append(d)
+    return out
+
+
+def _finding_key(f):
+    return (f.breach.slo, f.breach.metric, f.breach.group_id,
+            f.breach.rank, f.breach.value, f.breach.threshold,
+            f.breach.window, f.breach.epoch, f.root_group, f.root_rank,
+            f.root_node, f.root_cause, f.category, f.epoch,
+            tuple(f.evidence["chain"]))
+
+
+@pytest.fixture(scope="module")
+def driven():
+    sharded = ShardedService(n_shards=4)
+    _drive(sharded)
+    pod = PodTierService(n_pods=4, pods_per_shard=2)
+    _drive(pod, session=True)
+    return sharded, pod
+
+
+# ---------------------------------------------------------------------------
+# digest merge semantics
+# ---------------------------------------------------------------------------
+
+def _digest(pod, alerts, summaries, sids, weights):
+    return PodDigest(pod=pod, alerts=list(alerts), summaries=dict(summaries),
+                     groups=len(summaries), ranks=8,
+                     flame_sids=np.asarray(sids, dtype=np.int64),
+                     flame_weights=np.asarray(weights, dtype=np.float64))
+
+
+def test_merge_digests_preserves_pod_order():
+    a = _digest(0, ["a0", "a1"], {"g0": "b0"}, [1, 3], [2.0, 1.0])
+    b = _digest(1, ["b0"], {"g1": "b1", "g0": "b0'"}, [3, 5], [1.0, 4.0])
+    m = merge_digests([a, b])
+    assert m.pod == -1
+    # alerts concatenate in input order — the facade sorts once, at the top
+    assert m.alerts == ["a0", "a1", "b0"]
+    # summaries merge in input order (later pods win shared keys, same as
+    # the flat facade's dict.update walk)
+    assert m.summaries == {"g0": "b0'", "g1": "b1"}
+    assert m.groups == 3 and m.ranks == 16
+    # flame columns: deduplicated union with summed weights
+    assert m.flame_sids.tolist() == [1, 3, 5]
+    assert m.flame_weights.tolist() == [2.0, 2.0, 4.0]
+    assert m.flame_total == pytest.approx(8.0)
+
+
+def test_merge_digests_empty_and_nested():
+    empty = merge_digests([])
+    assert empty.alerts == [] and empty.flame_sids.shape == (0,)
+    assert empty.flame_total == 0.0
+    a = _digest(0, ["x"], {}, [7], [1.5])
+    # merging a merge (the two-level tree) flattens losslessly
+    two_level = merge_digests([merge_digests([a]), empty])
+    flat = merge_digests([a])
+    assert two_level.alerts == flat.alerts
+    assert two_level.flame_sids.tolist() == flat.flame_sids.tolist()
+    assert two_level.flame_weights.tolist() == flat.flame_weights.tolist()
+
+
+def test_pod_flame_columns_match_engine_graphs(driven):
+    _sharded, pod = driven
+    for agg in pod.pods:
+        sids, weights = agg.flame_columns()
+        want = merge_stack_columns(
+            [(fg._vec.nonzero()[0], fg._vec[fg._vec.nonzero()[0]])
+             for fg in agg.engine._rank_fg.values()
+             if getattr(fg, "_vec", None) is not None])
+        assert sids.tolist() == want[0].tolist()
+        np.testing.assert_allclose(weights, want[1])
+
+
+def test_pods_per_shard_validation():
+    with pytest.raises(ValueError):
+        PodTierService(n_pods=4, pods_per_shard=0)
+    # oversized slice clamps to the pod count — one slice
+    svc = PodTierService(n_pods=2, pods_per_shard=64)
+    assert svc.pods_per_shard == 2 and len(svc.pod_slices) == 1
+
+
+# ---------------------------------------------------------------------------
+# facade equivalence: pod tier == flat sharded, events and audit()
+# ---------------------------------------------------------------------------
+
+def test_pod_tier_events_match_sharded(driven):
+    sharded, pod = driven
+    assert _event_keys(pod) == _event_keys(sharded)
+    assert len(pod.events) > 0
+    root_g = None
+    for e in pod.events:
+        if e.root_cause == "thermal_throttling_cpu" or e.straggler_rank == 2:
+            root_g = e.group_id
+            break
+    assert root_g is not None
+
+
+def test_pod_tier_snapshot_matches_sharded(driven):
+    sharded, pod = driven
+    ps, ss = pod.snapshot(), sharded.snapshot()
+    assert ps.epoch == ss.epoch
+    assert ps.group_ids() == ss.group_ids()
+    for g in ps.group_ids():
+        pv, sv = ps.group(g), ss.group(g)
+        assert pv.ranks == sv.ranks
+        assert pv.last_iteration == sv.last_iteration
+        assert pv.waterline_top == sv.waterline_top
+        assert pv.blame == sv.blame
+    assert ps.blame_roots == ss.blame_roots
+
+
+def test_audit_identical_with_and_without_pod_tier(driven):
+    sharded, pod = driven
+    fp = sorted(map(_finding_key, pod.audit()))
+    fs = sorted(map(_finding_key, sharded.audit()))
+    assert fp == fs and len(fp) > 0
+
+
+def test_pod_parallel_matches_serial():
+    serial = PodTierService(n_pods=4, pods_per_shard=2, parallel=False)
+    _drive(serial, iters=(20, 20))
+    par = PodTierService(n_pods=4, pods_per_shard=2, parallel=True)
+    _drive(par, iters=(20, 20))
+    assert _event_keys(par) == _event_keys(serial)
+    assert sorted(map(_finding_key, par.audit())) \
+        == sorted(map(_finding_key, serial.audit()))
+
+
+def test_pod_stats_expose_tier_shape(driven):
+    _sharded, pod = driven
+    stats = pod.stats()
+    assert stats["pods"] == 4
+    assert stats["pod_slices"] == 2
+    # 15 physical ranks, but bridge rank 7 lives in both groups and its
+    # groups route to different pods — each pod counts its own copy
+    assert stats["digest_ranks"] == 16
+    assert stats["digest_stacks"] > 0
+
+
+@pytest.mark.slow
+def test_pod_tier_equivalence_mid_scale():
+    """64 groups x 8 ranks (~512 ranks): the pod path and the flat
+    sharded path still agree event-for-event and audit-for-audit."""
+    layout = [list(range(8 * i, 8 * (i + 1))) for i in range(64)]
+    layout[1][0] = 7                        # bridge rank chains g0 -> g1
+    sharded = ShardedService(n_shards=8)
+    _drive(sharded, layout=layout, samples=40, iters=(12, 12))
+    pod = PodTierService(n_pods=8, pods_per_shard=4, parallel=True)
+    _drive(pod, session=True, layout=layout, samples=40, iters=(12, 12))
+    assert _event_keys(pod) == _event_keys(sharded)
+    assert sorted(map(_finding_key, pod.audit())) \
+        == sorted(map(_finding_key, sharded.audit()))

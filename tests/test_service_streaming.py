@@ -123,8 +123,8 @@ def test_idle_groups_are_evicted():
     assert g not in svc._group_iter_time
     assert not any(gg == g for (gg, _r) in svc._rank_fg)
     assert not any(gg == g for (gg, _r) in svc._latest)
-    assert g not in svc.detector._late
-    assert not any(k[0] == g for k in svc.detector.aligner._resid)
+    assert g not in svc.detector._groups
+    assert g not in svc.detector.aligner._groups
     # a re-appearing group starts clean and is analysed normally again
     cl.run(svc, 20, process_every=10)
     assert g in svc._group_ranks

@@ -105,3 +105,57 @@ def test_instance_separation_concurrent_ops():
     assert len(instances) == 2
     groups = {inst[0].group_id for inst in instances}
     assert groups == {"g1", "g2"}
+
+
+def test_ring_windows_match_bruteforce_after_wrap():
+    """The vectorized per-group ring windows must agree with a
+    brute-force recomputation once columns wrap — including instances
+    covering only a subset of the group's ranks (per-rank cursors stay
+    independent) and the every-``refresh_every`` skew median."""
+    import numpy as np
+
+    window, refresh = 6, 8
+    det = StragglerDetector(window=window, min_instances=2)
+    rng = random.Random(11)
+    members = [4, 0, 9, 2]
+    seen_late = {r: [] for r in members}     # per-rank lateness history
+    seen_resid = {r: [] for r in members}    # per-rank exit residuals
+    cached = {}                              # simulated skew cache
+    since = {r: 0 for r in members}
+    for step in range(40):
+        ranks = list(members)
+        if step % 5 == 3:                    # partial-membership instance
+            ranks = ranks[:3]
+        entries = np.array([step * 1.0 + rng.gauss(0, 1e-3)
+                            for _ in ranks])
+        exits = entries + 5e-3 + np.array([rng.gauss(0, 1e-4)
+                                           for _ in ranks])
+        det.observe_instance_arrays("g", "AllReduce", ranks,
+                                    entries.copy(), exits.copy())
+        # brute-force twin: residual windows + the lazy refresh cadence
+        resid = exits - exits.mean()
+        for r, rv in zip(ranks, resid.tolist()):
+            seen_resid[r].append(rv)
+            since[r] += 1
+            if r not in cached or since[r] >= refresh:
+                win = sorted(seen_resid[r][-window:])
+                cached[r] = win[len(win) // 2]     # k-th smallest
+                since[r] = 0
+        aligned = entries - np.array([cached[r] for r in ranks])
+        lateness = aligned - aligned.mean()
+        for r, lv in zip(ranks, lateness.tolist()):
+            seen_late[r].append(lv)
+
+    gb = det.blame_summary("g")
+    assert gb is not None
+    for r in members:
+        # windows advanced independently per rank (subset instances skip
+        # the absent ranks), so each mean uses that rank's own last
+        # ``window`` observations
+        tail = seen_late[r][-window:]
+        assert gb.lateness[r] == pytest.approx(sum(tail) / len(tail),
+                                               abs=1e-15)
+        assert det.aligner.skew(r, "g") == cached[r]
+    det.forget_group("g")
+    assert det.blame_summary("g") is None
+    assert det.aligner.skew(members[0], "g") == 0.0

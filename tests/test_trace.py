@@ -14,10 +14,10 @@ from repro.core.service import CentralService
 from repro.core.sharded import ShardedService
 from repro.core.trace import (ColumnFlameGraph, ColumnarBatch,
                               ColumnarProfile, TableRemap, TraceTables,
-                              WIRE_VERSION, WireFormatError,
-                              batch_fraction_rows, decode_batch, encode_batch,
-                              profile_to_columnar, remap_profile,
-                              to_columnar, to_dataclasses)
+                              WIRE_MIN_VERSION, WIRE_VERSION, WireEncoder,
+                              WireFormatError, batch_fraction_rows,
+                              decode_batch, encode_batch, profile_to_columnar,
+                              remap_profile, to_columnar, to_dataclasses)
 
 
 def _profile(rank=0, iteration=0, group="g0", with_os=True,
@@ -332,3 +332,183 @@ def test_mixed_representation_group_still_diagnoses():
     assert "nic_softirq_contention" in causes
     assert {e.straggler_rank for e in svc.events
             if e.root_cause == "nic_softirq_contention"} == {4}
+
+
+# -- wire v3: dictionary sessions, negotiation, compressed columns ------------
+
+def _batch_over(tables, profiles, job="job-s", node="node-s"):
+    return ColumnarBatch(job, [profile_to_columnar(p, tables)
+                               for p in profiles], node, tables)
+
+
+def test_wire_v3_session_ships_tables_once():
+    """Frame 2 of a session reuses frame 1's dictionary: it decodes to
+    the same content a stateless frame would, but carries none of the
+    already-shipped strings and is much smaller."""
+    t = TraceTables()
+    enc = WireEncoder(t)
+    sessions = {}
+    dec_tables = TraceTables()
+
+    # a dictionary-heavy workload: 40 distinct stacks of long names
+    deep = tuple(("main", f"layer_{i}_forward", f"op_{i}_fused_longname")
+                 for i in range(40))
+    b1 = _batch_over(t, [_profile(r, 0, frames=deep) for r in range(4)])
+    out1 = decode_batch(bytes(enc.encode(b1)), dec_tables, sessions)
+    assert out1.to_dataclasses() == b1.to_dataclasses()
+    enc.commit()
+    assert enc.seq == 1 and enc.nonce in sessions
+
+    # same shape, next iteration: every string/stack is already shipped
+    b2 = _batch_over(t, [_profile(r, 1, frames=deep) for r in range(4)])
+    frame2 = bytes(enc.encode(b2))
+    out2 = decode_batch(frame2, dec_tables, sessions)
+    enc.commit()
+    assert out2.to_dataclasses() == b2.to_dataclasses()
+    stateless = encode_batch(b2, version=WIRE_VERSION)
+    # the dictionary is gone from frame 2; what remains is event columns
+    # (the full >=3x bytes-per-rank-iteration ratio is gated at fleet
+    # scale by benchmarks/bench_fleet.py)
+    assert len(frame2) < 0.75 * len(stateless)
+    for token in (b"layer_7_forward", b"softmax", b"AllReduce"):
+        assert token in stateless and token not in frame2
+
+    # new strings appear -> only the table *tail* crosses the wire
+    b3 = _batch_over(t, [_profile(0, 2, frames=(("main", "novel_fn"),))])
+    frame3 = bytes(enc.encode(b3))
+    out3 = decode_batch(frame3, dec_tables, sessions)
+    enc.commit()
+    assert out3.to_dataclasses() == b3.to_dataclasses()
+    assert b"novel_fn" in frame3 and b"layer_7_forward" not in frame3
+
+
+def test_wire_v3_reencode_before_commit_is_byte_identical():
+    """The §7 retry contract: a failed upload re-encoded before commit()
+    produces the identical bytes (same nonce, seq, watermarks)."""
+    t = TraceTables()
+    enc = WireEncoder(t)
+    sessions = {}
+    dec = TraceTables()
+    b1 = _batch_over(t, [_profile(0, 0)])
+    decode_batch(bytes(enc.encode(b1)), dec, sessions)
+    enc.commit()
+    b2 = _batch_over(t, [_profile(1, 1)])
+    first = bytes(enc.encode(b2))
+    again = bytes(enc.encode(b2))          # retry: no commit in between
+    assert first == again
+    # and the retried frame still decodes mid-session
+    out = decode_batch(again, dec, sessions)
+    assert out.to_dataclasses() == b2.to_dataclasses()
+
+
+def test_wire_v3_session_gap_detection_and_reset():
+    t = TraceTables()
+    enc = WireEncoder(t)
+    sessions = {}
+    dec = TraceTables()
+    decode_batch(bytes(enc.encode(_batch_over(t, [_profile(0, 0)]))),
+                 dec, sessions)
+    enc.commit()
+    skipped = _batch_over(t, [_profile(0, 1)])
+    enc.encode(skipped)
+    enc.commit()                            # frame never delivered
+    late = bytes(enc.encode(_batch_over(t, [_profile(0, 2)])))
+    with pytest.raises(WireFormatError):    # sequence gap detected
+        decode_batch(late, dec, sessions)
+    # mid-session frame against a decoder with no session state at all
+    with pytest.raises(WireFormatError):
+        decode_batch(late, TraceTables(), {})
+    with pytest.raises(WireFormatError):
+        decode_batch(late, TraceTables(), None)
+    # sender resets: next frame opens a fresh self-contained session
+    old_nonce = enc.nonce
+    enc.reset()
+    assert enc.nonce != old_nonce and enc.seq == 0
+    reopened = _batch_over(t, [_profile(0, 3)])
+    out = decode_batch(bytes(enc.encode(reopened)), dec, sessions)
+    assert out.to_dataclasses() == reopened.to_dataclasses()
+
+
+def test_wire_v3_buffer_rotation_when_views_pin_the_frame():
+    """An in-process receiver holding np.frombuffer views into the last
+    frame pins the encoder's bytearray; the next encode() rotates to a
+    fresh buffer instead of corrupting the views."""
+    t = TraceTables()
+    enc = WireEncoder(t)
+    b1 = _batch_over(t, [_profile(0, 0)])
+    view = enc.encode(b1)                   # hold the memoryview
+    enc.commit()
+    assert enc.buf_rotations == 0
+    frame2 = enc.encode(_batch_over(t, [_profile(0, 1)]))
+    assert enc.buf_rotations == 1
+    assert bytes(view[:4]) == b"SYTC"       # old frame bytes intact
+    view.release()
+    frame2.release()                        # nothing pins the new buffer now
+    enc.commit()
+    enc.encode(_batch_over(t, [_profile(0, 2)])).release()
+    assert enc.buf_rotations == 1           # released -> buffer reused
+
+
+def test_wire_encoder_refuses_downlevel_and_foreign_tables():
+    t = TraceTables()
+    with pytest.raises(WireFormatError):
+        WireEncoder(t, version=2)
+    with pytest.raises(WireFormatError):
+        WireEncoder(t, version=WIRE_VERSION + 1)
+    enc = WireEncoder(t)
+    foreign = _batch_over(TraceTables(), [_profile(0)])
+    with pytest.raises(ValueError):
+        enc.encode(foreign)
+
+
+def test_wire_negotiation_matrix_v1_v2_v3():
+    """Every supported version round-trips the same batch; v1 refuses
+    (never silently drops) extended OS counters, v2+ carry them."""
+    plain = ProfileBatch("j", [
+        IterationProfile(rank=r, iteration=1, group_id="g", iter_time=0.1,
+                         cpu_samples=[StackSample(rank=r, timestamp=0.5,
+                                                  frames=("m", "f"),
+                                                  weight=2, kind="cpu")],
+                         os_signals=OSSignals(rank=r, timestamp=0.6,
+                                              interrupts={"LOC": 10}))
+        for r in range(3)], "n")
+    for v in range(WIRE_MIN_VERSION, WIRE_VERSION + 1):
+        data = encode_batch(plain, version=v)
+        assert data[4] == v                 # least-significant byte of u16
+        assert decode_batch(data).to_dataclasses() == plain
+
+    extended = ProfileBatch("j", [IterationProfile(
+        rank=0, iteration=0, group_id="g", iter_time=0.1,
+        os_signals=OSSignals(rank=0, timestamp=0.0, major_faults=123))], "n")
+    with pytest.raises(WireFormatError):
+        encode_batch(extended, version=1)
+    for v in (2, WIRE_VERSION):
+        assert decode_batch(encode_batch(extended, version=v)) \
+            .to_dataclasses() == extended
+
+    with pytest.raises(WireFormatError):
+        encode_batch(plain, version=0)
+    with pytest.raises(WireFormatError):
+        encode_batch(plain, version=WIRE_VERSION + 1)
+
+
+def test_wire_v3_extreme_columns_round_trip():
+    """Delta+varint integer columns at the wraparound edge and
+    bit-pattern float columns: zero-length, single-event, and max-delta
+    (consecutive values 2**63 apart wrap int64 and cumsum back exactly)."""
+    hi, lo = (1 << 62), -(1 << 62)
+    p = IterationProfile(
+        rank=0, iteration=1 << 40, group_id="g", iter_time=1e-300,
+        collectives=[
+            CollectiveEvent(rank=0, group_id="g", op="P2P", entry=-1e12,
+                            exit=1e12, nbytes=lo, instance=hi, seq=lo),
+            CollectiveEvent(rank=0, group_id="g", op="P2P", entry=1e-12,
+                            exit=5e300, nbytes=hi, instance=lo, seq=hi)])
+    single = ProfileBatch("j", [IterationProfile(
+        rank=1 << 20, iteration=0, group_id="g", iter_time=0.0,
+        kernel_events=[KernelEvent(rank=1 << 20, name="k", start=-0.0,
+                                   duration=float("1e308"))])], "n")
+    for batch in (ProfileBatch("j", [p], "n"), single,
+                  ProfileBatch("j", [], "n")):
+        assert decode_batch(encode_batch(batch, version=WIRE_VERSION)) \
+            .to_dataclasses() == batch
