@@ -1,0 +1,148 @@
+"""Chaos-storm CI gate: verdict stability under sustained adversity.
+
+One pinned seeded storm (``ChaosSchedule.generate``) over an 8-group /
+62-physical-rank bridged fleet, driven through the sharded service
+path, scoring what production actually pays for:
+
+  1. **All true roots localized.**  Five concurrent faults in five
+     groups — three of them flapping on/off, plus two agent dropouts
+     and a mid-storm mitigation blip — must each yield a diagnosis
+     naming exactly their (group, rank, cause), hence their node.
+  2. **Verdict stability.**  The flip rate (emitted cause changes per
+     (group, rank) stream / total events) stays under a pinned
+     threshold, and the flap damper demonstrably suppressed at least
+     one transient flip (a flapping fault's OFF-window fallback).
+  3. **Zero victims cordoned.**  Feeding every emitted event to the
+     ``MitigationPlanner``, every cordon/restart targets a culprit
+     node; dropout (silent-but-healthy) ranks draw no verdict at all.
+  4. **Replay-scored mitigation.**  The what-if replayer approves at
+     least one culprit cordon (residual lateness drops in the forked
+     trial) and rejects a decoy cordon of a healthy node because it
+     would perturb a group the baseline fork found healthy.
+
+The storm is pure data from one seed: re-running this gate replays it
+event-for-event (same injections, same clears, same dropout windows),
+so a score change is a service-behaviour change, never storm luck.
+"""
+from __future__ import annotations
+
+import gc
+from typing import Dict, List, Tuple
+
+from repro.core.chaos import ChaosRunner, ChaosSchedule
+from repro.ft.mitigation import (MitigationAction, MitigationPlanner,
+                                 MitigationReplayer)
+
+STORM_SEED = 9
+FLIP_RATE_MAX = 0.10
+MIN_FLAPPING = 2        # the pinned storm must actually flap
+MIN_DROPOUTS = 2
+
+
+def _bench_layout() -> Tuple[List[List[int]], List[Tuple[int, int]]]:
+    """8 groups x 8 ranks, 62 physical ranks on nodes 0-7: groups 0/1
+    bridge at global rank 7 and groups 2/3 at rank 22 (two independent
+    cascade domains), groups 4-7 are disjoint blocks."""
+    layout = [[0, 1, 2, 3, 4, 5, 6, 7],
+              [7] + list(range(8, 15)),
+              list(range(15, 23)),
+              [22] + list(range(23, 30))]
+    base = 30
+    for _ in range(4):
+        layout.append(list(range(base, base + 8)))
+        base += 8
+    return layout, [(0, 1), (2, 3)]
+
+
+def _storm_gate(out_lines: List[str]) -> Dict[str, float]:
+    layout, links = _bench_layout()
+    sched = ChaosSchedule.generate(
+        STORM_SEED, layout, links, n_faults=5, horizon=120,
+        flap_prob=0.6, n_dropouts=2)
+    n_flapping = sum(r.flapping for r in sched.true_roots)
+    assert len(sched.true_roots) >= 5, sched.true_roots
+    assert n_flapping >= MIN_FLAPPING, (
+        f"pinned storm only flaps {n_flapping} fault(s); re-pin the seed")
+    assert len(sched.dropout_ranks()) >= MIN_DROPOUTS
+    gc.collect()
+    rep = ChaosRunner(sched, "sharded").run()
+
+    # -- 1. every true root localized to its (group, rank, cause) -------
+    assert rep.all_roots_localized, (
+        f"storm roots missed: {[(r.group_index, r.rank, r.cause) for r in rep.missed_roots()]}; "
+        f"causes seen: {sorted({e.root_cause for e in rep.events})}")
+    nodes = sorted({r.node(sched.chips_per_node)
+                    for r in sched.true_roots})
+    out_lines.append(
+        f"chaos_roots_localized,{len(sched.true_roots)},"
+        f"nodes_{'_'.join(map(str, nodes))}_{n_flapping}_flapping")
+
+    # -- 2. verdict stability under flapping ----------------------------
+    stats = rep.service.stats()
+    suppressed = stats.get("verdicts_suppressed", 0)
+    out_lines.append(f"chaos_flip_rate,{rep.flip_rate * 1e4:.0f},"
+                     f"{rep.flips}_flips_{len(rep.events)}_events_"
+                     f"{suppressed:.0f}_suppressed")
+    assert rep.flip_rate <= FLIP_RATE_MAX, (
+        f"verdict flip rate {rep.flip_rate:.3f} over {len(rep.events)} "
+        f"events (gate: <= {FLIP_RATE_MAX})")
+    assert suppressed >= 1, (
+        "flap damper never engaged under a flapping storm — OFF-window "
+        "fallback proposals should have been suppressed")
+
+    # -- 3. zero victims cordoned, silent ranks stay verdict-free -------
+    dropouts = set(sched.dropout_ranks())
+    spurious = [e for e in rep.events if e.straggler_rank in dropouts]
+    assert not spurious, (
+        f"dropout ranks {sorted(dropouts)} drew verdicts: "
+        f"{[(e.group_id, e.root_cause, e.straggler_rank) for e in spurious]}")
+    culprit_nodes = {r.node(sched.chips_per_node)
+                     for r in sched.true_roots}
+    replayer = MitigationReplayer(rep.cluster, margin=0.98)
+    planner = MitigationPlanner(replayer=replayer)
+    for ev in rep.events:
+        planner.on_diagnosis(ev)
+    perturbing = [a for a in planner.actions
+                  if a.kind in ("cordon", "restart_elastic")]
+    wrong = [n for a in perturbing for n in a.target_nodes
+             if n not in culprit_nodes]
+    assert not wrong, (
+        f"victim/healthy node(s) {sorted(set(wrong))} cordoned or "
+        f"restarted (culprit nodes: {sorted(culprit_nodes)})")
+    approved = [a for a in perturbing if a.replay and a.replay.approved]
+    assert approved, "replay approved no culprit action at all"
+    out_lines.append(
+        f"chaos_cordon_safety,{len(perturbing)},"
+        f"{len(approved)}_replay_approved_0_victims")
+
+    # -- 4. replay rejects the decoy that perturbs a healthy group ------
+    healthy_nodes = sorted(set(range(8)) - culprit_nodes)
+    decoy_node = healthy_nodes[-1]
+    rv = replayer.score(MitigationAction(
+        kind="cordon", target_nodes=[decoy_node], plan=None,
+        reason="decoy: cordon a healthy node", source="diagnosis"))
+    assert not rv.approved, (
+        f"replay approved cordoning healthy node {decoy_node}: {rv}")
+    assert rv.perturbed_healthy_groups, (
+        f"decoy rejected, but not for perturbing a healthy group: "
+        f"{rv.reason}")
+    out_lines.append(
+        f"chaos_replay_decoy,{decoy_node},"
+        f"rejected_{len(rv.perturbed_healthy_groups)}_healthy_groups")
+    return {"roots": float(len(sched.true_roots)),
+            "flip_rate": rep.flip_rate,
+            "suppressed": float(suppressed),
+            "approved_actions": float(len(approved))}
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    out_lines.append("# chaos: pinned seeded fault storm — root "
+                     "localization, flip damping, cordon safety, "
+                     "replay-scored mitigation")
+    return _storm_gate(out_lines)
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

@@ -26,6 +26,10 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
                        cycles, cascade root localized, wire v3
                        bytes-per-rank-iteration >=3x under v2, peak RSS
                        per rank
+  bench_chaos        — pinned seeded fault storm (flapping faults,
+                       agent dropouts, mitigation blips): all roots
+                       localized, flip rate under threshold, zero
+                       victims cordoned, replay rejects the decoy
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
 
 Besides the CSV lines on stdout, every run writes ``BENCH_service.json``
@@ -53,6 +57,7 @@ MODULES = [
     "benchmarks.bench_query",
     "benchmarks.bench_trace",
     "benchmarks.bench_fleet",
+    "benchmarks.bench_chaos",
     "benchmarks.bench_roofline",
 ]
 

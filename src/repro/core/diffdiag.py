@@ -44,6 +44,7 @@ from repro.core.scenarios import (CPURules, EXTENDED_SOP_RULES, GPURules,
 __all__ = [
     "Verdict", "SOP_RULES", "classify_functions", "per_kernel_means",
     "gpu_diff", "cpu_diff", "os_diff", "diagnose",
+    "StandingVerdict", "VerdictDamper",
 ]
 
 # Backwards-compatible tuple view of the *default* SOP registration set
@@ -99,6 +100,143 @@ def classify_functions(functions: Sequence[str],
         if all(any(p in fn for fn in functions) for p in rule.pattern):
             return rule.cause, rule.action
     return None
+
+
+# ---------------------------------------------------------------------------
+# verdict flap-damping + confidence decay
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StandingVerdict:
+    """The damper's memory of one (group, rank) diagnosis stream: the
+    cause currently considered standing, how decayed its confidence is,
+    and any not-yet-confirmed flip candidate."""
+    cause: str
+    confidence: float
+    confirmed: int = 1         # cycles the standing cause has been proposed
+    absent: int = 0            # consecutive cycles with no proposal
+    pending_cause: str = ""    # unconfirmed flip candidate
+    pending_count: int = 0     # consecutive cycles the candidate proposed
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"cause": self.cause, "confidence": self.confidence,
+                "confirmed": self.confirmed, "absent": self.absent,
+                "pending_cause": self.pending_cause or None,
+                "pending_count": self.pending_count}
+
+
+class VerdictDamper:
+    """Per-(group, rank) verdict state machine: flap damping and
+    confidence decay (chaos-harness robustness, EROICA's online
+    troubleshooting framing).
+
+    Under a flapping fault the layered walk flickers: during an OFF
+    window the straggler's windowed lateness still alerts, but the
+    latest profiles are healthy, every layer matches, and the network
+    fallback (or a different layer) wins — a verdict *flip* that an
+    un-damped consumer would act on (e.g. cordon a node over a single
+    noisy cycle).  The damper's rules:
+
+      * first diagnosis for a (group, rank): emit immediately and
+        establish the standing verdict (single-incident behaviour is
+        unchanged — every registered scenario emits exactly as before);
+      * proposal matching the standing cause: emit (a refresh), reset
+        absence, restore confidence;
+      * proposal with a DIFFERENT cause: suppressed until it repeats
+        ``confirm`` consecutive cycles; a transient single-cycle
+        anomaly never flips a standing verdict.  A confirmed flip emits
+        carrying ``flap_damping`` evidence (what it replaced, how many
+        cycles were suppressed);
+      * no proposal for a standing (group, rank) this cycle
+        (:meth:`tick`): confidence decays by ``decay`` per absent
+        cycle; after ``retire_after`` absent cycles the standing
+        verdict retires and the next diagnosis starts fresh.
+
+    Determinism: decisions depend only on the proposal stream, so the
+    legacy/streaming/columnar/sharded/pod paths (which feed identical
+    streams per group) damp identically — the scenario-matrix
+    event-for-event equality holds with damping on.
+    """
+
+    def __init__(self, confirm: int = 2, decay: float = 0.7,
+                 retire_after: int = 4):
+        self.confirm = max(1, confirm)
+        self.decay = decay
+        self.retire_after = max(1, retire_after)
+        self._standing: Dict[Tuple[str, Optional[int]], StandingVerdict] = {}
+        self._seen: set = set()
+        self.suppressed = 0        # proposals suppressed as unconfirmed flips
+        self.flips_confirmed = 0   # standing-cause changes that confirmed
+        self.retired = 0           # standings retired by absence decay
+
+    def propose(self, group: str, rank: Optional[int], cause: str,
+                confidence: float) -> Optional[Dict[str, object]]:
+        """One cycle's diagnosis proposal for (group, rank).  Returns
+        None to suppress the emission, or an evidence dict (possibly
+        empty) to attach to the emitted event."""
+        key = (group, rank)
+        self._seen.add(key)
+        st = self._standing.get(key)
+        if st is None:
+            self._standing[key] = StandingVerdict(cause, confidence)
+            return {}
+        if cause == st.cause:
+            st.confirmed += 1
+            st.absent = 0
+            st.confidence = confidence
+            st.pending_cause = ""
+            st.pending_count = 0
+            return {}
+        # flip candidate: hold the standing verdict until confirmed
+        if cause == st.pending_cause:
+            st.pending_count += 1
+        else:
+            st.pending_cause = cause
+            st.pending_count = 1
+        st.absent = 0
+        if st.pending_count >= self.confirm:
+            evidence = {"replaced": st.cause,
+                        "suppressed_cycles": st.pending_count - 1,
+                        "standing_confirmed": st.confirmed}
+            self._standing[key] = StandingVerdict(cause, confidence)
+            self.flips_confirmed += 1
+            return {"flap_damping": evidence}
+        # decay the standing verdict's confidence while contested
+        st.confidence *= self.decay
+        self.suppressed += 1
+        return None
+
+    def tick(self) -> None:
+        """End of one analysis cycle: decay every standing verdict that
+        got no proposal this cycle; retire after ``retire_after``
+        consecutive absent cycles."""
+        gone = []
+        for key, st in self._standing.items():
+            if key in self._seen:
+                continue
+            st.absent += 1
+            st.confidence *= self.decay
+            if st.absent >= self.retire_after:
+                gone.append(key)
+        for key in gone:
+            del self._standing[key]
+            self.retired += 1
+        self._seen.clear()
+
+    def standing(self, group: str, rank: Optional[int]
+                 ) -> Optional[StandingVerdict]:
+        return self._standing.get((group, rank))
+
+    def standing_verdicts(self) -> Dict[Tuple[str, Optional[int]],
+                                        StandingVerdict]:
+        """Live standing verdicts keyed by (group, rank) — the
+        operator's view of what is damped or decaying right now."""
+        return dict(self._standing)
+
+    def forget_group(self, group: str) -> None:
+        for key in [k for k in self._standing if k[0] == group]:
+            del self._standing[key]
 
 
 # ---------------------------------------------------------------------------

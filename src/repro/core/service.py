@@ -60,7 +60,7 @@ from repro.core.attribution import (CASCADE_EXPORT_CAUSE, CascadeExport,
 from repro.core.baseline import BaselineStore, compare_to_baseline
 from repro.core.collective.instances import (separate_instance_indices,
                                              separate_instances)
-from repro.core.diffdiag import Verdict, diagnose
+from repro.core.diffdiag import Verdict, VerdictDamper, diagnose
 from repro.core.events import (CollectiveEvent, IterationProfile,
                                ProfileBatch)
 from repro.core.flamegraph import FlameGraph
@@ -143,7 +143,11 @@ class CentralService(DiagnosisQueryAPI):
                  min_root_lateness: float = 1e-4,
                  chips_per_node: int = 8,
                  retain: int = 512,
-                 publish_stride: int = 1):
+                 publish_stride: int = 1,
+                 flap_damping: bool = True,
+                 flap_confirm: int = 2,
+                 flap_decay: float = 0.7,
+                 flap_retire: int = 4):
         self.symbol_repo = SymbolRepository()
         self.baselines = BaselineStore()
         # rule-set immutability after service start: pin a frozen snapshot
@@ -213,6 +217,17 @@ class CentralService(DiagnosisQueryAPI):
         # node topology for provenance (rank -> node in cascade
         # evidence); mirror it in MitigationPlanner(chips_per_node=...)
         self.chips_per_node = chips_per_node
+        # verdict flap-damping + confidence decay: every would-be
+        # emission is proposed to the damper, which suppresses
+        # unconfirmed cause flips on a standing (group, rank) verdict
+        # and decays standing confidence while a verdict is contested
+        # or absent.  First emissions and steady repeats pass through
+        # unchanged, so single-incident scenarios emit exactly as
+        # without damping (the scenario matrix holds with it on).
+        self.damper: Optional[VerdictDamper] = (
+            VerdictDamper(confirm=flap_confirm, decay=flap_decay,
+                          retire_after=flap_retire)
+            if flap_damping else None)
         self._tl_builder = TimelineBuilder(self.tables)
         # per-collective blame edges drained from the detector on the
         # most recent cycle (bounded); root diagnoses attach their
@@ -343,6 +358,28 @@ class CentralService(DiagnosisQueryAPI):
         self.events.append(ev)
         self._counts[ev.category] += 1
 
+    def _damp(self, ev: Optional[DiagnosticEvent]
+              ) -> Optional[DiagnosticEvent]:
+        """Propose one would-be emission to the verdict damper.  Returns
+        the event (with any flap-damping evidence attached) or None when
+        the damper suppresses it as an unconfirmed flip."""
+        if ev is None or self.damper is None:
+            return ev
+        conf = ev.verdict.confidence if ev.verdict is not None else 1.0
+        info = self.damper.propose(ev.group_id, ev.straggler_rank,
+                                   ev.root_cause, conf)
+        if info is None:
+            return None
+        if info:
+            ev.evidence.update(info)
+        return ev
+
+    def standing_verdicts(self) -> Dict:
+        """Live damped-verdict state keyed by (group, rank) — what an
+        operator dashboard shows as standing/decaying diagnoses."""
+        return (self.damper.standing_verdicts()
+                if self.damper is not None else {})
+
     # -- group lifecycle -----------------------------------------------------
     def evict_group(self, g: str) -> None:
         """Drop every piece of per-group state (job retired or idle past
@@ -364,6 +401,8 @@ class CentralService(DiagnosisQueryAPI):
         self._wl_top_cache.pop(g, None)
         self._drop_group_slos(g)
         self.detector.forget_group(g)
+        if self.damper is not None:
+            self.damper.forget_group(g)
         self.groups_evicted += 1
 
     def _evict_idle_groups(self, now: float) -> None:
@@ -504,7 +543,9 @@ class CentralService(DiagnosisQueryAPI):
                     new_events.append(ev)
             for exp in exports:
                 flagged.add(exp.group_id)
-                new_events.append(self._export_event(exp, t0))
+                ev = self._export_event(exp, t0)
+                if ev:
+                    new_events.append(ev)
         else:
             # pre-attribution pairwise path: diff every alerting rank
             self._evict_idle_groups(t0)
@@ -517,6 +558,9 @@ class CentralService(DiagnosisQueryAPI):
                     new_events.append(ev)
         # 2. uniform-degradation path
         new_events.extend(self._temporal_cycle(flagged, t0))
+        if self.damper is not None:
+            # end of cycle: decay standings that went unrefreshed
+            self.damper.tick()
         self._sequence(new_events, t0)
         for ev in new_events:
             self._record(ev)
@@ -574,13 +618,13 @@ class CentralService(DiagnosisQueryAPI):
                               confidence=0.5,
                               evidence={"lateness": alert.lateness},
                               action="inspect fabric counters / RDMA stats")
-        return DiagnosticEvent(
+        return self._damp(DiagnosticEvent(
             job_id=self._job_by_group.get(g, "job-0"), group_id=g,
             category=self.rules.category_for(verdict.root_cause),
             root_cause=verdict.root_cause, verdict=verdict,
             straggler_rank=rank, detected_at=t0,
             diagnosis_latency_s=time.monotonic() - t0,
-            evidence={"alert": dataclasses.asdict(alert)})
+            evidence={"alert": dataclasses.asdict(alert)}))
 
     def _diagnose_straggler(self, alert: StragglerAlert,
                             t0: float) -> Optional[DiagnosticEvent]:
@@ -649,7 +693,7 @@ class CentralService(DiagnosisQueryAPI):
         return ev
 
     def _export_event(self, exp: CascadeExport,
-                      t0: float) -> DiagnosticEvent:
+                      t0: float) -> Optional[DiagnosticEvent]:
         """Victim-side event for a group whose blame localized in
         another group: no local diagnosis, provenance points at the
         root.  Consumers must not act on the victim (ft/mitigation)."""
@@ -665,7 +709,7 @@ class CentralService(DiagnosisQueryAPI):
                    f"{exp.root_group} (root rank {exp.root_rank})",
             culprit_rank=exp.root_rank, culprit_group=exp.root_group,
             victim_ranks=(exp.via_rank,))
-        return DiagnosticEvent(
+        return self._damp(DiagnosticEvent(
             job_id=self._job_by_group.get(exp.group_id, "job-0"),
             group_id=exp.group_id,
             category=self.rules.category_for(CASCADE_EXPORT_CAUSE),
@@ -673,7 +717,7 @@ class CentralService(DiagnosisQueryAPI):
             straggler_rank=exp.via_rank, detected_at=t0,
             diagnosis_latency_s=time.monotonic() - t0,
             evidence={"exported_to": exp.root_group,
-                      "root_rank": exp.root_rank})
+                      "root_rank": exp.root_rank}))
 
     # -- temporal path -------------------------------------------------------------
     def _check_temporal(self, g: str, times, t0: float
@@ -708,12 +752,12 @@ class CentralService(DiagnosisQueryAPI):
                           evidence={"candidates": [
                               dataclasses.asdict(c) for c in cands[:8]]},
                           action=top.action)
-        return DiagnosticEvent(
+        return self._damp(DiagnosticEvent(
             job_id=job, group_id=g,
             category=self.rules.category_for(cause),
             root_cause=cause, verdict=verdict, straggler_rank=None,
             detected_at=t0, diagnosis_latency_s=time.monotonic() - t0,
-            evidence={"iter_time": (base_time, recent)})
+            evidence={"iter_time": (base_time, recent)}))
 
     def _group_flamegraph(self, g: str) -> Optional[FlameGraph]:
         if self.streaming:
@@ -846,4 +890,10 @@ class CentralService(DiagnosisQueryAPI):
             "baselines": len(self.baselines),
             "groups_evicted": self.groups_evicted,
             "epoch": self._epoch,
+            "verdicts_suppressed": (self.damper.suppressed
+                                    if self.damper else 0),
+            "verdict_flips_confirmed": (self.damper.flips_confirmed
+                                        if self.damper else 0),
+            "verdicts_retired": (self.damper.retired
+                                 if self.damper else 0),
         }

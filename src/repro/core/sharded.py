@@ -196,10 +196,16 @@ class ShardedService(DiagnosisQueryAPI):
         for exp in exports:
             flagged.add(exp.group_id)
             shard = self.shard_for(exp.group_id)
-            emitted.append((shard, shard._export_event(exp, t0)))
+            ev = shard._export_event(exp, t0)
+            if ev:
+                emitted.append((shard, ev))
         for s in self.shards:
             for ev in s._temporal_cycle(flagged, t0):
                 emitted.append((s, ev))
+            if s.damper is not None:
+                # this path bypasses shard.process(), so the facade
+                # drives each shard's per-cycle damper decay
+                s.damper.tick()
         events = [ev for _s, ev in emitted]
         CentralService._sequence(events, t0)
         for shard, ev in emitted:
@@ -295,6 +301,14 @@ class ShardedService(DiagnosisQueryAPI):
             out.extend(s.events)
         out.sort(key=lambda e: e.detected_at)
         return out
+
+    def standing_verdicts(self) -> Dict:
+        """Union of every shard's damped-verdict state (groups partition
+        across shards, so keys never collide)."""
+        merged: Dict = {}
+        for s in self.shards:
+            merged.update(s.standing_verdicts())
+        return merged
 
     def event_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = defaultdict(int)

@@ -135,6 +135,14 @@ class Fault:
       entry_delay    seconds of extra compute before the gradient
                      collective, as a function of the base iteration time
                      (what makes the rank a straggler at the barrier)
+
+    Faults are stateless per step (every hook re-derives its effect from
+    the current iteration), so teardown is exact: once a fault stops
+    applying — ``end_iteration`` reached, or removed via
+    ``SimCluster.remove_fault`` — the very next iteration is
+    baseline-identical at every layer.  That is what makes flapping
+    faults (chaos harness on/off windows) representable as plain
+    inject/remove pairs.
     """
     name: str
     ranks: Sequence[int]               # affected ranks ([] = all)
@@ -144,9 +152,13 @@ class Fault:
     os_effect: Optional[
         Callable[[Dict[str, object], random.Random], None]] = None
     entry_delay: Optional[Callable[[float], float]] = None
+    # first iteration the fault no longer applies (None = open-ended)
+    end_iteration: Optional[int] = None
 
     def applies(self, rank: int, iteration: int) -> bool:
         if iteration < self.start_iteration:
+            return False
+        if self.end_iteration is not None and iteration >= self.end_iteration:
             return False
         return not self.ranks or rank in self.ranks
 
@@ -443,6 +455,43 @@ class SimCluster:
 
     def add_fault(self, fault: Fault) -> None:
         self.faults.append(fault)
+
+    def remove_fault(self, name: str) -> int:
+        """Remove every fault with ``name`` mid-run; returns how many
+        were removed.  Faults are stateless per step, so removal fully
+        restores baseline kernel/OS/stack/entry effects from the next
+        iteration on (the teardown contract the chaos harness's
+        flapping windows rely on)."""
+        kept = [f for f in self.faults if f.name != name]
+        removed = len(self.faults) - len(kept)
+        self.faults = kept
+        return removed
+
+    def clear_faults(self) -> int:
+        """Remove every injected fault; returns how many were removed."""
+        n = len(self.faults)
+        self.faults = []
+        return n
+
+    def fork(self) -> "SimCluster":
+        """Deep-enough copy for what-if replay: the fork steps the same
+        RNG stream forward from the parent's current state, carries its
+        own fault list / skew / imported-delay maps, and SHARES the
+        append-only interning tables and native feed (forks of one
+        fleet intern against one id space, like agents of one node).
+        Stepping the fork never perturbs the parent — the mitigation
+        replayer scores a planned action on a fork before committing."""
+        cl = SimCluster.__new__(SimCluster)
+        cl.__dict__.update(self.__dict__)
+        cl.rng = random.Random()
+        cl.rng.setstate(self.rng.getstate())
+        cl.faults = list(self.faults)
+        cl.rank_ids = list(self.rank_ids)
+        cl.skew = dict(self.skew)
+        cl.imported_delay = dict(self.imported_delay)
+        cl._sid_cache = dict(self._sid_cache)
+        cl._fid_cache = dict(self._fid_cache)
+        return cl
 
     # -- one iteration ---------------------------------------------------------
     def _cpu_rows(self, rank: int) -> List[Tuple[Tuple[str, ...], int]]:
@@ -748,6 +797,27 @@ class MultiGroupSimCluster:
         including a bridge rank's membership in several groups."""
         for g in self.groups:
             g.add_fault(fault)
+
+    def remove_fault(self, name: str,
+                     group_index: Optional[int] = None) -> int:
+        """Remove faults named ``name`` from one group (or, with
+        ``group_index=None``, from every group — the fleet-fault
+        inverse).  Returns the number of fault entries removed."""
+        if group_index is not None:
+            return self.groups[group_index].remove_fault(name)
+        return sum(g.remove_fault(name) for g in self.groups)
+
+    def fork(self) -> "MultiGroupSimCluster":
+        """What-if replay fork: every group forked (own RNG stream /
+        fault list, shared append-only tables), topology copied.  See
+        :meth:`SimCluster.fork`."""
+        fl = MultiGroupSimCluster.__new__(MultiGroupSimCluster)
+        fl.__dict__.update(self.__dict__)
+        fl.groups = [g.fork() for g in self.groups]
+        fl.cascade_links = list(self.cascade_links)
+        fl._shared_ranks = {k: list(v)
+                            for k, v in self._shared_ranks.items()}
+        return fl
 
     def step(self) -> List[IterationProfile]:
         """One synchronous fleet iteration: profiles from every group.

@@ -100,7 +100,7 @@ class _RankRing:
     so growth is one concatenate per group lifetime in practice)."""
 
     __slots__ = ("window", "colmap", "order", "bufs", "extras",
-                 "len_", "pos", "_colcache")
+                 "len_", "pos", "seq", "last", "_colcache")
 
     def __init__(self, window: int, n_bufs: int, n_extras: int):
         self.window = window
@@ -111,6 +111,11 @@ class _RankRing:
         self.extras = [np.empty(0) for _ in range(n_extras)]
         self.len_ = np.empty(0, np.int64)
         self.pos = np.empty(0, np.int64)
+        # group instance counter + per-column last-write stamp: how the
+        # staleness views tell a live column from one whose agent went
+        # dark (the column's multiset freezes but the group moves on)
+        self.seq = 0
+        self.last = np.empty(0, np.int64)
         self._colcache: Dict[Tuple[int, ...], np.ndarray] = {}
 
     def cols(self, ranks: Sequence[int]) -> np.ndarray:
@@ -135,6 +140,10 @@ class _RankRing:
                 zi = np.zeros(extra, np.int64)
                 self.len_ = np.concatenate([self.len_, zi])
                 self.pos = np.concatenate([self.pos, zi])
+                # new columns start at the current instance count: a
+                # rank joining late is fresh, not pre-stale
+                self.last = np.concatenate(
+                    [self.last, np.full(extra, self.seq, np.int64)])
             c = self._colcache[key] = np.fromiter(
                 (cm[r] for r in key), np.int64, len(key))
         return c
@@ -143,6 +152,8 @@ class _RankRing:
         """Move the written columns' ring cursors one row forward."""
         self.pos[cols] = (self.pos[cols] + 1) % self.window
         self.len_[cols] = np.minimum(self.len_[cols] + 1, self.window)
+        self.seq += 1
+        self.last[cols] = self.seq
 
 
 class ClockAligner:
@@ -255,16 +266,28 @@ class StragglerDetector:
 
     def __init__(self, window: int = 100, k: float = 2.0,
                  min_lateness: float = 50e-6, min_instances: int = 8,
-                 robust: bool = False, max_edges: int = 8192):
+                 robust: bool = False, max_edges: int = 8192,
+                 stale_after: Optional[int] = None):
         """``robust=False`` is the paper-faithful mean/std outlier model.
         ``robust=True`` is our beyond-paper variant using median/MAD, which
         keeps power when several ranks degrade together (the paper's §7
         limitation: 2 stragglers among 8 dilute mu and inflate sigma enough
-        that mu+2sigma misses them; the median/MAD score does not)."""
+        that mu+2sigma misses them; the median/MAD score does not).
+
+        ``stale_after`` bounds staleness tolerance for ranks whose agent
+        stopped uploading: a rank more than that many group instances
+        behind the group's latest is excluded from windowed summaries
+        and alerts — its frozen column neither keeps an obsolete alert
+        standing nor (via the min-instances gate) blocks the rest of
+        the group's evidence.  Its ring state is retained, so a
+        resumed agent re-enters the window seamlessly.  Default:
+        ``2 * window`` instances."""
         self.window = window
         self.k = k
         self.min_lateness = min_lateness  # absolute floor (50 us)
         self.min_instances = min_instances
+        self.stale_after = (stale_after if stale_after is not None
+                            else 2 * window)
         self.robust = robust
         self.aligner = ClockAligner(window)
         # per-group ring matrices: bufs=[lateness, wait] per-instance
@@ -349,18 +372,34 @@ class StragglerDetector:
         self.aligner.forget_group(group_id)
 
     # -- windowed views ------------------------------------------------------
+    def _fresh_cols(self, st: _RankRing) -> np.ndarray:
+        """Column indices still inside the bounded-staleness horizon:
+        observed at least once, and not more than ``stale_after`` group
+        instances behind the latest.  When every rank reports every
+        instance (the lockstep common case) this is all columns."""
+        lag = st.seq - st.last
+        return np.nonzero((st.len_ > 0) & (lag <= self.stale_after))[0]
+
     def _window_lateness(self, g: str
                          ) -> Optional[Tuple[Dict[int, float], int]]:
         """Per-rank windowed mean lateness (and instance count) for one
-        group, or None below the minimum-evidence thresholds."""
+        group, or None below the minimum-evidence thresholds.  Stale
+        ranks (agent dark past ``stale_after``) are excluded: the min-
+        instances evidence gate and the means run over live columns
+        only, so one silent agent can't freeze the whole group."""
         st = self._groups.get(g)
         if st is None or len(st.order) < 2:
             return None
-        n_inst = int(st.len_.min())
+        fresh = self._fresh_cols(st)
+        if fresh.shape[0] < 2:
+            return None
+        n_inst = int(st.len_[fresh].min())
         if n_inst < self.min_instances:
             return None
-        means = (st.extras[0] / st.len_).tolist()
-        return dict(zip(st.order, means)), n_inst
+        means = (st.extras[0][fresh] / st.len_[fresh]).tolist()
+        ranks = ([st.order[int(c)] for c in fresh]
+                 if fresh.shape[0] != len(st.order) else st.order)
+        return dict(zip(ranks, means)), n_inst
 
     def blame_summary(self, g: str) -> Optional[GroupBlame]:
         """Windowed blame state of one group (None below evidence
@@ -370,7 +409,9 @@ class StragglerDetector:
             return None
         mean_late, n_inst = win
         st = self._groups[g]
-        mean_wait = dict(zip(st.order, (st.extras[1] / st.len_).tolist()))
+        mean_wait = {r: w for r, w in zip(
+            st.order, (st.extras[1] / np.maximum(st.len_, 1)).tolist())
+            if r in mean_late}
         mu = sum(mean_late.values()) / len(mean_late)
         culprit = max(mean_late, key=mean_late.get)
         peers = [w for r, w in mean_wait.items() if r != culprit]

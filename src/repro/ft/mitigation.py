@@ -14,11 +14,22 @@ service, and emits ordered actions:
 The elastic plan keeps the model axis intact (TP topology is rigid) and
 shrinks data parallelism to the largest feasible divisor — gradient
 accumulation makes up the lost batch.
+
+Replay scoring: a cordon/restart is itself a fleet perturbation (ranks
+stall through process teardown and NCCL re-init), and a *wrong* one
+evicts healthy capacity.  :class:`MitigationReplayer` simulates a
+planned action in a forked ``MultiGroupSimCluster`` before the planner
+commits it: one fork runs untouched (the do-nothing baseline), a second
+fork gets the target nodes' local faults cleared plus the restart
+perturbation charged, and both drive fresh analysis services.  The
+action is approved only when the trial fork ends measurably healthier
+than the baseline AND it perturbs no group that was healthy in the
+baseline run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.service import DiagnosticEvent
 from repro.ft.heartbeat import NodeFailure
@@ -57,19 +68,158 @@ class MitigationAction:
     plan: Optional[ElasticPlan]
     reason: str
     source: str               # heartbeat | diagnosis
+    replay: Optional["ReplayVerdict"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayVerdict:
+    """Outcome of simulating one planned action in a forked cluster."""
+    approved: bool
+    base_residual: float           # end-state alert lateness, do-nothing fork
+    trial_residual: float          # same, action-applied fork
+    cleared_faults: Tuple[str, ...]
+    perturbed_healthy_groups: Tuple[str, ...]
+    reason: str
+
+
+class MitigationReplayer:
+    """Score a planned cordon/restart by what-if replay (chaos gate).
+
+    Both forks start from the live cluster's current RNG/fault state
+    (``MultiGroupSimCluster.fork``), so the replay asks exactly "what
+    would the next ``iterations`` look like with vs. without this
+    action?".  The trial fork models the action's two effects: faults
+    local to the target nodes disappear (the broken hardware leaves the
+    mesh), and :func:`repro.core.chaos.restart_perturbation` charges
+    the restart's own stall to every rank on those nodes.  Residual
+    health is the summed windowed straggler lateness still alerting at
+    the end of each fork's run — a short analysis ``window`` flushes
+    the perturbation out of scope, so a *correct* action converges to
+    ~zero residual while the do-nothing fork keeps alerting.
+    """
+
+    def __init__(self, cluster, *, chips_per_node: int = 8,
+                 iterations: int = 24, process_every: int = 6,
+                 window: int = 8, margin: float = 0.9,
+                 perturb_iters: int = 3, min_root_lateness: float = 5e-4,
+                 registry=None):
+        self.cluster = cluster
+        self.chips_per_node = chips_per_node
+        self.iterations = iterations
+        self.process_every = process_every
+        self.window = window
+        self.margin = margin
+        self.perturb_iters = perturb_iters
+        # a fork's service starts cold (no baselines, short windows), so
+        # its first cycles alert on ~1e-4 scheduling jitter; the floor
+        # sits above that noise and well below any real fault's lateness
+        self.min_root_lateness = min_root_lateness
+        self.registry = registry
+        self.scored: List[ReplayVerdict] = []
+
+    def _fresh_service(self):
+        from repro.core.service import CentralService
+        kwargs = dict(window=self.window,
+                      chips_per_node=self.chips_per_node,
+                      min_root_lateness=self.min_root_lateness)
+        if self.registry is not None:
+            kwargs["registry"] = self.registry
+        return CentralService(**kwargs)
+
+    def _run_fork(self, cl) -> Tuple[float, set]:
+        """Drive one fork; returns (residual, unhealthy group ids).
+        Unhealthy = any diagnosis emitted during the run or any alert
+        still standing at the end."""
+        svc = self._fresh_service()
+        cl.run(svc, self.iterations, process_every=self.process_every)
+        alerts, _ = svc.collect_cycle()
+        residual = sum(a.lateness for a in alerts)
+        unhealthy = {a.group_id for a in alerts}
+        unhealthy.update(e.group_id for e in svc.events)
+        return residual, unhealthy
+
+    def _node_ranks(self, cl, targets: set) -> List[int]:
+        return sorted({r for g in cl.groups for r in g.rank_ids
+                       if r // self.chips_per_node in targets})
+
+    def score(self, action: MitigationAction) -> ReplayVerdict:
+        """Replay one planned action; append + return the verdict."""
+        from repro.core.chaos import restart_perturbation
+        targets = set(action.target_nodes)
+        if action.kind not in ("cordon", "restart_elastic") or not targets:
+            rv = ReplayVerdict(True, 0.0, 0.0, (), (),
+                               "non-perturbing action: no replay needed")
+            self.scored.append(rv)
+            return rv
+        base_res, base_unhealthy = self._run_fork(self.cluster.fork())
+        trial = self.cluster.fork()
+        node_ranks = set(self._node_ranks(trial, targets))
+        # the action's upside: faults living entirely on the target
+        # nodes leave the mesh with them
+        cleared = []
+        for g in trial.groups:
+            for f in list(g.faults):
+                if f.ranks and set(f.ranks) <= node_ranks:
+                    g.remove_fault(f.name)
+                    cleared.append(f.name)
+        # the action's cost: the restart stalls every target-node rank
+        trial.add_fleet_fault(restart_perturbation(
+            "replay/restart", sorted(node_ranks), trial.iteration,
+            duration=self.perturb_iters))
+        trial_res, _ = self._run_fork(trial)
+        # groups the action touches that the baseline run found healthy
+        touched = {g.group_id for g in trial.groups
+                   if node_ranks & set(g.rank_ids)}
+        perturbed_healthy = tuple(sorted(touched - base_unhealthy))
+        if perturbed_healthy:
+            rv = ReplayVerdict(
+                False, base_res, trial_res, tuple(sorted(set(cleared))),
+                perturbed_healthy,
+                f"would perturb healthy group(s) "
+                f"{', '.join(perturbed_healthy)}")
+        elif trial_res < base_res * self.margin:
+            rv = ReplayVerdict(
+                True, base_res, trial_res, tuple(sorted(set(cleared))),
+                (), f"residual lateness {base_res:.2e} -> {trial_res:.2e}")
+        else:
+            rv = ReplayVerdict(
+                False, base_res, trial_res, tuple(sorted(set(cleared))),
+                (), f"no measurable improvement ({base_res:.2e} -> "
+                    f"{trial_res:.2e}, margin {self.margin})")
+        self.scored.append(rv)
+        return rv
 
 
 class MitigationPlanner:
     def __init__(self, data_axis: int = 16, model_axis: int = 16,
                  chips_per_node: int = 8, global_batch: int = 256,
-                 straggler_patience: int = 3):
+                 straggler_patience: int = 3,
+                 replayer: Optional[MitigationReplayer] = None):
         self.data_axis = data_axis
         self.model_axis = model_axis
         self.chips_per_node = chips_per_node
         self.global_batch = global_batch
         self.straggler_patience = straggler_patience
+        self.replayer = replayer
         self._strikes: Dict[int, int] = {}
         self.actions: List[MitigationAction] = []
+
+    def _vet(self, act: MitigationAction) -> MitigationAction:
+        """Replay-score a perturbing action before committing it.  A
+        rejected cordon/restart downgrades to ``observe`` — the verdict
+        stands, the fleet is left alone, the replay evidence rides
+        along for the operator."""
+        if self.replayer is None or act.kind not in ("cordon",
+                                                     "restart_elastic"):
+            return act
+        rv = self.replayer.score(act)
+        if rv.approved:
+            return dataclasses.replace(act, replay=rv)
+        return MitigationAction(
+            kind="observe", target_nodes=[], plan=None,
+            reason=(f"replay rejected {act.kind} of node(s) "
+                    f"{list(act.target_nodes)}: {rv.reason}"),
+            source=act.source, replay=rv)
 
     # ------------------------------------------------------------------
     def on_failures(self, failures: Sequence[NodeFailure]) -> List[MitigationAction]:
@@ -107,19 +257,19 @@ class MitigationPlanner:
         if v is not None and v.culprit_rank is not None:
             rank = v.culprit_rank      # act on the localized culprit
         if ev.category == "gpu_hardware" and rank is not None:
-            out.append(MitigationAction(
+            out.append(self._vet(MitigationAction(
                 kind="cordon", target_nodes=[rank // self.chips_per_node],
-                plan=None, reason=ev.root_cause, source="diagnosis"))
+                plan=None, reason=ev.root_cause, source="diagnosis")))
         elif ev.category == "os_interference" and rank is not None:
             self._strikes[rank] = self._strikes.get(rank, 0) + 1
             if self._strikes[rank] >= self.straggler_patience:
                 plan = plan_remesh(self.data_axis, self.model_axis, 1,
                                    self.chips_per_node, self.global_batch)
-                out.append(MitigationAction(
+                out.append(self._vet(MitigationAction(
                     kind="restart_elastic",
                     target_nodes=[rank // self.chips_per_node], plan=plan,
                     reason=f"persistent straggler: {ev.root_cause}",
-                    source="diagnosis"))
+                    source="diagnosis")))
                 self._strikes[rank] = 0
             else:
                 out.append(MitigationAction(

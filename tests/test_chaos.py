@@ -1,0 +1,441 @@
+"""Chaos harness: seeded storms, fault teardown, flap damping, agent
+dropout resync, simultaneous multi-root provenance, replay-scored
+mitigation (ISSUE: verdict stability under fault storms)."""
+import dataclasses
+
+import pytest
+
+from repro.core.chaos import (CHAOS_SCENARIO_POOL, ChaosEvent, ChaosRunner,
+                              ChaosSchedule, TrueRoot, restart_perturbation)
+from repro.core.diffdiag import VerdictDamper
+from repro.core.service import CentralService
+from repro.core.simcluster import (cascade_fleet, swap_thrash,
+                                   thermal_throttle)
+from repro.ft.mitigation import (MitigationAction, MitigationPlanner,
+                                 MitigationReplayer)
+
+
+def _two_group_layout():
+    return [[0, 1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13, 14, 15]]
+
+
+def _double_bridge_layout():
+    """Five groups: two independent cascade domains (groups 0/1 bridge
+    at global rank 7, groups 2/3 at rank 22) plus a disjoint always-
+    healthy group on node 4 — the decoy target replay scoring must
+    refuse to perturb."""
+    layout = [[0, 1, 2, 3, 4, 5, 6, 7],
+              [7] + list(range(8, 15)),
+              list(range(15, 23)),
+              [22] + list(range(23, 30)),
+              list(range(32, 40))]
+    return layout, [(0, 1), (2, 3)]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: fault teardown fully restores baseline effects
+# ---------------------------------------------------------------------------
+
+
+def test_remove_fault_mid_run_restores_baseline():
+    """Inject two faults, run, clear them by name, then both the
+    cleared fleet and a never-faulted twin must be event-free on fresh
+    services AND back to baseline kernel/OS effects in the raw
+    profiles.  (RNG streams diverge once a fault's os_effect consumes
+    draws, so the contract is event-level + statistical equality, not
+    byte equality.)"""
+    layout = _two_group_layout()
+    cleared = cascade_fleet(layout, [], seed=7)
+    pristine = cascade_fleet(layout, [], seed=7)
+    cleared.add_fault(0, swap_thrash(1, start=5))
+    cleared.add_fault(1, thermal_throttle(9, start=5))
+    for _ in range(25):
+        cleared.step()
+        pristine.step()
+    assert cleared.remove_fault("memory_pressure_swap") == 1
+    assert cleared.remove_fault("gpu_thermal_throttle", group_index=1) == 1
+    assert all(not g.faults for g in cleared.groups)
+
+    # event-equal: fresh services over the next N iterations see two
+    # equally healthy fleets (the floor sits above cold-start jitter)
+    ev_cleared = cleared.run(
+        CentralService(window=20, min_root_lateness=5e-4), 30)
+    ev_pristine = pristine.run(
+        CentralService(window=20, min_root_lateness=5e-4), 30)
+    assert ev_cleared == ev_pristine == []
+
+    # and the raw effects are gone: no major-fault residue, iteration
+    # times statistically at the never-faulted twin's level
+    profs_c = cleared.step()
+    profs_p = pristine.step()
+    assert all(p.os_signals.major_faults < 1000 for p in profs_c)
+    mean_c = sum(p.iter_time for p in profs_c) / len(profs_c)
+    mean_p = sum(p.iter_time for p in profs_p) / len(profs_p)
+    assert mean_c == pytest.approx(mean_p, rel=0.02)
+
+
+def test_fault_end_iteration_expires():
+    f = dataclasses.replace(swap_thrash(2, start=5), end_iteration=9)
+    assert not f.applies(2, 4)          # not started
+    assert f.applies(2, 5)
+    assert f.applies(2, 8)
+    assert not f.applies(2, 9)          # expired (end is exclusive)
+    assert not f.applies(3, 6)          # wrong rank
+
+
+# ---------------------------------------------------------------------------
+# verdict flap damping (unit)
+# ---------------------------------------------------------------------------
+
+
+def test_verdict_damper_suppresses_single_cycle_flip():
+    d = VerdictDamper(confirm=2, decay=0.5, retire_after=2)
+    # first diagnosis emits immediately and stands
+    assert d.propose("g", 1, "cause_a", 1.0) == {}
+    d.tick()
+    # a different cause on one cycle is suppressed, confidence decays
+    assert d.propose("g", 1, "cause_b", 0.9) is None
+    assert d.suppressed == 1
+    st = d.standing("g", 1)
+    assert st.cause == "cause_a"
+    assert st.confidence == pytest.approx(0.5)
+    assert st.pending_cause == "cause_b"
+    d.tick()
+    # the second consecutive cycle confirms the flip, with evidence
+    info = d.propose("g", 1, "cause_b", 0.9)
+    assert info["flap_damping"]["replaced"] == "cause_a"
+    assert info["flap_damping"]["suppressed_cycles"] == 1
+    assert d.flips_confirmed == 1
+    assert d.standing("g", 1).cause == "cause_b"
+    d.tick()                            # proposed this cycle: no decay
+    d.tick()                            # absent 1: decay
+    assert d.standing("g", 1).confidence == pytest.approx(0.45)
+    d.tick()                            # absent 2: retire
+    assert d.standing("g", 1) is None
+    assert d.retired == 1
+    # refresh semantics: same cause restores confidence, no flip
+    d.propose("g2", 0, "x", 1.0)
+    d.tick()
+    d.tick()
+    assert d.propose("g2", 0, "x", 0.8) == {}
+    assert d.standing("g2", 0).confidence == pytest.approx(0.8)
+    assert d.flips_confirmed == 1
+
+
+def test_flapping_fault_does_not_flip_standing_verdict():
+    """A hand-built flap (on at 20, off at 48, on again at 56): the OFF
+    window covers exactly one analysis cycle, so its fallback proposal
+    is a transient single-cycle anomaly — damped, the emitted stream
+    never changes cause, and the root is still localized.  (A longer
+    OFF window spanning ``confirm`` consecutive cycles WOULD flip,
+    by design: sustained changes must get through.)"""
+    layout = _two_group_layout()
+    name = "chaos/gpu_thermal_throttle@g0r1"
+    events = [
+        ChaosEvent(iteration=20, kind="inject", name=name, group_index=0,
+                   fault=dataclasses.replace(thermal_throttle(1, start=20),
+                                             name=name)),
+        ChaosEvent(iteration=48, kind="clear", name=name, group_index=0),
+        ChaosEvent(iteration=56, kind="inject", name=name, group_index=0,
+                   fault=dataclasses.replace(thermal_throttle(1, start=56),
+                                             name=name)),
+    ]
+    roots = [TrueRoot(group_index=0, rank=1, cause="gpu_uniform_slowdown",
+                      scenario="gpu_thermal_throttle",
+                      category="gpu_hardware", flapping=True)]
+    sched = ChaosSchedule(seed=13, layout=tuple(map(tuple, layout)),
+                          links=(), horizon=100, events=events,
+                          true_roots=roots)
+    rep = ChaosRunner(sched, "streaming").run()
+    assert rep.all_roots_localized, rep.missed_roots()
+    assert rep.flips == 0, rep.event_tuples
+    assert rep.service.stats()["verdicts_suppressed"] >= 1
+    causes = {e.root_cause for e in rep.events
+              if e.group_id == rep.cluster.group_ids()[0]}
+    assert causes == {"gpu_uniform_slowdown"}
+
+
+def test_standing_verdicts_exposed_by_services():
+    layout = _two_group_layout()
+    sched = ChaosSchedule.generate(2, layout, n_faults=1, horizon=80,
+                                   flap_prob=1.0, n_dropouts=0,
+                                   n_mitigation_blips=0)
+    rep = ChaosRunner(sched, "sharded").run()
+    standing = rep.service.standing_verdicts()
+    root = sched.true_roots[0]
+    gid = rep.cluster.group_ids()[root.group_index]
+    assert any(k[0] == gid for k in standing), standing
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: agent dropout -> resync -> backfill
+# ---------------------------------------------------------------------------
+
+
+def test_agent_dropout_resync_and_backfill():
+    """One NodeAgent goes silent for 10 iterations while its rank keeps
+    training, and the service loses its wire sessions mid-run.  No
+    WireFormatError escapes flush (agents resync), the silent rank
+    draws no straggler verdict, and its buffered profiles backfill the
+    query snapshot's history on resume."""
+    from repro.core.agent import AgentConfig, NodeAgent
+    from repro.core.simcluster import SimCluster
+
+    cl = SimCluster(n_ranks=4, seed=3, columnar=True)
+    svc = CentralService(window=30, min_root_lateness=5e-4)
+    a_main = NodeAgent(AgentConfig(node_id="node-0"), service=svc)
+    a_r3 = NodeAgent(AgentConfig(node_id="node-1"), service=svc)
+    silent = range(10, 20)
+    for it in range(40):
+        if it == 15:
+            # the service loses every dictionary session: both agents'
+            # next delta frame must trigger a resync, not an escape
+            svc._wire_sessions.clear()
+        for p in cl.step():
+            (a_r3 if p.rank == 3 else a_main).submit(p)
+        a_main.flush()
+        if it not in silent:
+            a_r3.flush()
+        if cl.iteration % 10 == 0:
+            svc.process()
+    # retry the resynced frames until both agents have drained
+    for _ in range(3):
+        a_main.flush()
+        a_r3.flush()
+    svc.process()
+
+    assert a_main.session_resyncs >= 1
+    assert a_r3.session_resyncs >= 1
+    assert a_main.upload_failures >= 1          # the lost-session flush
+    assert not a_main._buffer and not a_r3._buffer
+    assert all(e.straggler_rank != 3 for e in svc.events), [
+        (e.root_cause, e.straggler_rank) for e in svc.events]
+    hv = svc.snapshot().history[(cl.group_id, 3)]
+    got = set(hv.it[:hv.n_it])
+    assert set(silent) <= got, sorted(got)      # backfilled window
+    assert got == set(range(40))                # nothing lost overall
+
+
+def test_chaos_runner_holds_and_backfills_dropout_uploads():
+    layout = _two_group_layout()
+    sched = ChaosSchedule.generate(4, layout, n_faults=1, horizon=70,
+                                   flap_prob=0.0, n_dropouts=1,
+                                   n_mitigation_blips=0)
+    dropped = sched.dropout_ranks()
+    assert len(dropped) == 1
+    rep = ChaosRunner(sched, "streaming").run()
+    assert rep.all_roots_localized, rep.missed_roots()
+    assert all(e.straggler_rank not in set(dropped) for e in rep.events)
+    # the held ring drained: the dropout rank's history has no holes
+    gi = next(i for i, g in enumerate(sched.layout) if dropped[0] in g)
+    gid = rep.cluster.group_ids()[gi]
+    hv = rep.service.snapshot().history[(gid, dropped[0])]
+    assert set(hv.it[:hv.n_it]) == set(range(sched.horizon))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: two simultaneous roots in different groups
+# ---------------------------------------------------------------------------
+
+
+def _two_root_schedule():
+    layout, links = _double_bridge_layout()
+    ev = []
+    for gi, fault, cause, scen, cat in [
+            (0, swap_thrash(1, start=10), "memory_pressure_swap",
+             "memory_pressure_swap", "os_interference"),
+            (2, thermal_throttle(16, start=10), "gpu_uniform_slowdown",
+             "gpu_thermal_throttle", "gpu_hardware")]:
+        name = f"chaos/{scen}@g{gi}"
+        ev.append(ChaosEvent(iteration=10, kind="inject", name=name,
+                             group_index=gi,
+                             fault=dataclasses.replace(fault, name=name)))
+    roots = [TrueRoot(0, 1, "memory_pressure_swap", "memory_pressure_swap",
+                      "os_interference", False),
+             TrueRoot(2, 16, "gpu_uniform_slowdown", "gpu_thermal_throttle",
+                      "gpu_hardware", False)]
+    return ChaosSchedule(seed=21, layout=tuple(map(tuple, layout)),
+                         links=tuple(map(tuple, links)), horizon=80,
+                         events=ev, true_roots=roots)
+
+
+def _empirical_slos(cluster, headroom: float = 7e-4, iters: int = 10):
+    from repro.core.query import SLO
+    pristine = cascade_fleet(
+        [list(g) for g in (cluster.groups[i].rank_ids
+                           for i in range(len(cluster.groups)))],
+        list(cluster.cascade_links), seed=0)
+    sums = {g.group_id: 0.0 for g in pristine.groups}
+    for _ in range(iters):
+        for p in pristine.step():
+            sums[p.group_id] += p.iter_time
+    out = []
+    for g in pristine.groups:
+        mean = sums[g.group_id] / (iters * g.n_ranks)
+        out.append(SLO(name=f"iter-time/{g.group_id}", metric="iter_time",
+                       threshold=mean + headroom, group_id=g.group_id,
+                       window=8))
+    return out
+
+
+def test_two_simultaneous_roots_localized_with_provenance():
+    """Two concurrent roots in different cascade domains: both
+    localized, each victim group's export points at its own root,
+    ``audit()`` walks every breach to the right (node, rank), and the
+    planner never touches a victim node — identically on the central,
+    sharded and pod-tier paths."""
+    from repro.core.attribution import CASCADE_EXPORT_CAUSE
+
+    reports = {p: ChaosRunner(_two_root_schedule(), p).run()
+               for p in ("streaming", "sharded", "pod")}
+    tuples = {p: r.event_tuples for p, r in reports.items()}
+    assert tuples["streaming"] == tuples["sharded"] == tuples["pod"]
+
+    for path, rep in reports.items():
+        gids = rep.cluster.group_ids()
+        assert rep.all_roots_localized, (path, rep.missed_roots())
+        # victim-side provenance: g1 exports blame to g0, g3 to g2
+        exports = {e.group_id: e.verdict.evidence.get("exported_to")
+                   for e in rep.events
+                   if e.root_cause == CASCADE_EXPORT_CAUSE}
+        assert exports == {gids[1]: gids[0], gids[3]: gids[2]}, (path,
+                                                                 exports)
+        # time-travel audit: every SLO breach resolves to a true root.
+        # Thresholds come from a pristine twin fleet (per-group healthy
+        # iteration time + headroom above noise, below the faults'
+        # ~1 ms lateness): the groups' staggered collective phases make
+        # one nominal-base margin meaningless across the fleet.
+        for slo in _empirical_slos(rep.cluster):
+            rep.service.register_slo(slo)
+        findings = rep.service.audit()
+        assert findings, path
+        assert ({(f.root_group, f.root_rank, f.root_node)
+                 for f in findings}
+                == {(gids[0], 1, 0), (gids[2], 16, 2)}), path
+        # victim breaches arrive via a two-hop chain, roots via one-hop
+        chains = {tuple(f.evidence["chain"]) for f in findings}
+        assert (gids[1], gids[0]) in chains, (path, chains)
+        assert (gids[3], gids[2]) in chains, (path, chains)
+        # mitigation only ever touches the two culprit nodes
+        planner = MitigationPlanner()
+        for e in rep.events:
+            planner.on_diagnosis(e)
+        touched = {n for a in planner.actions
+                   if a.kind in ("cordon", "restart_elastic")
+                   for n in a.target_nodes}
+        assert touched <= {0, 2}, (path, planner.actions)
+
+
+# ---------------------------------------------------------------------------
+# replay-scored mitigation
+# ---------------------------------------------------------------------------
+
+
+def test_replayer_approves_culprit_and_rejects_decoy():
+    sched = _two_root_schedule()
+    rep = ChaosRunner(sched, "streaming").run()
+    replayer = MitigationReplayer(rep.cluster, margin=0.98)
+    # cordoning the thermal culprit's node clears its fault and helps
+    rv = replayer.score(MitigationAction(
+        kind="cordon", target_nodes=[2], plan=None,
+        reason="thermal culprit", source="diagnosis"))
+    assert rv.approved, rv
+    assert "chaos/gpu_thermal_throttle@g2" in rv.cleared_faults
+    assert rv.trial_residual < rv.base_residual
+    # cordoning the node of the always-healthy group is vetoed for
+    # perturbing a group the do-nothing fork found healthy
+    rv = replayer.score(MitigationAction(
+        kind="cordon", target_nodes=[4], plan=None,
+        reason="decoy", source="diagnosis"))
+    assert not rv.approved
+    assert rv.perturbed_healthy_groups
+    # non-perturbing kinds pass through without a fork
+    rv = replayer.score(MitigationAction(
+        kind="observe", target_nodes=[], plan=None, reason="",
+        source="diagnosis"))
+    assert rv.approved and rv.reason.startswith("non-perturbing")
+    assert len(replayer.scored) == 3
+
+
+def test_planner_downgrades_replay_rejected_action():
+    sched = _two_root_schedule()
+    rep = ChaosRunner(sched, "streaming").run()
+
+    class VetoAll(MitigationReplayer):
+        def score(self, action):
+            from repro.ft.mitigation import ReplayVerdict
+            rv = ReplayVerdict(False, 1.0, 1.0, (), ("g",), "vetoed")
+            self.scored.append(rv)
+            return rv
+
+    planner = MitigationPlanner(replayer=VetoAll(rep.cluster))
+    for e in rep.events:
+        planner.on_diagnosis(e)
+    perturbing = [a for a in planner.actions
+                  if a.kind in ("cordon", "restart_elastic")]
+    assert not perturbing                        # all downgraded
+    downgraded = [a for a in planner.actions
+                  if a.kind == "observe" and a.replay is not None]
+    assert downgraded and all(not a.replay.approved for a in downgraded)
+    assert all("replay rejected" in a.reason for a in downgraded)
+
+
+# ---------------------------------------------------------------------------
+# schedule generation contracts
+# ---------------------------------------------------------------------------
+
+
+def test_generated_schedule_avoids_bridges_and_victim_groups():
+    layout, links = _double_bridge_layout()
+    sched = ChaosSchedule.generate(6, layout, links, n_faults=3,
+                                   horizon=100, n_dropouts=1)
+    bridges = {7, 22}
+    storm_groups = {r.group_index for r in sched.true_roots}
+    assert len(storm_groups) == 3               # one fault per group
+    for r in sched.true_roots:
+        assert r.rank not in bridges
+        assert r.rank in layout[r.group_index]
+        assert r.scenario in CHAOS_SCENARIO_POOL
+    # dropouts come from storm-free groups and non-culprit ranks
+    culprits = {r.rank for r in sched.true_roots}
+    for dr in sched.dropout_ranks():
+        assert dr not in culprits
+        gi = next(i for i, g in enumerate(layout) if dr in g)
+        assert gi not in storm_groups
+    # flapping faults always end with a live burst (assertable roots)
+    for r in sched.true_roots:
+        if not r.flapping:
+            continue
+        name = f"chaos/{r.scenario}@g{r.group_index}r{r.rank}"
+        last = max((e for e in sched.events if e.name == name),
+                   key=lambda e: e.iteration)
+        assert last.kind == "inject"
+
+
+def test_restart_perturbation_window():
+    f = restart_perturbation("x", [0, 1], start=10, duration=3,
+                             severity=0.2)
+    assert f.entry_delay(0.1) == pytest.approx(0.02)
+    assert not f.applies(0, 9)
+    assert f.applies(0, 10) and f.applies(1, 12)
+    assert not f.applies(0, 13)
+
+
+# ---------------------------------------------------------------------------
+# satellite 6: the long storm stays out of tier-1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_long_storm_1k_ranks():
+    """>=1k ranks, >=200 iterations: six faults (some flapping), two
+    dropouts, columnar path thinned via cluster_kwargs."""
+    layout = [list(range(b, b + 8)) for b in range(0, 1024, 8)]
+    sched = ChaosSchedule.generate(3, layout, [], n_faults=6,
+                                   horizon=200, n_dropouts=2)
+    rep = ChaosRunner(sched, "columnar", process_every=20,
+                      cluster_kwargs={"samples_per_iter": 64}).run()
+    assert rep.all_roots_localized, rep.missed_roots()
+    assert rep.flip_rate <= 0.1, (rep.flips, len(rep.events))
+    dropped = set(sched.dropout_ranks())
+    assert all(e.straggler_rank not in dropped for e in rep.events)
