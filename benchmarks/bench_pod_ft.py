@@ -1,0 +1,199 @@
+"""Pod fault-tolerance CI gate: the collection plane loses workers
+mid-storm and the diagnosis plane must degrade honestly, never wrongly.
+
+One pinned seeded storm (same 8-group / 62-physical-rank bridged fleet
+as ``bench_chaos``) driven through :class:`MultiProcPodService` — the
+pod tier as real OS processes — while 25% of the pod workers (the ones
+owning true-root groups, the worst case) are SIGKILLed mid-storm:
+
+  1. **Degraded window is visible and honest.**  While the killed
+     workers' replacements warm up, snapshot ``coverage_fraction``
+     drops below 1.0 and every verdict emitted in that window carries
+     the ``degraded`` coverage evidence block; ``audit()`` findings
+     surface the same evidence.
+  2. **All true roots still localized.**  Every storm fault ends the
+     run diagnosed at its exact (group, rank, cause) — the kills cost
+     coverage for a window, not conclusions.
+  3. **Zero victims cordoned.**  Feeding every emitted event to the
+     ``MitigationPlanner``, no cordon/restart ever targets a non-culprit
+     node: low-coverage suppression keeps bridge-rank misblame (a dark
+     root pod's cascade walked to the nearest visible rank) out of the
+     event stream entirely.
+  4. **Recovery is complete.**  Each killed worker is respawned by the
+     supervisor, resyncs its wire session (fresh worker answers
+     ``resync``; the facade re-opens its dictionary session), and
+     coverage returns to exactly 1.0 by the horizon.
+"""
+from __future__ import annotations
+
+import gc
+from typing import Dict, List, Tuple
+
+from repro.core.chaos import ChaosEvent, ChaosRunner, ChaosSchedule
+from repro.core.sharded import shard_of
+from repro.core.simcluster import fleet_slos
+from repro.core.trace import WireEncoder
+from repro.ft.mitigation import MitigationPlanner
+
+STORM_SEED = 9
+N_PODS = 8
+KILL_FRACTION = 0.25
+KILL_AT = 58            # mid-storm: every fault onset (25-45) is live
+RESPAWN_WARMUP = 3      # collect cycles a respawned pod stays degraded
+
+
+def _bench_layout() -> Tuple[List[List[int]], List[Tuple[int, int]]]:
+    """Same fleet as bench_chaos: 8 groups x 8 ranks, 62 physical ranks,
+    groups 0/1 bridged at rank 7 and 2/3 at rank 22."""
+    layout = [[0, 1, 2, 3, 4, 5, 6, 7],
+              [7] + list(range(8, 15)),
+              list(range(15, 23)),
+              [22] + list(range(23, 30))]
+    base = 30
+    for _ in range(4):
+        layout.append(list(range(base, base + 8)))
+        base += 8
+    return layout, [(0, 1), (2, 3)]
+
+
+def _with_pod_kills(sched: ChaosSchedule, gids: List[str],
+                    n_kills: int) -> Tuple[ChaosSchedule, List[int]]:
+    """Append SIGKILLs for the first ``n_kills`` distinct pods that own
+    a true-root group — killing exactly the workers whose telemetry the
+    storm's conclusions depend on."""
+    kill_pods: List[int] = []
+    for root in sched.true_roots:
+        pod = shard_of(gids[root.group_index], N_PODS)
+        if pod not in kill_pods:
+            kill_pods.append(pod)
+        if len(kill_pods) == n_kills:
+            break
+    assert len(kill_pods) == n_kills, (
+        f"storm roots span only {len(kill_pods)} pods; re-pin the seed")
+    events = list(sched.events) + [
+        ChaosEvent(iteration=KILL_AT, kind="pod_kill",
+                   name=f"bench/pod_kill-{p}", pod=p)
+        for p in kill_pods]
+    return ChaosSchedule(
+        seed=sched.seed, layout=sched.layout, links=sched.links,
+        horizon=sched.horizon, events=events,
+        true_roots=sched.true_roots,
+        chips_per_node=sched.chips_per_node), kill_pods
+
+
+def _storm_gate(out_lines: List[str]) -> Dict[str, float]:
+    layout, links = _bench_layout()
+    base = ChaosSchedule.generate(
+        STORM_SEED, layout, links, n_faults=5, horizon=120,
+        flap_prob=0.6, n_dropouts=0, n_mitigation_blips=0)
+    n_kills = int(N_PODS * KILL_FRACTION)
+    gc.collect()
+    runner = ChaosRunner(base, "podproc", n_shards=N_PODS,
+                         service_kwargs={"respawn_warmup": RESPAWN_WARMUP})
+    try:
+        cl, svc = runner.cluster, runner.service
+        sched, kill_pods = _with_pod_kills(base, cl.group_ids(), n_kills)
+        runner.schedule = sched
+        # per-group iteration-time SLOs: storm faults breach them, and
+        # every breach audits down to its root — the walk that must
+        # carry the degraded coverage evidence while pods are dark
+        for slo in fleet_slos(cl, margin=0.05):
+            svc.register_slo(slo)
+        enc = WireEncoder(cl.tables)
+        emitted: List = []
+        degraded_cycles = annotated = audit_cov = 0
+        min_cov = 1.0
+        for it in range(sched.horizon):
+            released: List[int] = []
+            for ev in sched.events_at(it):
+                runner._apply(ev, released)
+            runner._ingest(cl.step(), enc)
+            if cl.iteration % runner.process_every == 0:
+                evs = svc.process()
+                emitted.extend(evs)
+                st = svc.stats()
+                cov = st["coverage_fraction"]
+                if cov < 1.0:
+                    degraded_cycles += 1
+                    min_cov = min(min_cov, cov)
+                    annotated += sum(
+                        1 for e in evs if "coverage" in e.evidence)
+                    audit_cov += sum(
+                        1 for f in svc.audit()
+                        if "coverage" in f.evidence)
+        emitted.extend(svc.process())
+        rep = runner._report(emitted)
+        st = svc.stats()
+    finally:
+        runner.close()
+
+    # -- 1. the degraded window is visible and honest -------------------
+    assert degraded_cycles >= 1, (
+        f"killing pods {kill_pods} never degraded coverage")
+    assert annotated >= 1, (
+        "no verdict emitted under partial coverage carried the "
+        "degraded coverage evidence block")
+    assert audit_cov >= 1, (
+        "audit() surfaced no finding with degraded coverage evidence")
+    out_lines.append(
+        f"pod_ft_degraded_window,{degraded_cycles},"
+        f"min_cov_{min_cov:.2f}_{annotated}_annotated_"
+        f"{audit_cov}_audit_flagged")
+
+    # -- 2. every true root still localized -----------------------------
+    assert rep.all_roots_localized, (
+        f"roots missed after pod kills: "
+        f"{[(r.group_index, r.rank, r.cause) for r in rep.missed_roots()]}")
+    nodes = sorted({r.node(sched.chips_per_node)
+                    for r in sched.true_roots})
+    out_lines.append(
+        f"pod_ft_roots_localized,{len(sched.true_roots)},"
+        f"{n_kills}_pods_killed_nodes_{'_'.join(map(str, nodes))}")
+
+    # -- 3. zero victims / healthy nodes cordoned -----------------------
+    culprit_nodes = {r.node(sched.chips_per_node)
+                     for r in sched.true_roots}
+    planner = MitigationPlanner()
+    for ev in rep.events:
+        planner.on_diagnosis(ev)
+    perturbing = [a for a in planner.actions
+                  if a.kind in ("cordon", "restart_elastic")]
+    wrong = [n for a in perturbing for n in a.target_nodes
+             if n not in culprit_nodes]
+    assert not wrong, (
+        f"victim/healthy node(s) {sorted(set(wrong))} cordoned under "
+        f"pod loss (culprit nodes: {sorted(culprit_nodes)})")
+    suppressed = st["suppressed_low_coverage"]
+    out_lines.append(
+        f"pod_ft_cordon_safety,{len(perturbing)},"
+        f"0_victims_{suppressed:.0f}_low_coverage_suppressed")
+
+    # -- 4. full recovery: respawn + session resync + coverage 1.0 ------
+    assert st["pod_respawns"] >= n_kills, (
+        f"only {st['pod_respawns']:.0f} respawns for {n_kills} kills")
+    assert st["session_resyncs"] >= 1, (
+        "no wire session resync — respawned workers never re-opened "
+        "their upload sessions")
+    assert st["coverage_fraction"] == 1.0, (
+        f"coverage never recovered: {st['coverage_fraction']:.3f}")
+    out_lines.append(
+        f"pod_ft_recovery,{st['pod_respawns']:.0f},"
+        f"{st['session_resyncs']:.0f}_resyncs_cov_1.00")
+    return {"degraded_cycles": float(degraded_cycles),
+            "min_coverage": min_cov,
+            "roots": float(len(sched.true_roots)),
+            "respawns": st["pod_respawns"],
+            "suppressed": suppressed}
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    out_lines.append("# pod_ft: 25% of pod workers SIGKILLed mid-storm "
+                     "— degraded-mode honesty, root localization, "
+                     "cordon safety, full recovery")
+    return _storm_gate(out_lines)
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

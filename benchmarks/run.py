@@ -30,6 +30,11 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
                        agent dropouts, mitigation blips): all roots
                        localized, flip rate under threshold, zero
                        victims cordoned, replay rejects the decoy
+  bench_pod_ft       — multi-process pod tier under pod loss: 25% of
+                       pod workers SIGKILLed mid-storm — degraded
+                       window visible (coverage + annotations), all
+                       roots still localized, zero victims cordoned,
+                       respawn + session resync restores coverage 1.0
   bench_roofline     — EXPERIMENTS §Roofline table from the dry-run
 
 Besides the CSV lines on stdout, every run writes ``BENCH_service.json``
@@ -58,6 +63,7 @@ MODULES = [
     "benchmarks.bench_trace",
     "benchmarks.bench_fleet",
     "benchmarks.bench_chaos",
+    "benchmarks.bench_pod_ft",
     "benchmarks.bench_roofline",
 ]
 

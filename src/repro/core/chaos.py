@@ -71,6 +71,13 @@ class ChaosEvent:
     * ``agent_down`` / ``agent_up`` — global rank ``rank`` stops /
       resumes uploading (held profiles backfill on resume)
     * ``mitigate`` — fleet-wide :func:`restart_perturbation`
+    * ``pod_kill`` / ``pod_slow`` — collection-plane fault against pod
+      ``pod``: the pod worker dies (state loss; the supervisor respawns
+      it) or wedges (misses every collect deadline).  ``pod_up`` clears
+      a ``pod_slow`` (a killed pod heals through supervision).  These
+      target the *diagnosis system*, not the fleet: on service paths
+      without a pod tier they are no-ops by design, so a storm with pod
+      faults still replays on every path.
     """
     iteration: int
     kind: str
@@ -78,6 +85,7 @@ class ChaosEvent:
     group_index: Optional[int] = None
     rank: Optional[int] = None
     fault: Optional[Fault] = None
+    pod: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +138,10 @@ class ChaosSchedule:
                  dropout_at: Tuple[int, int] = (20, 35),
                  dropout_len: Tuple[int, int] = (5, 9),
                  n_mitigation_blips: int = 1,
+                 n_pod_faults: int = 0, n_pods: int = 0,
+                 pod_fault_at: Tuple[int, int] = (55, 70),
+                 pod_fault_len: Tuple[int, int] = (10, 18),
+                 pod_kill_prob: float = 0.5,
                  chips_per_node: int = 8,
                  pool: Sequence[str] = CHAOS_SCENARIO_POOL,
                  registry=None) -> "ChaosSchedule":
@@ -145,7 +157,12 @@ class ChaosSchedule:
         end.  Dropout ranks come from storm-free groups so a silent
         agent is unambiguously healthy.  Mitigation blips charge a
         :func:`restart_perturbation` to one culprit's node mid-run —
-        the operator poking the fleet while it is already on fire."""
+        the operator poking the fleet while it is already on fire.
+        With ``n_pod_faults > 0`` (requires ``n_pods``) the storm also
+        attacks the collection plane: distinct pods get killed
+        (``pod_kill_prob``) or wedged mid-storm, each followed by a
+        ``pod_up`` after ``pod_fault_len`` iterations — the diagnosis
+        system being diagnosed while parts of it are down."""
         from repro.core.scenarios import default_registry
         registry = registry if registry is not None else default_registry()
         by_name = {s.name: s for s in registry.scenarios}
@@ -233,6 +250,24 @@ class ChaosSchedule:
                 fault=restart_perturbation(
                     f"chaos/mitigate-node{node}#{k}", node_ranks, at,
                     duration=2, severity=0.05)))
+        # collection-plane faults: kill/wedge distinct pod workers
+        if n_pod_faults:
+            if n_pod_faults > n_pods:
+                raise ValueError(
+                    f"n_pod_faults={n_pod_faults} needs n_pods >= that "
+                    f"(got {n_pods}): one fault per distinct pod")
+            for k, pod in enumerate(sorted(
+                    rng.sample(range(n_pods), n_pod_faults))):
+                kind = ("pod_kill" if rng.random() < pod_kill_prob
+                        else "pod_slow")
+                at = rng.randint(*pod_fault_at)
+                events.append(ChaosEvent(
+                    iteration=at, kind=kind,
+                    name=f"chaos/{kind}-pod{pod}#{k}", pod=pod))
+                events.append(ChaosEvent(
+                    iteration=at + rng.randint(*pod_fault_len),
+                    kind="pod_up",
+                    name=f"chaos/{kind}-pod{pod}#{k}", pod=pod))
         return cls(seed=seed,
                    layout=tuple(tuple(g) for g in layout),
                    links=tuple(tuple(l) for l in links),
@@ -281,16 +316,19 @@ class ChaosRunner:
                  cluster_kwargs: Optional[Dict] = None):
         from repro.core.scenarios import default_registry
         from repro.core.simcluster import SERVICE_PATHS
-        if path not in SERVICE_PATHS:
+        # "podproc" — the pod tier over real OS processes — is a chaos/
+        # bench-only path: it is deliberately not in SERVICE_PATHS so
+        # the scenario matrix stays fork-free and fast.
+        if path not in SERVICE_PATHS + ("podproc",):
             raise ValueError(
                 f"unknown service path {path!r}; choose from "
-                f"{SERVICE_PATHS}")
+                f"{SERVICE_PATHS + ('podproc',)}")
         self.schedule = schedule
         self.path = path
         self.process_every = process_every
         self.registry = (registry if registry is not None
                          else default_registry())
-        columnar = path in ("columnar", "pod")
+        columnar = path in ("columnar", "pod", "podproc")
         # cluster_kwargs lets scale tests thin the simulation (e.g.
         # samples_per_iter=64 for a 1k-rank storm) without a new path
         self.cluster = cascade_fleet(
@@ -307,7 +345,7 @@ class ChaosRunner:
 
     @staticmethod
     def _make_service(path: str, n_shards: int, kwargs: Dict):
-        from repro.core.pod import PodTierService
+        from repro.core.pod import MultiProcPodService, PodTierService
         from repro.core.service import CentralService
         from repro.core.sharded import ShardedService
         if path == "legacy":
@@ -316,7 +354,16 @@ class ChaosRunner:
             return CentralService(**kwargs)
         if path == "sharded":
             return ShardedService(n_shards=n_shards, **kwargs)
+        if path == "podproc":
+            return MultiProcPodService(n_pods=n_shards, **kwargs)
         return PodTierService(n_pods=n_shards, pods_per_shard=2, **kwargs)
+
+    def close(self) -> None:
+        """Tear down the service (the multi-process path forks real
+        workers; benches and tests must not leak them)."""
+        close = getattr(self.service, "close", None)
+        if close is not None:
+            close()
 
     # ------------------------------------------------------------------
     def _apply(self, ev: ChaosEvent, released: List[int]) -> None:
@@ -332,6 +379,14 @@ class ChaosRunner:
             released.append(ev.rank)
         elif ev.kind == "mitigate":
             cl.add_fleet_fault(ev.fault)
+        elif ev.kind in ("pod_kill", "pod_slow"):
+            # collection-plane fault: meaningful only on pod-tier paths;
+            # elsewhere a no-op so the storm replays on every path
+            if hasattr(self.service, "inject_pod_fault"):
+                self.service.inject_pod_fault(ev.pod, ev.kind)
+        elif ev.kind == "pod_up":
+            if hasattr(self.service, "clear_pod_fault"):
+                self.service.clear_pod_fault(ev.pod)
         else:
             raise ValueError(f"unknown chaos event kind {ev.kind!r}")
 
@@ -353,7 +408,8 @@ class ChaosRunner:
     def run(self) -> ChaosReport:
         from repro.core.trace import WireEncoder
         cl, svc, sched = self.cluster, self.service, self.schedule
-        enc = (WireEncoder(cl.tables) if self.path == "pod" else None)
+        enc = (WireEncoder(cl.tables)
+               if self.path in ("pod", "podproc") else None)
         emitted: List = []
         for it in range(sched.horizon):
             released: List[int] = []

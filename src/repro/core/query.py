@@ -413,7 +413,7 @@ class DiagnosisQueryAPI:
 
     #: kind -> method for the string-keyed dispatcher
     _QUERY_KINDS = ("groups", "metrics", "blame_timeline", "events",
-                    "slos", "breaches", "audit")
+                    "slos", "breaches", "audit", "stats")
 
     def _init_query_api(self) -> None:
         self._slos: Dict[str, SLO] = {}
@@ -466,6 +466,12 @@ class DiagnosisQueryAPI:
             return {"epoch": snap.epoch,
                     "findings": [f.to_dict()
                                  for f in self.audit(snapshot=snap)]}
+        if kind == "stats":
+            # "how much of the fleet am I actually seeing?" — the
+            # published stats carry the pod tier's coverage_fraction,
+            # live/dead pod counts and resync/respawn counters
+            snap = self.snapshot()
+            return {"epoch": snap.epoch, "stats": dict(snap.stats)}
         raise ValueError(f"unknown query kind {kind!r}; "
                          f"choose from {self._QUERY_KINDS}")
 
@@ -660,6 +666,15 @@ class DiagnosisQueryAPI:
                         "confidence": ev.verdict.confidence,
                         "action": ev.verdict.action,
                     }
+            cov = snap.stats.get("coverage_fraction")
+            if cov is not None and cov < 1.0:
+                # the snapshot was published under partial collection
+                # coverage: flag the finding — its root attribution may
+                # be revised once the dark pods report again
+                evidence["coverage"] = {
+                    "degraded": True, "coverage_fraction": cov,
+                    "pods_dead": snap.stats.get("pods_dead", 0.0),
+                    "pods_warming": snap.stats.get("pods_warming", 0.0)}
             if rr is not None:
                 hv = snap.history.get((rg, rr))
                 if hv is not None and hv.n_tl:

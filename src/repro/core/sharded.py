@@ -178,6 +178,10 @@ class ShardedService(DiagnosisQueryAPI):
         t0 = time.monotonic()
         alerts, summaries = self._collect_fleet(t0)
         locs, exports = localize_cascades(alerts, summaries)
+        # degraded-mode hook: a collection tier that knows parts of the
+        # fleet are dark (repro.core.pod) vetoes conclusions it cannot
+        # support — partial data must never cordon a healthy node
+        locs, exports = self._filter_conclusions(locs, exports)
         # distribute this cycle's blame-root pointers to the shards
         # owning each group, so per-shard and merged snapshots carry the
         # same audit() walk state a single service would
@@ -208,6 +212,7 @@ class ShardedService(DiagnosisQueryAPI):
                 s.damper.tick()
         events = [ev for _s, ev in emitted]
         CentralService._sequence(events, t0)
+        self._annotate_cycle(events)
         for shard, ev in emitted:
             shard._record(ev)
         # read-side publication: shard-local snapshots first (this path
@@ -218,6 +223,26 @@ class ShardedService(DiagnosisQueryAPI):
             s._publish_snapshot(t0)
         self._publish_merged(t0)
         return events
+
+    # -- degraded-mode hooks -------------------------------------------------
+    def _filter_conclusions(self, locs, exports):
+        """Veto hook over this cycle's cascade conclusions, called
+        right after localization.  The flat facade sees the whole fleet
+        every cycle and filters nothing; the pod tier's bounded-
+        staleness merge overrides this to suppress conclusions about
+        ranks below its coverage floor."""
+        return locs, exports
+
+    def _annotate_cycle(self, events: List[DiagnosticEvent]) -> None:
+        """Annotation hook over this cycle's sequenced events, called
+        before they are recorded.  The pod tier stamps degraded-
+        coverage evidence here; the flat facade has nothing to add."""
+
+    def _facade_stats(self) -> Dict[str, float]:
+        """Facade-only stats merged into ``stats()`` and the published
+        snapshot on top of the per-shard sums (the pod tier reports
+        coverage and fault-tolerance counters here)."""
+        return {}
 
     # -- collection tier -----------------------------------------------------
     def _collect_fleet(self, t0: float):
@@ -280,6 +305,7 @@ class ShardedService(DiagnosisQueryAPI):
                 agg[k] += v
         agg["shards"] = self.n_shards
         agg["epoch"] = self._epoch
+        agg.update(self._facade_stats())
         self._snapshot = FleetSnapshot(
             epoch=self._epoch, published_at=t0, groups=tuple(groups),
             history=hist, events=tuple(events), blame_roots=roots,
@@ -326,4 +352,5 @@ class ShardedService(DiagnosisQueryAPI):
         # shard epochs advance in lockstep with the facade's — report
         # the facade epoch, not the meaningless per-shard sum
         agg["epoch"] = self._epoch
+        agg.update(self._facade_stats())
         return dict(agg)

@@ -1,0 +1,397 @@
+"""Pod transport: the wire between pod workers and the facade.
+
+PR 7's pod tier pre-reduces each pod's collection state into a
+:class:`~repro.core.pod.PodDigest` — a plain columns+dicts bundle that
+was always *shaped* like a wire message.  This module makes it one, and
+gives the facade a fault-tolerant way to talk to pods running as real
+OS processes:
+
+* **Digest codec** — ``encode_digest`` / ``decode_digest``, a versioned
+  SYTC-style binary frame (magic ``SYPD``) reusing the v3 column codecs
+  from :mod:`repro.core.trace` (zigzag-delta varint integer columns,
+  xor-delta float columns, utf-8 length-prefixed strings).  The digest
+  is the *only* payload that crosses the pod boundary every cycle, so
+  it is the one that earns a real codec; control messages (diagnose
+  requests, profile batches on the dataclass path) ride the connection's
+  native object serialization.
+* **Framed request/response** — :class:`PodClient` wraps one
+  ``multiprocessing.connection.Connection`` end with sequence-numbered
+  at-most-once calls: per-call deadline (``poll(timeout)``), bounded
+  retry with linear backoff, stale-response discard, and a worker-side
+  response cache so a retried request is *answered again, not executed
+  again* (an ingest retried after a slow ack never double-ingests).
+  A closed pipe surfaces as :class:`PodCrashedError`; a missed deadline
+  as :class:`PodTimeoutError` — the facade's bounded-staleness merge
+  treats both as "no fresh digest this cycle", never as a barrier.
+* **Worker loop** — :func:`pod_worker_main`, the entry point a
+  supervisor (:mod:`repro.ft.supervisor`) spawns per pod.  The worker
+  owns one ``CentralService`` engine plus its ``PodAggregator`` and
+  executes the same verbs the in-process pod tier calls directly:
+  ingest (wire-encoded columnar uploads resume their v3 dictionary
+  session; a restarted worker has no session and answers ``resync`` so
+  the sender re-opens), collect (reply: one encoded digest), diagnose /
+  export / temporal (the facade-ordered diagnosis half), ping
+  (heartbeat), sleep (chaos ``pod_slow``), stop.
+
+Fault model: a worker can die (killed, OOM) or wedge (slow).  Neither
+may stall the facade — every interaction carries a deadline — and
+neither may corrupt state: digests are idempotent by ``seq`` (the
+freshest wins), ingest is deduplicated by request seq, and a restarted
+worker starts from an empty engine whose coverage the facade reports as
+degraded until its windows refill (see ``repro.core.pod``).
+"""
+from __future__ import annotations
+
+import struct
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.trace import (WireFormatError, _put_fvar, _put_ivar,
+                              _read_fvar, _read_ivar, _Reader, _Writer)
+
+__all__ = [
+    "DIGEST_MAGIC", "DIGEST_VERSION", "DIGEST_MIN_VERSION",
+    "DigestFormatError", "PodTransportError", "PodTimeoutError",
+    "PodCrashedError", "PodRemoteError", "encode_digest", "decode_digest",
+    "PodClient", "pod_worker_main", "spawn_pod_worker",
+]
+
+DIGEST_MAGIC = b"SYPD"
+#: Current digest wire version.  v1 carries the full fault-tolerant
+#: digest: pod/seq header, alerts, lossless GroupBlame summaries
+#: (including ``last_start``, which the publish-form ``as_dict`` drops
+#: but cascade localization needs), per-group rank membership, and the
+#: merged flame columns.
+DIGEST_VERSION = 1
+#: Oldest version this decoder accepts.
+DIGEST_MIN_VERSION = 1
+
+_DIGEST_HDR = struct.Struct("<4sHH")
+_POD_HDR = struct.Struct("<iIII")          # pod, seq, groups, ranks
+_ALERT = struct.Struct("<qddddq")          # rank, lateness, mean, std, z, win
+_BLAME = struct.Struct("<qdddq")           # culprit, c_lateness, peer_wait,
+                                           # last_start, instances
+
+
+class DigestFormatError(WireFormatError):
+    """Bad magic, unsupported version, or truncated digest payload."""
+
+
+class PodTransportError(RuntimeError):
+    """Base class for pod transport failures."""
+
+
+class PodTimeoutError(PodTransportError):
+    """The worker did not answer within the per-call deadline."""
+
+
+class PodCrashedError(PodTransportError):
+    """The worker's end of the pipe is gone (process died)."""
+
+
+class PodRemoteError(PodTransportError):
+    """The worker executed the request and raised."""
+
+
+# ---------------------------------------------------------------------------
+# digest codec
+# ---------------------------------------------------------------------------
+
+
+def _put_int_float_dict(w: _Writer, d: Dict[int, float]) -> None:
+    keys = np.fromiter(d.keys(), np.int64, len(d))
+    order = np.argsort(keys, kind="stable")
+    vals = np.fromiter(d.values(), np.float64, len(d))
+    _put_ivar(w, keys[order])
+    _put_fvar(w, vals[order])
+
+
+def _read_int_float_dict(r: _Reader) -> Dict[int, float]:
+    keys = _read_ivar(r)
+    vals = _read_fvar(r)
+    if keys.shape[0] != vals.shape[0]:
+        raise DigestFormatError("dict key/value length mismatch")
+    return dict(zip(keys.tolist(), vals.tolist()))
+
+
+def encode_digest(digest, version: int = DIGEST_VERSION) -> bytes:
+    """One :class:`~repro.core.pod.PodDigest` -> wire bytes.
+
+    Alerts must be ``StragglerAlert`` and summaries ``GroupBlame`` —
+    the codec is lossless for both (unlike the publish-form
+    ``GroupBlame.as_dict``, which drops ``last_start``)."""
+    if not DIGEST_MIN_VERSION <= version <= DIGEST_VERSION:
+        raise DigestFormatError(f"cannot encode digest version {version}")
+    w = _Writer()
+    w.raw(_DIGEST_HDR.pack(DIGEST_MAGIC, version, 0))
+    w.raw(_POD_HDR.pack(digest.pod, digest.seq, digest.groups,
+                        digest.ranks))
+    w.u32(len(digest.alerts))
+    for a in digest.alerts:
+        w.str_(a.group_id)
+        w.raw(_ALERT.pack(a.rank, a.lateness, a.mean, a.std, a.zscore,
+                          a.window))
+    w.u32(len(digest.summaries))
+    for key, b in digest.summaries.items():
+        w.str_(key)
+        w.str_(b.group_id)
+        _put_ivar(w, np.asarray(b.ranks, dtype=np.int64))
+        w.raw(_BLAME.pack(b.culprit_rank, b.culprit_lateness, b.peer_wait,
+                          b.last_start, b.instances))
+        _put_int_float_dict(w, b.lateness)
+        _put_int_float_dict(w, b.wait)
+    w.u32(len(digest.group_ranks))
+    for g, ranks in digest.group_ranks.items():
+        w.str_(g)
+        _put_ivar(w, np.asarray(ranks, dtype=np.int64))
+    _put_ivar(w, digest.flame_sids)
+    _put_fvar(w, digest.flame_weights)
+    return bytes(w.buf)
+
+
+def decode_digest(data):
+    """Wire bytes -> :class:`~repro.core.pod.PodDigest` (round-trip
+    equal to the encoded digest).  Raises :class:`DigestFormatError` on
+    bad magic, an un-negotiable version, or any truncation."""
+    from repro.core.pod import PodDigest
+    from repro.core.straggler import GroupBlame, StragglerAlert
+    try:
+        if bytes(data[:4]) != DIGEST_MAGIC:
+            raise DigestFormatError("bad magic — not a pod digest")
+        _magic, version, _flags = _DIGEST_HDR.unpack_from(data, 0)
+        if not DIGEST_MIN_VERSION <= version <= DIGEST_VERSION:
+            raise DigestFormatError(
+                f"unsupported digest version {version}")
+        r = _Reader(data, _DIGEST_HDR.size)
+        pod, seq, groups, ranks = _POD_HDR.unpack_from(
+            bytes(r.raw(_POD_HDR.size)), 0)
+        alerts: List[StragglerAlert] = []
+        for _ in range(r.u32()):
+            gid = r.str_()
+            rank, lateness, mean, std, z, win = _ALERT.unpack_from(
+                bytes(r.raw(_ALERT.size)), 0)
+            alerts.append(StragglerAlert(
+                group_id=gid, rank=rank, lateness=lateness, mean=mean,
+                std=std, zscore=z, window=win))
+        summaries: Dict[str, GroupBlame] = {}
+        for _ in range(r.u32()):
+            key = r.str_()
+            gid = r.str_()
+            branks = tuple(_read_ivar(r).tolist())
+            culprit, c_lat, peer_wait, last_start, inst = \
+                _BLAME.unpack_from(bytes(r.raw(_BLAME.size)), 0)
+            lat = _read_int_float_dict(r)
+            wait = _read_int_float_dict(r)
+            summaries[key] = GroupBlame(
+                group_id=gid, ranks=branks, culprit_rank=culprit,
+                culprit_lateness=c_lat, lateness=lat, wait=wait,
+                peer_wait=peer_wait, last_start=last_start,
+                instances=inst)
+        group_ranks: Dict[str, Tuple[int, ...]] = {}
+        for _ in range(r.u32()):
+            g = r.str_()
+            group_ranks[g] = tuple(_read_ivar(r).tolist())
+        sids = _read_ivar(r)
+        weights = _read_fvar(r)
+        if sids.shape[0] != weights.shape[0]:
+            raise DigestFormatError("flame column length mismatch")
+        return PodDigest(
+            pod=pod, alerts=alerts, summaries=summaries, groups=groups,
+            ranks=ranks, flame_sids=sids, flame_weights=weights,
+            group_ranks=group_ranks, seq=seq)
+    except DigestFormatError:
+        raise
+    except (struct.error, IndexError, ValueError, UnicodeDecodeError) as e:
+        raise DigestFormatError(
+            f"truncated or corrupt digest: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# facade-side client: at-most-once calls with deadline + bounded retry
+# ---------------------------------------------------------------------------
+
+
+class PodClient:
+    """One facade-side endpoint of a pod worker connection.
+
+    Every call is sequence-numbered.  A timed-out call may be retried
+    (same seq, bounded count, linear backoff); the worker answers a
+    duplicate seq from its response cache without re-executing, and the
+    client discards stale responses from earlier attempts that arrive
+    late — together: at-most-once execution, at-least-once delivery of
+    the answer, or a clean :class:`PodTimeoutError`."""
+
+    __slots__ = ("conn", "timeout", "retries", "backoff", "clock",
+                 "_sleep", "_seq", "timeouts", "retries_used", "calls")
+
+    def __init__(self, conn, *, timeout: float = 5.0, retries: int = 2,
+                 backoff: float = 0.05,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.conn = conn
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff = backoff
+        self.clock = clock
+        self._sleep = sleep
+        self._seq = 0
+        self.timeouts = 0
+        self.retries_used = 0
+        self.calls = 0
+
+    def call(self, kind: str, payload=None, *,
+             timeout: Optional[float] = None,
+             retries: Optional[int] = None) -> Tuple[str, object]:
+        """Execute one request; returns ``(status, payload)`` where
+        status is ``"ok"`` or ``"resync"`` (the worker lost its wire
+        dictionary session — re-open and resend).  Raises
+        :class:`PodTimeoutError` after the final retry,
+        :class:`PodCrashedError` on a dead pipe, and
+        :class:`PodRemoteError` when the worker itself raised."""
+        timeout = self.timeout if timeout is None else timeout
+        retries = self.retries if retries is None else retries
+        self._seq += 1
+        seq = self._seq
+        self.calls += 1
+        attempt = 0
+        while True:
+            try:
+                self.conn.send((seq, kind, payload))
+                return self._await(seq, timeout)
+            except PodTimeoutError:
+                self.timeouts += 1
+                if attempt >= retries:
+                    raise
+                attempt += 1
+                self.retries_used += 1
+                self._sleep(self.backoff * attempt)
+            except (BrokenPipeError, ConnectionError, EOFError,
+                    OSError) as e:
+                raise PodCrashedError(f"pod pipe closed: {e}") from e
+
+    def _await(self, seq: int, timeout: float) -> Tuple[str, object]:
+        deadline = self.clock() + timeout
+        while True:
+            remaining = deadline - self.clock()
+            if remaining <= 0 or not self.conn.poll(remaining):
+                raise PodTimeoutError(
+                    f"no response within {timeout:.3f}s")
+            rseq, status, resp = self.conn.recv()
+            if rseq != seq:
+                continue                    # stale answer to an older call
+            if status == "err":
+                raise PodRemoteError(str(resp))
+            return status, resp
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:                     # pragma: no cover - best effort
+            pass
+
+
+# ---------------------------------------------------------------------------
+# worker loop
+# ---------------------------------------------------------------------------
+
+
+def pod_worker_main(conn, index: int, service_kwargs: Optional[Dict] = None,
+                    nonce: int = 0) -> None:
+    """Run one pod worker until ``stop`` or a closed pipe.
+
+    The worker's engine is a plain ``CentralService`` — identical to an
+    in-process pod's engine — and the verbs below are exactly the calls
+    the in-process tier makes directly, so fault-free multi-process
+    collection is event-for-event equal to the in-process pod tier
+    (asserted in tests/test_pod_ft.py).  ``nonce`` identifies this
+    incarnation: a respawned worker answers pings with a new nonce, and
+    its empty wire-session store makes the first delta upload come back
+    ``resync`` so the sender re-opens its dictionary session."""
+    from repro.core.pod import PodAggregator
+    from repro.core.service import CentralService
+
+    engine = CentralService(**(service_kwargs or {}))
+    agg = PodAggregator(index, engine)
+    last_seq = -1
+    last_resp = None
+    while True:
+        try:
+            seq, kind, payload = conn.recv()
+        except (EOFError, OSError, KeyboardInterrupt):
+            break
+        if seq == last_seq and last_resp is not None:
+            conn.send(last_resp)            # duplicate: answer, don't redo
+            continue
+        stop = False
+        try:
+            if kind == "ping":
+                resp = ("ok", ("pong", index, nonce))
+            elif kind == "sleep":            # chaos pod_slow: wedge
+                time.sleep(float(payload))
+                resp = ("ok", None)
+            elif kind == "ingest_encoded":
+                resp = ("ok", engine.ingest_encoded(payload))
+            elif kind == "ingest_profiles":
+                job_id, profiles = payload
+                for p in profiles:
+                    engine.ingest(p, job_id=job_id)
+                resp = ("ok", len(profiles))
+            elif kind == "collect":
+                resp = ("ok", encode_digest(agg.collect(float(payload))))
+            elif kind == "diagnose_root":
+                loc, t0 = payload
+                ev = engine._diagnose_root(loc, t0)
+                resp = ("ok", ev)
+            elif kind == "export_event":
+                exp, t0 = payload
+                resp = ("ok", engine._export_event(exp, t0))
+            elif kind == "temporal":
+                flagged, t0 = payload
+                evs = engine._temporal_cycle(set(flagged), t0)
+                if engine.damper is not None:
+                    engine.damper.tick()
+                resp = ("ok", list(evs))
+            elif kind == "stats":
+                resp = ("ok", engine.stats())
+            elif kind == "standing":
+                resp = ("ok", engine.standing_verdicts())
+            elif kind == "evict_group":
+                engine.evict_group(payload)
+                resp = ("ok", None)
+            elif kind == "stop":
+                resp = ("ok", None)
+                stop = True
+            else:
+                resp = ("err", f"unknown request kind {kind!r}")
+        except WireFormatError as e:
+            # lost/out-of-sync dictionary session (fresh worker, sender
+            # mid-session): tell the sender to reset and resend
+            resp = ("resync", str(e))
+        except Exception as e:              # noqa: BLE001 - ship to facade
+            resp = ("err", f"{type(e).__name__}: {e}")
+        last_seq = seq
+        last_resp = (seq, *resp)
+        try:
+            conn.send(last_resp)
+        except (BrokenPipeError, OSError):
+            break
+        if stop:
+            break
+
+
+def spawn_pod_worker(index: int, service_kwargs: Optional[Dict] = None,
+                     nonce: int = 0, *, ctx=None):
+    """Spawn one pod worker process; returns ``(process, PodClient
+    connection end)``.  Fork start method by default (the engine kwargs
+    — registry snapshots etc. — are inherited, not pickled)."""
+    import multiprocessing as mp
+    ctx = ctx if ctx is not None else mp.get_context("fork")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(
+        target=pod_worker_main, args=(child, index, service_kwargs, nonce),
+        name=f"pod-worker-{index}", daemon=True)
+    proc.start()
+    child.close()                           # parent keeps one end only
+    return proc, parent

@@ -1,8 +1,19 @@
-"""Node heartbeats + failure detection.
+"""Node/worker heartbeats + failure detection.
 
-Agents beat into the monitor; a node missing ``miss_threshold`` consecutive
-intervals is declared failed.  The monitor also accepts straggler/diagnosis
-events from the central service so the mitigation planner sees one stream.
+Agents (and, since the multi-process collection plane, pod workers —
+see ``repro.ft.supervisor``) beat into the monitor; a member missing
+``miss_threshold`` consecutive intervals is declared failed.  The
+monitor also accepts straggler/diagnosis events from the central
+service so the mitigation planner sees one stream.
+
+Clock contract: every timestamp the monitor reads or stores comes from
+the *injected* ``clock`` callable — never from ``time`` directly — so a
+fake counter clock drives completely deterministic failure-detection
+tests (advance the fake past ``interval_s * miss_threshold`` and
+``check()`` fails the silent member on that exact call).  The clock
+only has to be monotone per the caller's bookkeeping; if it ever reads
+*behind* a recorded beat (a re-registered member, a rewound fake), the
+lag clamps to zero instead of manufacturing a spurious failure.
 """
 from __future__ import annotations
 
@@ -22,27 +33,56 @@ class NodeFailure:
 class HeartbeatMonitor:
     def __init__(self, interval_s: float = 10.0, miss_threshold: int = 3,
                  clock: Callable[[], float] = time.monotonic):
+        if interval_s <= 0:
+            raise ValueError("interval_s must be > 0")
+        if miss_threshold < 1:
+            raise ValueError("miss_threshold must be >= 1")
         self.interval_s = interval_s
         self.miss_threshold = miss_threshold
         self.clock = clock
         self._last: Dict[int, float] = {}
         self._failed: Dict[int, NodeFailure] = {}
 
+    # -- membership ----------------------------------------------------------
     def register(self, node: int) -> None:
+        """(Re-)register a member: the registration itself counts as a
+        beat, and any standing failure is cleared (a respawned worker
+        re-registers under its old index)."""
         self._last[node] = self.clock()
+        self._failed.pop(node, None)
+
+    def unregister(self, node: int) -> None:
+        """Forget a member entirely (decommissioned, not failed)."""
+        self._last.pop(node, None)
+        self._failed.pop(node, None)
 
     def beat(self, node: int) -> None:
         self._last[node] = self.clock()
         self._failed.pop(node, None)
 
+    # -- detection -----------------------------------------------------------
+    def lag(self, node: int) -> Optional[float]:
+        """Seconds since the member's last beat (clamped at 0 for a
+        clock that read behind the beat); None for unknown members."""
+        last = self._last.get(node)
+        if last is None:
+            return None
+        return max(0.0, self.clock() - last)
+
     def check(self) -> List[NodeFailure]:
+        """Declare every member silent past ``interval_s *
+        miss_threshold`` failed.  Returns only *newly* failed members;
+        a member already failed stays failed (and silent re-reporting
+        suppressed) until it beats or re-registers, after which it can
+        fail again — flapping members produce one NodeFailure per
+        distinct outage."""
         now = self.clock()
         deadline = self.interval_s * self.miss_threshold
         new = []
         for node, last in self._last.items():
             if node in self._failed:
                 continue
-            if now - last > deadline:
+            if max(0.0, now - last) > deadline:
                 f = NodeFailure(node=node, last_beat=last, detected_at=now)
                 self._failed[node] = f
                 new.append(f)

@@ -1,0 +1,172 @@
+"""Pod worker supervision: detect dead/wedged workers, respawn them.
+
+The multi-process collection plane (``repro.core.transport``) runs one
+``PodAggregator`` per OS process.  Two distinct failure modes must be
+survived:
+
+* **dead** — the process exited (killed, OOM, crash).  Detected
+  structurally via ``Process.is_alive()`` on the next ``supervise()``.
+* **wedged** — the process is alive but not answering (stuck syscall,
+  chaos ``pod_slow``).  Detected by silence: every successful RPC beats
+  into a :class:`~repro.ft.heartbeat.HeartbeatMonitor`, and a worker
+  silent past ``interval_s * miss_threshold`` is declared failed.
+
+Either way the remedy is the same: tear the worker down and respawn it
+under the *same pod index* — its agent assignment is positional
+(``shard_of(rank) -> pod index``), so a respawn restores the
+assignment by construction.  The replacement runs with a fresh engine
+and a bumped *generation* nonce; its empty wire-session store makes
+the facade's next delta upload come back ``resync`` (the facade then
+re-opens its dictionary session), and the facade reports the pod's
+coverage as degraded until the new engine's detector windows refill.
+
+Both the heartbeat clock and the worker factory are injectable, so the
+whole detect→respawn loop is testable with a fake clock and fake
+processes — no sleeps, no real forks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.transport import (PodClient, PodTransportError,
+                                  spawn_pod_worker)
+from repro.ft.heartbeat import HeartbeatMonitor
+
+__all__ = ["WorkerHandle", "PodSupervisor"]
+
+
+@dataclasses.dataclass
+class WorkerHandle:
+    """One live pod worker: process + its RPC client + incarnation."""
+    index: int
+    process: object
+    client: PodClient
+    generation: int = 0
+
+
+class PodSupervisor:
+    """Owns the pod worker fleet for one facade.
+
+    ``spawn(index, service_kwargs, nonce)`` must return ``(process,
+    connection)``; the default forks a real ``pod_worker_main``.  Pass
+    a fake for deterministic tests."""
+
+    def __init__(self, n_pods: int, service_kwargs: Optional[Dict] = None,
+                 *, heartbeat_interval_s: float = 1.0,
+                 miss_threshold: int = 3,
+                 clock: Callable[[], float] = time.monotonic,
+                 call_timeout: float = 5.0, retries: int = 1,
+                 backoff: float = 0.02,
+                 spawn: Callable = spawn_pod_worker):
+        if n_pods < 1:
+            raise ValueError("n_pods must be >= 1")
+        self.n_pods = n_pods
+        self.service_kwargs = dict(service_kwargs or {})
+        self.call_timeout = call_timeout
+        self.retries = retries
+        self.backoff = backoff
+        self._spawn_fn = spawn
+        self.monitor = HeartbeatMonitor(
+            interval_s=heartbeat_interval_s, miss_threshold=miss_threshold,
+            clock=clock)
+        self.workers: Dict[int, WorkerHandle] = {}
+        self.respawns = 0
+        self._retired_timeouts = 0
+        for i in range(n_pods):
+            self._spawn(i)
+
+    # -- lifecycle -----------------------------------------------------------
+    def _spawn(self, index: int) -> WorkerHandle:
+        gen = (self.workers[index].generation + 1
+               if index in self.workers else 0)
+        proc, conn = self._spawn_fn(index, self.service_kwargs, gen)
+        handle = WorkerHandle(
+            index=index, process=proc,
+            client=PodClient(conn, timeout=self.call_timeout,
+                             retries=self.retries, backoff=self.backoff),
+            generation=gen)
+        self.workers[index] = handle
+        self.monitor.register(index)
+        return handle
+
+    def _teardown(self, index: int) -> None:
+        h = self.workers.get(index)
+        if h is None:
+            return
+        self._retired_timeouts += h.client.timeouts
+        h.client.close()
+        proc = h.process
+        try:
+            if proc.is_alive():
+                proc.terminate()
+            proc.join(timeout=2.0)
+            if proc.is_alive():            # pragma: no cover - stuck worker
+                proc.kill()
+                proc.join(timeout=2.0)
+        except (OSError, ValueError):      # pragma: no cover - best effort
+            pass
+
+    def shutdown(self) -> None:
+        """Stop every worker (polite ``stop``, then terminate)."""
+        for h in list(self.workers.values()):
+            try:
+                h.client.call("stop", timeout=0.5, retries=0)
+            except PodTransportError:
+                pass
+            self._teardown(h.index)
+        self.workers.clear()
+
+    # -- accessors -----------------------------------------------------------
+    def client(self, index: int) -> PodClient:
+        return self.workers[index].client
+
+    def generation(self, index: int) -> int:
+        return self.workers[index].generation
+
+    def beat(self, index: int) -> None:
+        """Record liveness evidence (the facade calls this after any
+        successful RPC — a worker that answers real work need not be
+        pinged separately)."""
+        self.monitor.beat(index)
+
+    def ping(self, index: int, timeout: Optional[float] = None) -> bool:
+        """Active liveness probe; beats on success."""
+        try:
+            status, payload = self.workers[index].client.call(
+                "ping", timeout=timeout, retries=0)
+        except PodTransportError:
+            return False
+        if status == "ok" and payload and payload[0] == "pong":
+            self.monitor.beat(index)
+            return True
+        return False
+
+    def rpc_timeouts(self) -> int:
+        """Fleet-lifetime missed-deadline count: live clients plus
+        every client retired by a respawn."""
+        return self._retired_timeouts + sum(
+            h.client.timeouts for h in self.workers.values())
+
+    def live(self) -> List[int]:
+        """Indices whose process is alive and heartbeat not failed."""
+        return [i for i in sorted(self.workers)
+                if self.workers[i].process.is_alive()
+                and i not in set(self.monitor.failed())]
+
+    # -- the supervision loop ------------------------------------------------
+    def supervise(self) -> List[int]:
+        """One detect→respawn pass.  Returns the indices respawned this
+        pass (the facade must reset its wire encoders for these — the
+        replacement worker has no dictionary session)."""
+        suspect = [i for i, h in self.workers.items()
+                   if not h.process.is_alive()]
+        for failure in self.monitor.check():
+            if failure.node not in suspect:
+                suspect.append(failure.node)
+        for index in sorted(suspect):
+            self._teardown(index)
+            self._spawn(index)
+            self.respawns += 1
+        return sorted(suspect)

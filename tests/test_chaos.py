@@ -439,3 +439,64 @@ def test_long_storm_1k_ranks():
     assert rep.flip_rate <= 0.1, (rep.flips, len(rep.events))
     dropped = set(sched.dropout_ranks())
     assert all(e.straggler_rank not in dropped for e in rep.events)
+
+
+# ---------------------------------------------------------------------------
+# collection-plane faults: pod_kill / pod_slow storm events
+# ---------------------------------------------------------------------------
+
+
+def test_generated_pod_faults_paired_distinct_and_bounded():
+    layout = _two_group_layout()
+    sched = ChaosSchedule.generate(
+        5, layout, n_faults=1, horizon=120, n_pod_faults=3, n_pods=4,
+        pod_fault_at=(55, 70), pod_fault_len=(10, 18))
+    pod_evs = [e for e in sched.events if e.pod is not None]
+    kills = [e for e in pod_evs if e.kind in ("pod_kill", "pod_slow")]
+    ups = [e for e in pod_evs if e.kind == "pod_up"]
+    assert len(kills) == 3 and len(ups) == 3
+    assert len({e.pod for e in kills}) == 3          # distinct pods
+    assert all(0 <= e.pod < 4 for e in pod_evs)
+    assert all(55 <= e.iteration <= 70 for e in kills)
+    by_pod = {e.pod: e.iteration for e in kills}
+    assert all(10 <= u.iteration - by_pod[u.pod] <= 18 for u in ups)
+    # the storm replays bit-identically from the seed, pod faults and all
+    replay = ChaosSchedule.generate(
+        5, layout, n_faults=1, horizon=120, n_pod_faults=3, n_pods=4,
+        pod_fault_at=(55, 70), pod_fault_len=(10, 18))
+    key = [(e.iteration, e.kind, e.name, e.group_index, e.rank, e.pod)
+           for e in sched.events]
+    assert [(e.iteration, e.kind, e.name, e.group_index, e.rank, e.pod)
+            for e in replay.events] == key
+
+
+def test_generated_pod_faults_require_enough_pods():
+    layout = _two_group_layout()
+    with pytest.raises(ValueError, match="n_pod_faults"):
+        ChaosSchedule.generate(5, layout, n_faults=1, horizon=120,
+                               n_pod_faults=5, n_pods=4)
+
+
+def test_pod_fault_events_are_noops_on_flat_paths():
+    """A storm with collection-plane faults still replays on service
+    paths without a pod tier — the pod events simply do not apply."""
+    layout, links = _two_group_layout(), ()
+    sched = ChaosSchedule.generate(7, layout, links, n_faults=1,
+                                   horizon=60, n_pod_faults=2, n_pods=4,
+                                   pod_fault_at=(30, 40),
+                                   pod_fault_len=(5, 8))
+    rep = ChaosRunner(sched, "sharded").run()
+    assert rep.all_roots_localized, rep.missed_roots()
+
+
+def test_runner_rejects_unknown_path_but_accepts_podproc():
+    layout, links = _two_group_layout(), ()
+    sched = ChaosSchedule.generate(7, layout, links, n_faults=1,
+                                   horizon=40)
+    with pytest.raises(ValueError, match="unknown service path"):
+        ChaosRunner(sched, "quantum")
+    runner = ChaosRunner(sched, "podproc", n_shards=2)
+    try:
+        assert type(runner.service).__name__ == "MultiProcPodService"
+    finally:
+        runner.close()

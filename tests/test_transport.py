@@ -1,0 +1,328 @@
+"""Pod transport: digest wire codec, at-most-once RPC client, worker
+verbs across a real process boundary, and the supervisor's
+detect→respawn loop (fake clock + fake workers — no sleeps)."""
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.pod import PodDigest, merge_digests
+from repro.core.straggler import GroupBlame, StragglerAlert
+from repro.core.trace import WireFormatError
+from repro.core.transport import (DIGEST_MAGIC, DIGEST_VERSION,
+                                  DigestFormatError, PodClient,
+                                  PodCrashedError, PodRemoteError,
+                                  PodTimeoutError, decode_digest,
+                                  encode_digest, pod_worker_main,
+                                  spawn_pod_worker)
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.supervisor import PodSupervisor
+
+
+# -- codec ---------------------------------------------------------------------
+
+
+def _full_digest() -> PodDigest:
+    alerts = [
+        StragglerAlert(group_id="grüppe/γ-0", rank=3, lateness=0.021,
+                       mean=0.004, std=0.0013, zscore=5.4, window=48),
+        StragglerAlert(group_id="g1", rank=-1, lateness=0.0, mean=0.0,
+                       std=0.0, zscore=0.0, window=0),
+    ]
+    blame = GroupBlame(
+        group_id="grüppe/γ-0", ranks=(0, 3, 7), culprit_rank=3,
+        culprit_lateness=0.021, lateness={0: -0.01, 3: 0.021, 7: -0.011},
+        wait={0: 0.02, 7: 0.018}, peer_wait=0.019, last_start=123.456789,
+        instances=17)
+    return PodDigest(
+        pod=5, alerts=alerts, summaries={"grüppe/γ-0": blame},
+        groups=2, ranks=6,
+        flame_sids=np.array([2, 9, 11], dtype=np.int64),
+        flame_weights=np.array([1.5, 0.25, 7.0]),
+        group_ranks={"grüppe/γ-0": (0, 3, 7), "g1": (1, 2)},
+        seq=42)
+
+
+def _assert_digest_equal(a: PodDigest, b: PodDigest) -> None:
+    assert (a.pod, a.seq, a.groups, a.ranks) == \
+        (b.pod, b.seq, b.groups, b.ranks)
+    assert a.alerts == b.alerts
+    assert a.summaries == b.summaries
+    assert a.group_ranks == b.group_ranks
+    np.testing.assert_array_equal(a.flame_sids, b.flame_sids)
+    np.testing.assert_array_equal(a.flame_weights, b.flame_weights)
+
+
+def test_digest_round_trip_lossless():
+    d = _full_digest()
+    rt = decode_digest(encode_digest(d))
+    _assert_digest_equal(d, rt)
+    # the wire form is lossless where the publish form is not
+    assert rt.summaries["grüppe/γ-0"].last_start == 123.456789
+
+
+def test_empty_digest_round_trip():
+    d = merge_digests([])
+    rt = decode_digest(encode_digest(d))
+    _assert_digest_equal(d, rt)
+    assert rt.pod == -1 and rt.alerts == [] and rt.summaries == {}
+
+
+def test_decode_rejects_bad_magic():
+    data = bytearray(encode_digest(_full_digest()))
+    data[:4] = b"NOPE"
+    with pytest.raises(DigestFormatError, match="magic"):
+        decode_digest(bytes(data))
+
+
+def test_decode_rejects_unsupported_version():
+    data = bytearray(encode_digest(_full_digest()))
+    data[4:6] = struct.pack("<H", DIGEST_VERSION + 7)
+    with pytest.raises(DigestFormatError, match="version"):
+        decode_digest(bytes(data))
+    data[4:6] = struct.pack("<H", 0)
+    with pytest.raises(DigestFormatError, match="version"):
+        decode_digest(bytes(data))
+
+
+def test_encode_rejects_unknown_version():
+    with pytest.raises(DigestFormatError):
+        encode_digest(_full_digest(), version=DIGEST_VERSION + 1)
+
+
+def test_decode_rejects_truncation():
+    data = encode_digest(_full_digest())
+    for cut in (3, 7, len(data) // 2, len(data) - 1):
+        with pytest.raises(WireFormatError):
+            decode_digest(data[:cut])
+
+
+# -- client: deadline, retry, at-most-once, crash ------------------------------
+
+
+class ScriptedConn:
+    """Fake connection endpoint; ``script(seq, kind, payload)`` returns
+    the replies (if any) to enqueue for that request."""
+
+    def __init__(self, script):
+        self.script = script
+        self.sent = []
+        self.inbox = []
+        self.closed = False
+
+    def send(self, msg):
+        if self.closed:
+            raise BrokenPipeError("closed")
+        self.sent.append(msg)
+        self.inbox.extend(self.script(*msg) or [])
+
+    def poll(self, timeout=None):
+        return bool(self.inbox)
+
+    def recv(self):
+        return self.inbox.pop(0)
+
+    def close(self):
+        self.closed = True
+
+
+def _client(conn, **kw):
+    kw.setdefault("timeout", 1.0)
+    kw.setdefault("clock", lambda: 0.0)
+    kw.setdefault("sleep", lambda s: None)
+    return PodClient(conn, **kw)
+
+
+def test_client_ok_and_remote_error():
+    conn = ScriptedConn(lambda seq, kind, p:
+                        [(seq, "err", "ValueError: boom")]
+                        if kind == "bad" else [(seq, "ok", p)])
+    c = _client(conn)
+    assert c.call("echo", 7) == ("ok", 7)
+    with pytest.raises(PodRemoteError, match="boom"):
+        c.call("bad")
+
+
+def test_client_retry_resends_same_seq_and_drops_stale():
+    seen = []
+
+    def script(seq, kind, payload):
+        seen.append(seq)
+        if len(seen) == 1:
+            return []                     # first attempt: reply lost
+        # late stale answer from an older call arrives first
+        return [(seq - 1, "ok", "stale"), (seq, "ok", "fresh")]
+
+    c = _client(ScriptedConn(script), retries=2)
+    assert c.call("work") == ("ok", "fresh")
+    assert seen == [1, 1]                 # retried with the SAME seq
+    assert c.retries_used == 1 and c.timeouts == 1
+
+
+def test_client_timeout_after_final_retry():
+    c = _client(ScriptedConn(lambda *a: []), retries=2)
+    with pytest.raises(PodTimeoutError):
+        c.call("work")
+    assert c.timeouts == 3                # initial + 2 retries
+
+
+def test_client_dead_pipe_is_crash():
+    conn = ScriptedConn(lambda *a: [])
+    conn.close()
+    with pytest.raises(PodCrashedError):
+        _client(conn).call("ping")
+
+
+def test_worker_duplicate_seq_not_reexecuted():
+    """At-most-once across the real worker loop: a duplicate request
+    seq is answered from the response cache, never re-executed."""
+    import multiprocessing as mp
+    parent, child = mp.Pipe()
+    t = threading.Thread(target=pod_worker_main, args=(child, 0),
+                         daemon=True)
+    t.start()
+    from repro.core.events import IterationProfile
+    prof = IterationProfile(group_id="g", rank=0, iteration=1,
+                            iter_time=0.1)
+    req = (1, "ingest_profiles", ("job-0", [prof]))
+    parent.send(req)
+    assert parent.recv() == (1, "ok", 1)
+    parent.send(req)                      # duplicate (retry after slow ack)
+    assert parent.recv() == (1, "ok", 1)  # same cached answer
+    parent.send((2, "stats", None))
+    _, status, stats = parent.recv()
+    assert status == "ok" and stats["ingested"] == 1.0
+    parent.send((3, "nonsense", None))
+    assert parent.recv()[1] == "err"
+    parent.send((4, "stop", None))
+    parent.recv()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+
+
+# -- real process boundary -----------------------------------------------------
+
+
+def test_worker_process_ping_collect_wedge_and_kill():
+    proc, conn = spawn_pod_worker(7, nonce=3)
+    client = PodClient(conn, timeout=10.0, retries=0)
+    try:
+        assert client.call("ping") == ("ok", ("pong", 7, 3))
+        status, data = client.call("collect", 0.0)
+        assert status == "ok"
+        digest = decode_digest(data)
+        assert digest.pod == 7 and digest.seq == 1
+        # wedged worker: misses the deadline, then finishes sleeping
+        # and answers the next call (stale answer is discarded)
+        client.conn.send((999, "sleep", 0.4))   # not via call(): no wait
+        with pytest.raises(PodTimeoutError):
+            client.call("ping", timeout=0.05, retries=0)
+        assert client.call("ping", timeout=10.0) == \
+            ("ok", ("pong", 7, 3))
+        proc.kill()
+        proc.join(timeout=5.0)
+        with pytest.raises((PodCrashedError, PodTimeoutError)):
+            client.call("ping", timeout=0.5, retries=0)
+    finally:
+        client.close()
+        if proc.is_alive():
+            proc.kill()
+        proc.join(timeout=5.0)
+
+
+# -- supervisor: detect -> respawn, deterministically --------------------------
+
+
+class FakeProc:
+    def __init__(self):
+        self.alive = True
+
+    def is_alive(self):
+        return self.alive
+
+    def terminate(self):
+        self.alive = False
+
+    def kill(self):
+        self.alive = False
+
+    def join(self, timeout=None):
+        pass
+
+
+def _fake_supervisor(n=3, **kw):
+    spawned = []
+
+    def spawn(index, service_kwargs, nonce):
+        proc = FakeProc()
+        conn = ScriptedConn(
+            lambda seq, kind, p, _i=index, _n=nonce:
+            [(seq, "ok", ("pong", _i, _n))])
+        spawned.append((index, nonce, proc))
+        return proc, conn
+
+    t = {"now": 0.0}
+    kw.setdefault("heartbeat_interval_s", 1.0)
+    kw.setdefault("miss_threshold", 3)
+    sup = PodSupervisor(n, clock=lambda: t["now"], spawn=spawn, **kw)
+    return sup, spawned, t
+
+
+def test_supervisor_respawns_dead_worker_with_bumped_generation():
+    sup, spawned, _ = _fake_supervisor()
+    assert [s[:2] for s in spawned] == [(0, 0), (1, 0), (2, 0)]
+    sup.workers[1].process.alive = False
+    assert sup.live() == [0, 2]
+    assert sup.supervise() == [1]
+    assert sup.respawns == 1 and sup.generation(1) == 1
+    assert spawned[-1][:2] == (1, 1)
+    assert sup.live() == [0, 1, 2]
+    assert sup.supervise() == []          # stable afterwards
+
+
+def test_supervisor_respawns_wedged_worker_on_heartbeat_silence():
+    sup, spawned, t = _fake_supervisor()
+    t["now"] = 2.0
+    sup.beat(0)
+    sup.beat(2)                           # worker 1 stays silent
+    t["now"] = 3.5                        # past interval * miss_threshold
+    assert sup.supervise() == [1]
+    assert sup.generation(1) == 1
+    # respawn re-registered it: no repeat respawn without new silence
+    assert sup.supervise() == []
+
+
+def test_supervisor_ping_beats_and_shutdown_stops_all():
+    sup, spawned, t = _fake_supervisor()
+    t["now"] = 3.4
+    assert sup.ping(0)                    # answers → beaten → survives
+    assert sup.supervise() == [1, 2]
+    sup.shutdown()
+    assert sup.workers == {}
+    assert all(not p.alive for _, _, p in spawned)
+
+
+# -- heartbeat edge cases (the supervisor's failure detector) ------------------
+
+
+def test_heartbeat_lag_clamped_and_register_clears_failure():
+    t = {"now": 10.0}
+    hb = HeartbeatMonitor(interval_s=1.0, miss_threshold=2,
+                          clock=lambda: t["now"])
+    hb.register("w")
+    t["now"] = 9.0                        # clock regression
+    assert hb.lag("w") == 0.0
+    t["now"] = 13.0
+    assert [f.node for f in hb.check()] == ["w"]
+    assert hb.check() == []               # newly-failed only, no repeats
+    assert hb.failed() == ["w"]
+    hb.register("w")                      # respawn re-registers
+    assert hb.failed() == [] and hb.alive() == ["w"]
+
+
+def test_heartbeat_rejects_bad_config():
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(interval_s=0.0)
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(miss_threshold=0)

@@ -1,0 +1,110 @@
+"""Property tests for the SYPD digest codec: arbitrary digests
+(unicode names, empty collections, adversarial floats) round-trip
+losslessly, and the decoder rejects — never mis-parses — bad versions,
+bad magic, and truncation."""
+import struct
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.pod import PodDigest  # noqa: E402
+from repro.core.straggler import GroupBlame, StragglerAlert  # noqa: E402
+from repro.core.trace import WireFormatError  # noqa: E402
+from repro.core.transport import (DIGEST_MAGIC, DIGEST_VERSION,  # noqa: E402
+                                  DigestFormatError, decode_digest,
+                                  encode_digest)
+
+# group names cross the wire as utf-8 length-prefixed strings: give the
+# codec real unicode, not just ascii slugs
+_names = st.text(min_size=1, max_size=24).filter(
+    lambda s: "\x00" not in s)
+_ranks = st.integers(min_value=0, max_value=2**40)
+# xor-delta float columns are bit-exact for any finite double
+_floats = st.floats(allow_nan=False, allow_infinity=False, width=64)
+
+
+@st.composite
+def alerts(draw):
+    return StragglerAlert(
+        group_id=draw(_names), rank=draw(_ranks),
+        lateness=draw(_floats), mean=draw(_floats), std=draw(_floats),
+        zscore=draw(_floats),
+        window=draw(st.integers(min_value=0, max_value=2**31)))
+
+
+@st.composite
+def blames(draw):
+    return GroupBlame(
+        group_id=draw(_names),
+        ranks=tuple(draw(st.lists(_ranks, max_size=6))),
+        culprit_rank=draw(_ranks), culprit_lateness=draw(_floats),
+        lateness=draw(st.dictionaries(_ranks, _floats, max_size=5)),
+        wait=draw(st.dictionaries(_ranks, _floats, max_size=5)),
+        peer_wait=draw(_floats), last_start=draw(_floats),
+        instances=draw(st.integers(min_value=0, max_value=2**40)))
+
+
+@st.composite
+def digests(draw):
+    n = draw(st.integers(min_value=0, max_value=12))
+    sids = np.sort(np.asarray(
+        draw(st.lists(st.integers(min_value=0, max_value=2**50),
+                      max_size=n, min_size=n, unique=True)),
+        dtype=np.int64))
+    weights = np.asarray(
+        draw(st.lists(_floats, min_size=n, max_size=n)))
+    return PodDigest(
+        pod=draw(st.integers(min_value=-1, max_value=2**15)),
+        alerts=draw(st.lists(alerts(), max_size=4)),
+        summaries={b.group_id: b
+                   for b in draw(st.lists(blames(), max_size=3))},
+        groups=draw(st.integers(min_value=0, max_value=2**20)),
+        ranks=draw(st.integers(min_value=0, max_value=2**20)),
+        flame_sids=sids, flame_weights=weights,
+        group_ranks=draw(st.dictionaries(
+            _names, st.lists(_ranks, max_size=5).map(tuple),
+            max_size=4)),
+        seq=draw(st.integers(min_value=0, max_value=2**31)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(digests())
+def test_digest_round_trip(d):
+    rt = decode_digest(encode_digest(d))
+    assert (rt.pod, rt.seq, rt.groups, rt.ranks) == \
+        (d.pod, d.seq, d.groups, d.ranks)
+    assert rt.alerts == d.alerts
+    assert rt.summaries == d.summaries
+    assert rt.group_ranks == d.group_ranks
+    np.testing.assert_array_equal(rt.flame_sids, d.flame_sids)
+    np.testing.assert_array_equal(rt.flame_weights, d.flame_weights)
+
+
+@settings(max_examples=40, deadline=None)
+@given(digests(), st.integers(min_value=0, max_value=2**16 - 1))
+def test_version_negotiation_rejects_foreign_versions(d, version):
+    hypothesis.assume(version > DIGEST_VERSION or version < 1)
+    frame = bytearray(encode_digest(d))
+    frame[4:6] = struct.pack("<H", version)
+    with pytest.raises(DigestFormatError, match="version"):
+        decode_digest(bytes(frame))
+
+
+@settings(max_examples=40, deadline=None)
+@given(digests(), st.data())
+def test_truncation_never_misparses(d, data):
+    frame = encode_digest(d)
+    cut = data.draw(st.integers(min_value=0, max_value=len(frame) - 1))
+    with pytest.raises(WireFormatError):
+        decode_digest(frame[:cut])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(max_size=64))
+def test_garbage_rejected(blob):
+    hypothesis.assume(not blob.startswith(DIGEST_MAGIC))
+    with pytest.raises(WireFormatError):
+        decode_digest(blob)
