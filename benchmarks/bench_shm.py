@@ -1,0 +1,178 @@
+"""Shared-memory collection plane gates (PR 10).
+
+Three assertions riding CI's bench-smoke:
+
+  1. **Ring upload >= 3x pipe RPC.**  One pod worker's shard of a
+     32k-rank fleet (8,192 ranks — 32,768 over 4 pod workers) encodes
+     real wire v3 session frames (~2.5 MB each); shipping those frames
+     through the fork-shared SPSC ring (one copy into the mmap region +
+     a tiny announce RPC) must sustain >= 3x the byte throughput of the
+     pipe path (pickle + socket write + reassembly + unpickle — four
+     copies).  Both sides use the worker's bench-only ``sink`` /
+     ``sink_ring`` verbs so the gate isolates *transport*, not decode.
+  2. **Parallel digest decode+merge >= 2x serial at 32 pods.**  The
+     facade's collect stage decodes one digest per pod and merges them
+     in pod order.  With 32 realistic heavy digests (1M-entry varint
+     flame columns — the decode is vectorized numpy, which drops the
+     GIL), the thread-pool decode used by ``MultiProcPodService`` must
+     beat the serial loop >= 2x.  Asserted only with >= 4 cores (CI);
+     single-core boxes report the ratio without gating on it.
+Overflow→pipe-fallback ordering is gated functionally, not here: the
+hypothesis suite (``test_shmring_properties``) proves announcement-order
+replay, and ``test_pod_ft`` runs the full diagnosis parity check with a
+ring too small for any frame.
+"""
+from __future__ import annotations
+
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import simcluster as sc
+from repro.core.pod import PodDigest, merge_digests
+from repro.core.trace import ColumnarBatch, WireEncoder
+from repro.core.transport import (PodClient, decode_digest, encode_digest,
+                                  spawn_pod_worker)
+
+MIN_UPLOAD_RATIO = 3.0      # ring MB/s over pipe MB/s, same frames
+MIN_DECODE_SPEEDUP = 2.0    # parallel over serial decode+merge, 32 pods
+MIN_CORES_FOR_GATE = 4      # the decode gate needs real parallelism
+N_PODS_DECODE = 32
+RING_BYTES = 1 << 24        # 16 MB: >= 2 in-flight 2.5 MB frames
+
+
+def _shard_frames(n_frames: int = 4) -> List[bytes]:
+    """Real wire v3 session frames for one pod worker's shard of the
+    32k-rank fleet schedule: 256 groups x 32 ranks = 8,192 physical
+    ranks (32,768 over 4 pod workers), same sampling fidelity as
+    ``bench_fleet`` (64 samples/iter, 4 stack variants)."""
+    layout = [list(range(b, b + 32)) for b in range(0, 256 * 32, 32)]
+    fleet = sc.cascade_fleet(layout, links=[], seed=9, columnar=True,
+                             samples_per_iter=64, stack_variants=4)
+    enc = WireEncoder(fleet.tables)
+    frames = []
+    for _ in range(n_frames):
+        batch = ColumnarBatch("job-shm", fleet.step(), "node-0",
+                              fleet.tables)
+        frames.append(bytes(enc.encode(batch)))
+        enc.commit()
+    return frames
+
+
+def _upload_gate(out_lines: List[str]) -> Dict[str, float]:
+    frames = _shard_frames()
+    frame_mb = sum(len(f) for f in frames) / len(frames) / 1e6
+    proc, conn, rings = spawn_pod_worker(0, {"window": 8},
+                                         ring_bytes=RING_BYTES)
+    client = PodClient(conn, timeout=60.0)
+    try:
+        client.call("ping", None)
+
+        def pipe_round() -> float:
+            t0 = time.perf_counter()
+            for f in frames:
+                assert client.call("sink", f) == ("ok", len(f))
+            return time.perf_counter() - t0
+
+        def ring_round() -> float:
+            t0 = time.perf_counter()
+            for f in frames:
+                seq = rings.up.push(f)
+                assert seq is not None, "ring overflow mid-bench"
+                assert client.call("sink_ring",
+                                   (seq, len(f))) == ("ok", len(f))
+            return time.perf_counter() - t0
+
+        pipe_round(); ring_round()                      # warm both paths
+        rounds = 5
+        pipe_s = min(pipe_round() for _ in range(rounds))
+        ring_s = min(ring_round() for _ in range(rounds))
+    finally:
+        proc.terminate()
+        proc.join(5)
+    mb = sum(len(f) for f in frames) / 1e6
+    pipe_mbs, ring_mbs = mb / pipe_s, mb / ring_s
+    ratio = pipe_s / ring_s
+    out_lines.append(f"shm_upload_pipe,{pipe_s/len(frames)*1e6:.0f},"
+                     f"{pipe_mbs:.0f}_MBps_{frame_mb:.1f}MB_frames")
+    out_lines.append(f"shm_upload_ring,{ring_s/len(frames)*1e6:.0f},"
+                     f"{ring_mbs:.0f}_MBps_{frame_mb:.1f}MB_frames")
+    out_lines.append(f"shm_upload_ratio,{ratio*100:.0f},"
+                     f"{ratio:.1f}x_ring_over_pipe")
+    assert ratio >= MIN_UPLOAD_RATIO, (
+        f"shm ring upload only {ratio:.2f}x pipe RPC throughput at "
+        f"{frame_mb:.1f} MB session frames (gate: >= {MIN_UPLOAD_RATIO}x)")
+    return {"upload_ratio": ratio, "ring_mbs": ring_mbs,
+            "pipe_mbs": pipe_mbs}
+
+
+def _heavy_digest(pod: int, n: int = 600_000) -> PodDigest:
+    """A realistic worst-case pod digest: 1M-entry deduplicated flame
+    columns on the varint wire path (sorted stack ids -> small deltas;
+    quantized decay weights -> compressible xor deltas)."""
+    rng = np.random.default_rng(pod)
+    sids = np.cumsum(rng.integers(1, 40, n).astype(np.int64))
+    weights = rng.integers(1, 1000, n).astype(np.float64) / 64.0
+    return PodDigest(
+        pod=pod, alerts=[], summaries={}, groups=32, ranks=1024,
+        flame_sids=sids, flame_weights=weights,
+        group_ranks={f"job-0/group-{pod}-{i}": tuple(range(4))
+                     for i in range(32)},
+        seq=1)
+
+
+def _decode_merge_gate(out_lines: List[str]) -> Dict[str, float]:
+    encoded = [encode_digest(_heavy_digest(p))
+               for p in range(N_PODS_DECODE)]
+    cores = os.cpu_count() or 1
+    workers = min(N_PODS_DECODE, cores)
+
+    def serial() -> float:
+        t0 = time.perf_counter()
+        merge_digests([decode_digest(f, detach=True) for f in encoded])
+        return time.perf_counter() - t0
+
+    def parallel(pool: ThreadPoolExecutor) -> float:
+        t0 = time.perf_counter()
+        futs = [pool.submit(decode_digest, f, detach=True)
+                for f in encoded]
+        merge_digests([f.result() for f in futs])
+        return time.perf_counter() - t0
+
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        serial(); parallel(pool)                        # warm both paths
+        ser_s = min(serial() for _ in range(2))
+        par_s = min(parallel(pool) for _ in range(2))
+    speedup = ser_s / par_s
+    out_lines.append(f"shm_digest_decode_serial,{ser_s*1e6:.0f},"
+                     f"{N_PODS_DECODE}_pods_600k_flame_rows")
+    out_lines.append(f"shm_digest_decode_parallel,{par_s*1e6:.0f},"
+                     f"{workers}_threads_{cores}_cores")
+    gated = cores >= MIN_CORES_FOR_GATE
+    out_lines.append(f"shm_digest_decode_speedup,{speedup*100:.0f},"
+                     f"{speedup:.2f}x_{'gated' if gated else 'report_only'}")
+    if gated:
+        assert speedup >= MIN_DECODE_SPEEDUP, (
+            f"parallel digest decode+merge only {speedup:.2f}x serial "
+            f"with {workers} threads on {cores} cores "
+            f"(gate: >= {MIN_DECODE_SPEEDUP}x)")
+    return {"decode_speedup": speedup, "cores": float(cores)}
+
+
+def run(out_lines: List[str]) -> Dict[str, float]:
+    out_lines.append("# shm: fork-shared SPSC ring collection plane — "
+                     "upload transport vs pipe RPC, facade parallel "
+                     "digest decode+merge")
+    out: Dict[str, float] = {}
+    out.update(_upload_gate(out_lines))
+    out.update(_decode_merge_gate(out_lines))
+    return out
+
+
+if __name__ == "__main__":
+    lines: List[str] = []
+    print(run(lines))
+    print("\n".join(lines))

@@ -26,6 +26,10 @@ table.  Prints ``name,us_per_call,derived`` CSV lines per the contract.
                        cycles, cascade root localized, wire v3
                        bytes-per-rank-iteration >=3x under v2, peak RSS
                        per rank
+  bench_shm          — shared-memory collection plane: SPSC ring upload
+                       >=3x pipe-RPC throughput at 32k-rank session
+                       frames + facade parallel digest decode+merge
+                       >=2x serial at 32 pods (cores-gated)
   bench_chaos        — pinned seeded fault storm (flapping faults,
                        agent dropouts, mitigation blips): all roots
                        localized, flip rate under threshold, zero
@@ -62,6 +66,7 @@ MODULES = [
     "benchmarks.bench_query",
     "benchmarks.bench_trace",
     "benchmarks.bench_fleet",
+    "benchmarks.bench_shm",
     "benchmarks.bench_chaos",
     "benchmarks.bench_pod_ft",
     "benchmarks.bench_roofline",
@@ -101,9 +106,16 @@ def main() -> None:
         if only and short not in only:
             continue
         t0 = time.monotonic()
+        before = len(lines)
         try:
             mod = importlib.import_module(modname)
             mod.run(lines)
+            # a bench that "passes" while emitting no measurements is a
+            # silently-dead gate: the artifact diff would show nothing
+            # regressed because nothing was measured
+            if not lines_to_json(lines[before:]):
+                raise RuntimeError(
+                    f"{short}.run() produced no BENCH entries")
             lines.append(f"{short}_wall,{(time.monotonic()-t0)*1e6:.0f},ok")
         except Exception as e:  # noqa: BLE001
             failures.append((short, repr(e)))

@@ -57,6 +57,8 @@ process boundaries (tests/test_pod_ft.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -70,9 +72,10 @@ from repro.core.query import (EventLog, FleetSnapshot, GroupView,
                               RankHistory, blame_roots_from)
 from repro.core.service import LOG_SOP_RULES, CentralService, DiagnosticEvent
 from repro.core.sharded import ShardedService, shard_of
+from repro.core.shmring import ShmRingError
 from repro.core.trace import ColumnarBatch, ColumnarProfile, WireEncoder
 from repro.core.transport import (DigestFormatError, PodTransportError,
-                                  decode_digest)
+                                  decode_digest, spawn_pod_worker)
 
 __all__ = ["PodDigest", "PodAggregator", "PodTierService",
            "MultiProcPodService", "merge_digests"]
@@ -247,6 +250,11 @@ class PodTierService(ShardedService):
         self._pod_slow: Set[int] = set()
         # fault-tolerance counters surfaced via stats()/snapshots
         self._session_resyncs = 0
+        # shm fast-path degradation counters (always 0 in-process; the
+        # multi-process facade bumps them when an upload falls back
+        # from its ring to the pipe)
+        self._ring_overflows = 0
+        self._ring_fallback_uploads = 0
         self.suppressed_low_coverage = 0
 
     # -- chaos fault injection ------------------------------------------------
@@ -424,6 +432,8 @@ class PodTierService(ShardedService):
             "pods_dead": float(len(self._missing_pods)),
             "pods_warming": float(len(self._warming_pods)),
             "session_resyncs": float(self._session_resyncs),
+            "ring_overflows": float(self._ring_overflows),
+            "ring_fallback_uploads": float(self._ring_fallback_uploads),
             "pod_respawns": float(self._pod_respawns()),
             "pod_rpc_timeouts": float(self._pod_rpc_timeouts()),
             "suppressed_low_coverage": float(self.suppressed_low_coverage),
@@ -445,6 +455,23 @@ class PodTierService(ShardedService):
         return agg
 
 
+def _silent_call(fn, *args):
+    """Run one digest materialization, mapping any malformed frame or
+    ring-protocol violation to "no digest this cycle" — the bounded-
+    staleness merge treats it exactly like a missed deadline."""
+    try:
+        return fn(*args)
+    except (DigestFormatError, ShmRingError):
+        return None
+
+
+def _silent_result(fut):
+    try:
+        return fut.result()
+    except (DigestFormatError, ShmRingError):
+        return None
+
+
 class MultiProcPodService(PodTierService):
     """The pod tier over real OS processes.
 
@@ -462,6 +489,22 @@ class MultiProcPodService(PodTierService):
     faults injected, ``process()`` is event-for-event equal to
     ``PodTierService`` (tests/test_pod_ft.py).
 
+    With ``ring_bytes`` (the default), payload *bytes* skip the pipe:
+    each worker maps a fork-inherited shared-memory ring pair
+    (``repro.core.shmring``), uploads are wire v3 frames encoded
+    directly into the up ring (zero intermediate ``bytes``; the tiny
+    ``ingest_ring`` pipe message announces each record, so ordering /
+    at-most-once / resync stay the pipe protocol's), digests come back
+    over the down ring and decode as ``np.frombuffer`` views, and a
+    full ring falls back to the pipe copy for that one payload rather
+    than ever blocking ingest (counted in ``ring_overflows`` /
+    ``ring_fallback_uploads``).  A respawned worker maps fresh rings —
+    the dead incarnation's half-consumed records are unreachable.
+    Facade-side digest decode parallelizes across pods over a small
+    thread pool (``decode_workers``; numpy column decodes release the
+    GIL) while the merge keeps the order-preserving two-level
+    ``merge_digests`` reduction.
+
     Facade/worker state split: workers own the collection plane (flame
     graphs, waterlines, straggler windows, dampers); the facade owns
     the query plane (iteration-time history, the event log, blame-root
@@ -476,6 +519,8 @@ class MultiProcPodService(PodTierService):
     def __init__(self, n_pods: int = 4, stale_after: int = 2,
                  coverage_floor: float = 0.75, respawn_warmup: int = 2,
                  rpc_timeout: float = 5.0, rpc_retries: int = 1,
+                 ring_bytes: Optional[int] = 1 << 22,
+                 decode_workers: Optional[int] = None,
                  supervisor_kwargs: Optional[Dict] = None, **kwargs):
         from repro.ft.supervisor import PodSupervisor
         self._worker_kwargs = dict(kwargs)
@@ -484,9 +529,19 @@ class MultiProcPodService(PodTierService):
                          coverage_floor=coverage_floor,
                          respawn_warmup=respawn_warmup, **kwargs)
         sup_kwargs = dict(call_timeout=rpc_timeout, retries=rpc_retries)
+        if ring_bytes:
+            sup_kwargs["spawn"] = functools.partial(
+                spawn_pod_worker, ring_bytes=ring_bytes)
         sup_kwargs.update(supervisor_kwargs or {})
         self.supervisor = PodSupervisor(
             n_pods, service_kwargs=self._worker_kwargs, **sup_kwargs)
+        # facade digest decode pool: per-pod decode is independent work
+        # (numpy releases the GIL on the column passes), so it scales
+        # with cores; <=1 worker or a 1-core box decodes serially
+        if decode_workers is None:
+            decode_workers = min(n_pods, os.cpu_count() or 1)
+        self._decode_workers = max(1, int(decode_workers))
+        self._decode_pool: Optional[ThreadPoolExecutor] = None
         # one uplink wire session per pod, bound to the facade tables
         self._encoders: Dict[int, WireEncoder] = {}
         # facade-side query plane (the in-process tier keeps this in
@@ -502,6 +557,9 @@ class MultiProcPodService(PodTierService):
 
     # -- lifecycle ------------------------------------------------------------
     def close(self) -> None:
+        if self._decode_pool is not None:
+            self._decode_pool.shutdown(wait=True)
+            self._decode_pool = None
         self.supervisor.shutdown()
 
     def __enter__(self) -> "MultiProcPodService":
@@ -595,13 +653,12 @@ class MultiProcPodService(PodTierService):
                     enc = self._encoders[pod] = WireEncoder(self.tables)
                 batch = ColumnarBatch(job_id, profiles, node_id,
                                       self.tables)
-                status, _ = client.call("ingest_encoded",
-                                        bytes(enc.encode(batch)))
+                status, _ = self._upload_columnar(pod, client, enc, batch)
                 if status == "resync":
                     enc.reset()
                     self._session_resyncs += 1
-                    status, _ = client.call("ingest_encoded",
-                                            bytes(enc.encode(batch)))
+                    status, _ = self._upload_columnar(pod, client, enc,
+                                                      batch)
                 if status == "ok":
                     enc.commit()
                     self.supervisor.beat(pod)
@@ -614,6 +671,30 @@ class MultiProcPodService(PodTierService):
                     self.supervisor.beat(pod)
         except PodTransportError:
             pass
+
+    def _upload_columnar(self, pod: int, client, enc: WireEncoder,
+                         batch: ColumnarBatch):
+        """One delta-frame upload attempt, ring-first: encode directly
+        into the pod's up ring and announce ``(record seq, nbytes)``
+        over the pipe.  A full ring (``ring_overflows``) or a frame
+        larger than the reservable span falls back to the pipe-copied
+        byte path (``ring_fallback_uploads``) — the fallback carries
+        the *identical* frame bytes, so session semantics don't fork."""
+        rings = self.supervisor.rings(pod)
+        if rings is not None:
+            mv = rings.up.reserve_max()
+            if mv is None:
+                self._ring_overflows += 1
+            else:
+                try:
+                    n = enc.encode_into(batch, mv)
+                except BufferError:
+                    rings.up.cancel()
+                else:
+                    return client.call("ingest_ring",
+                                       (rings.up.commit(n), n))
+            self._ring_fallback_uploads += 1
+        return client.call("ingest_encoded", bytes(enc.encode(batch)))
 
     def ingest_log_line(self, job_id: str, line: str
                         ) -> Optional[DiagnosticEvent]:
@@ -648,7 +729,13 @@ class MultiProcPodService(PodTierService):
 
     # -- collection over the wire ---------------------------------------------
     def _gather_digests(self, t0: float) -> Dict[int, PodDigest]:
-        out: Dict[int, PodDigest] = {}
+        """Collect RPCs stay serial on the pipe (tiny control messages);
+        the expensive half — decoding each pod's SYPD frame — fans out
+        over the decode pool, one independent task per pod, and the
+        caller's pod-index-ordered ``merge_digests`` reduction is
+        untouched.  A pod's heartbeat only counts once its digest
+        actually decoded, exactly as on the serial path."""
+        replies: Dict[int, object] = {}
         for i in range(self.n_pods):
             if i in self._pod_slow:
                 continue           # deadline-missing pod: no fresh digest
@@ -657,14 +744,55 @@ class MultiProcPodService(PodTierService):
                     "collect", t0, retries=0)
             except PodTransportError:
                 continue
-            if status != "ok":
-                continue
-            try:
-                out[i] = decode_digest(data)
-            except DigestFormatError:
-                continue
-            self.supervisor.beat(i)
+            if status == "ok":
+                replies[i] = data
+        out: Dict[int, PodDigest] = {}
+        if len(replies) > 1 and self._decode_workers > 1:
+            if self._decode_pool is None:
+                self._decode_pool = ThreadPoolExecutor(
+                    max_workers=self._decode_workers,
+                    thread_name_prefix="digest-decode")
+            futs = {i: self._decode_pool.submit(self._pop_digest, i, data)
+                    for i, data in replies.items()}
+            results = {i: _silent_result(f) for i, f in futs.items()}
+        else:
+            results = {i: _silent_call(self._pop_digest, i, data)
+                       for i, data in replies.items()}
+        for i, d in results.items():
+            if d is not None:
+                out[i] = d
+                self.supervisor.beat(i)
         return out
+
+    def _pop_digest(self, pod: int, data) -> PodDigest:
+        """Materialize one collect reply: inline SYPD bytes, or a
+        ``("ring", seq, nbytes)`` announcement — walk the pod's down
+        ring to the announced record (releasing stale records whose
+        replies were dropped by a timed-out collect) and decode it
+        detached, so the slot can be recycled immediately."""
+        if not (isinstance(data, tuple) and data and data[0] == "ring"):
+            return decode_digest(data)
+        _tag, rseq, nbytes = data
+        rings = self.supervisor.rings(pod)
+        if rings is None:
+            raise DigestFormatError("ring digest reply but no rings mapped")
+        while True:
+            got = rings.down.pop()
+            if got is None:
+                raise DigestFormatError(
+                    f"announced ring digest {rseq} not committed")
+            seq, view = got
+            try:
+                if seq == rseq:
+                    if len(view) != nbytes:
+                        raise DigestFormatError(
+                            "ring digest length mismatch")
+                    return decode_digest(view, detach=True)
+            finally:
+                rings.down.release()
+            if seq > rseq:
+                raise DigestFormatError(
+                    f"ring digest {rseq} already consumed (at {seq})")
 
     def _rpc_event(self, pod: int, kind: str,
                    payload) -> Optional[DiagnosticEvent]:

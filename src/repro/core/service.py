@@ -332,15 +332,20 @@ class CentralService(DiagnosisQueryAPI):
             self.ingest(p, job_id=batch.job_id)
         return len(batch.profiles)
 
-    def ingest_encoded(self, data) -> int:
+    def ingest_encoded(self, data, *, detach: bool = False) -> int:
         """One wire-encoded columnar upload (``bytes`` or any buffer —
         no copy forced): decode straight into the service's global
         tables (one vectorized id gather per column), then ingest the
         column views.  v3 dictionary-delta frames resume their sender's
         session from ``_wire_sessions``; an out-of-sync frame raises
-        ``WireFormatError`` back to the sender, which resyncs."""
+        ``WireFormatError`` back to the sender, which resyncs.
+
+        ``detach=True`` when ``data`` is a view over transient storage
+        (a shm ring slot): ingest retains column views in ``_latest``,
+        so they must not alias a buffer that gets recycled."""
         return self.ingest_batch(decode_batch(data, tables=self.tables,
-                                              sessions=self._wire_sessions))
+                                              sessions=self._wire_sessions,
+                                              detach=detach))
 
     def ingest_log_line(self, job_id: str, line: str) -> Optional[DiagnosticEvent]:
         for pattern, cause in LOG_SOP_RULES:

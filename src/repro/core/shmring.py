@@ -1,0 +1,291 @@
+"""Single-producer/single-consumer shared-memory upload rings.
+
+PR 9 made pods real OS processes, but left every byte of every profile
+upload crossing a ``multiprocessing.Pipe``: the facade encodes a wire
+v3 frame into its reusable buffer, copies it to ``bytes``, pickle
+frames it, the kernel copies it through a 64 KiB pipe in chunks (with
+a context switch per drain), and the worker reassembles its own copy
+before decoding — four byte-sized copies plus O(size/64KiB) syscalls
+per upload, at 32k ranks the dominant per-cycle cost.  This module is
+the zero-copy replacement for the *payload* plane:
+
+    facade ──(encode directly into)──▶ up ring ──(frombuffer views)──▶ worker
+    facade ◀──(frombuffer views)── down ring ◀──(encode directly into)── worker
+
+while the *control* plane (the sequence-numbered at-most-once pipe RPC
+of ``repro.core.transport``) stays exactly as it was — a ring record
+is announced by a tiny pipe message carrying its record sequence
+number, so ordering, retry, duplicate suppression and crash detection
+are all inherited from the pipe, and the ring only ever moves payload
+bytes.
+
+Design (classic SPSC byte ring, adapted for crash tolerance):
+
+* One anonymous ``mmap`` region, fork-inherited (the worker spawn path
+  uses the fork start method; a ring is created immediately before the
+  fork and both sides address the same physical pages).
+* Two cache-line-separated control words: the producer-owned **tail**
+  (commit position) at offset 0 and the consumer-owned **head**
+  (release position) at offset 64.  Both are monotonic byte counters;
+  only their modulo maps into the data region, so full/empty are never
+  ambiguous and torn size arithmetic cannot happen.
+* Records are length-prefixed and 8-byte aligned: ``u32 length, u32
+  sequence`` then payload.  A record never straddles the region end —
+  when the contiguous space at the tail is too small the producer
+  plants a **wrap marker** (length ``0xFFFFFFFF``) and continues at
+  offset 0.
+* **Commit word ordering**: the producer fills the payload first, then
+  the record header, and only then publishes the new tail.  The
+  consumer never reads past the tail, so a half-written record is
+  *unreachable*, not merely detectable; the per-record sequence word is
+  a second fence — it must equal the consumer's own monotonic record
+  counter, so any protocol bug or corruption surfaces as
+  :class:`ShmRingCorruption` instead of a mis-parse.  A producer that
+  dies mid-record simply never publishes; the consumer skips cleanly
+  (sees an empty ring) and the supervisor's respawn maps a fresh ring.
+* **Overflow never blocks**: ``try_reserve``/``reserve_max`` return
+  ``None`` when the free span is too small, and the transport layer
+  falls back to the pipe RPC for that one payload (ordering is still
+  the pipe's announcement order; see ``repro.core.transport``).
+
+Zero-copy contract: ``reserve*()`` hands the producer a writable
+``memoryview`` straight over the mapped pages (the wire encoder
+serializes columns directly into it — no intermediate ``bytes``), and
+``pop()`` hands the consumer a readonly view the decoder wraps with
+``np.frombuffer``.  A popped record's bytes are stable until
+``release()``; anything retained past release must be detached first
+(the decoders' ``detach=True`` mode copies exactly the raw-tagged
+columns that would otherwise alias the ring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import mmap
+import struct
+from typing import Optional, Tuple
+
+__all__ = ["ShmRing", "RingPair", "ShmRingError", "ShmRingCorruption",
+           "WRAP_MARKER"]
+
+_CTRL = 128                 # control area: tail @ 0, head @ 64
+_TAIL_OFF = 0
+_HEAD_OFF = 64
+_REC_HDR = struct.Struct("<II")          # length, sequence
+_POS = struct.Struct("<Q")
+#: record-length sentinel: "dead space to the end of the region,
+#: continue at offset 0"
+WRAP_MARKER = 0xFFFFFFFF
+_MIN_CAPACITY = 1 << 12
+
+
+class ShmRingError(RuntimeError):
+    """Misuse of the ring protocol (double reserve, release without
+    pop, payload larger than the reservation)."""
+
+
+class ShmRingCorruption(ShmRingError):
+    """The consumer met a record whose sequence word does not match its
+    own monotonic record counter — protocol corruption, never expected
+    under the SPSC contract."""
+
+
+def _pad8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+class ShmRing:
+    """One direction of payload flow between exactly one producer
+    process and one consumer process.  All shared state lives in the
+    mapped region; per-role cursors (pending reservation, pending pop,
+    next sequence numbers) are process-local and owned by the single
+    process playing that role."""
+
+    def __init__(self, capacity: int = 1 << 22):
+        if capacity < _MIN_CAPACITY:
+            raise ValueError(
+                f"ring capacity must be >= {_MIN_CAPACITY} bytes")
+        self.capacity = _pad8(capacity)
+        self._mm = mmap.mmap(-1, _CTRL + self.capacity)
+        self._view = memoryview(self._mm)
+        self.data = self._view[_CTRL:]
+        # -- producer-local --
+        self._next_seq = 0
+        self._pending: Optional[Tuple[int, int, int, int]] = None
+        #: producer-side count of failed reservations (ring full /
+        #: contiguous span too small) — the transport layer mirrors
+        #: these into the facade's ``ring_overflows`` stat
+        self.overflows = 0
+        # -- consumer-local --
+        self._expect_seq = 0
+        self._pop_advance: Optional[int] = None
+
+    # -- shared control words ------------------------------------------------
+    def _tail(self) -> int:
+        return _POS.unpack_from(self._view, _TAIL_OFF)[0]
+
+    def _head(self) -> int:
+        return _POS.unpack_from(self._view, _HEAD_OFF)[0]
+
+    def _set_tail(self, v: int) -> None:
+        _POS.pack_into(self._view, _TAIL_OFF, v)
+
+    def _set_head(self, v: int) -> None:
+        _POS.pack_into(self._view, _HEAD_OFF, v)
+
+    def used(self) -> int:
+        """Committed-but-unreleased bytes (headers and wrap fill
+        included)."""
+        return self._tail() - self._head()
+
+    # -- producer side -------------------------------------------------------
+    def _spans(self) -> Tuple[int, int, int, int]:
+        """(tail, free, contiguous-at-tail, contiguous-after-wrap)."""
+        tail = self._tail()
+        free = self.capacity - (tail - self._head())
+        room_end = self.capacity - (tail % self.capacity)
+        at_tail = min(room_end, free)
+        after_wrap = free - room_end        # <= 0 when wrap cannot fit
+        return tail, free, at_tail, after_wrap
+
+    def _stage(self, tail: int, wrap_fill: int, payload_room: int
+               ) -> memoryview:
+        off = (tail + wrap_fill) % self.capacity
+        self._pending = (tail, wrap_fill, off, payload_room)
+        return self.data[off + _REC_HDR.size:
+                         off + _REC_HDR.size + payload_room]
+
+    def try_reserve(self, nbytes: int) -> Optional[memoryview]:
+        """Writable view over a slot for exactly ``nbytes`` of payload,
+        or ``None`` on overflow (never blocks)."""
+        if self._pending is not None:
+            raise ShmRingError("reservation already pending")
+        if nbytes < 0:
+            raise ValueError("negative payload size")
+        need = _REC_HDR.size + _pad8(nbytes)
+        tail, _free, at_tail, after_wrap = self._spans()
+        if need <= at_tail:
+            return self._stage(tail, 0, nbytes)
+        room_end = self.capacity - (tail % self.capacity)
+        if need <= after_wrap:
+            return self._stage(tail, room_end, nbytes)
+        self.overflows += 1
+        return None
+
+    def reserve_max(self) -> Optional[memoryview]:
+        """Writable view over the *largest* contiguous payload span —
+        for producers that only learn a record's size by encoding it
+        (commit with the actual byte count, or ``cancel()`` and fall
+        back when the encoder overruns the view)."""
+        if self._pending is not None:
+            raise ShmRingError("reservation already pending")
+        tail, _free, at_tail, after_wrap = self._spans()
+        best_plain = at_tail - _REC_HDR.size
+        best_wrapped = after_wrap - _REC_HDR.size
+        if max(best_plain, best_wrapped) < 8:
+            self.overflows += 1
+            return None
+        if best_plain >= best_wrapped:
+            return self._stage(tail, 0, best_plain)
+        return self._stage(tail, self.capacity - (tail % self.capacity),
+                           best_wrapped)
+
+    def commit(self, nbytes: int) -> int:
+        """Publish the pending reservation's first ``nbytes`` as one
+        record; returns the record's sequence number.  Payload must be
+        fully written *before* commit — the header is stamped and the
+        tail advanced only here, so a crash any earlier leaves the
+        record unreachable."""
+        if self._pending is None:
+            raise ShmRingError("no pending reservation")
+        tail, wrap_fill, off, room = self._pending
+        if nbytes < 0 or nbytes > room:
+            raise ShmRingError("commit larger than reservation")
+        seq = self._next_seq
+        if wrap_fill:
+            _REC_HDR.pack_into(self.data, tail % self.capacity,
+                               WRAP_MARKER, seq)
+        _REC_HDR.pack_into(self.data, off, nbytes, seq)
+        self._next_seq = seq + 1
+        self._pending = None
+        self._set_tail(tail + wrap_fill + _REC_HDR.size + _pad8(nbytes))
+        return seq
+
+    def cancel(self) -> None:
+        """Abandon the pending reservation (encoder overran the view);
+        nothing was published."""
+        self._pending = None
+
+    def push(self, payload) -> Optional[int]:
+        """Copy-in convenience: reserve, fill, commit.  Returns the
+        record sequence or ``None`` on overflow."""
+        payload = memoryview(payload).cast("B") \
+            if not isinstance(payload, (bytes, bytearray)) else payload
+        dst = self.try_reserve(len(payload))
+        if dst is None:
+            return None
+        dst[:len(payload)] = payload
+        return self.commit(len(payload))
+
+    # -- consumer side -------------------------------------------------------
+    def pop(self) -> Optional[Tuple[int, memoryview]]:
+        """Next committed record as ``(sequence, readonly payload
+        view)``, or ``None`` when the ring is drained.  The view is
+        valid until ``release()``; a record a crashed producer never
+        committed is simply never surfaced."""
+        if self._pop_advance is not None:
+            raise ShmRingError("previous pop not yet released")
+        tail = self._tail()
+        head = self._head()
+        if head == tail:
+            return None
+        off = head % self.capacity
+        length, seq = _REC_HDR.unpack_from(self.data, off)
+        wrap_fill = 0
+        if length == WRAP_MARKER:
+            wrap_fill = self.capacity - off
+            if head + wrap_fill >= tail:
+                raise ShmRingCorruption(
+                    "wrap marker published without a record")
+            off = 0
+            length, seq = _REC_HDR.unpack_from(self.data, off)
+        if length > self.capacity - off - _REC_HDR.size:
+            raise ShmRingCorruption(
+                f"record length {length} overruns the region")
+        if seq != self._expect_seq:
+            raise ShmRingCorruption(
+                f"record sequence {seq} != expected {self._expect_seq}")
+        self._pop_advance = wrap_fill + _REC_HDR.size + _pad8(length)
+        view = self.data[off + _REC_HDR.size:
+                         off + _REC_HDR.size + length]
+        return seq, view.toreadonly()
+
+    def release(self) -> None:
+        """Free the last popped record's span.  Call only after every
+        decoder view into the record is dead or detached — the producer
+        may overwrite the span immediately."""
+        if self._pop_advance is None:
+            raise ShmRingError("no popped record to release")
+        self._set_head(self._head() + self._pop_advance)
+        self._pop_advance = None
+        self._expect_seq += 1
+
+    def close(self) -> None:                # pragma: no cover - best effort
+        try:
+            self.data.release()
+            self._view.release()
+            self._mm.close()
+        except (BufferError, ValueError):
+            pass
+
+
+@dataclasses.dataclass
+class RingPair:
+    """The two payload directions of one facade↔worker link: ``up``
+    carries profile uploads (facade produces, worker consumes), ``down``
+    carries digest replies (worker produces, facade consumes)."""
+    up: ShmRing
+    down: ShmRing
+
+    @classmethod
+    def create(cls, ring_bytes: int) -> "RingPair":
+        return cls(up=ShmRing(ring_bytes), down=ShmRing(ring_bytes))

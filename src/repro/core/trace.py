@@ -828,6 +828,55 @@ class _Writer:
         self.buf += memoryview(a)
 
 
+class _ViewWriter:
+    """The ``_Writer`` API over a caller-provided writable
+    ``memoryview`` — frames serialize *in place* (e.g. straight into a
+    shared-memory ring reservation), with no bytearray and no final
+    copy.  Output is byte-identical to ``_Writer``'s: both drive the
+    same ``_encode_into``, so a frame is laid out the same in-ring and
+    on-pipe.  Overrunning the view raises ``BufferError`` — the caller
+    abandons the reservation and falls back to a buffered encode."""
+
+    __slots__ = ("mv", "pos")
+
+    def __init__(self, mv: memoryview):
+        self.mv = mv
+        self.pos = 0
+
+    def _span(self, n: int) -> int:
+        p = self.pos
+        if p + n > len(self.mv):
+            raise BufferError("frame larger than the provided view")
+        self.pos = p + n
+        return p
+
+    def u8(self, v: int) -> None:
+        self.mv[self._span(1)] = v
+
+    def u32(self, v: int) -> None:
+        struct.pack_into("<I", self.mv, self._span(4), v)
+
+    def raw(self, b) -> None:
+        if not isinstance(b, (bytes, bytearray)):
+            b = memoryview(b).cast("B")
+        p = self._span(len(b))
+        self.mv[p:self.pos] = b
+
+    def str_(self, s: str) -> None:
+        b = s.encode("utf-8")
+        self.u32(len(b))
+        self.raw(b)
+
+    def array(self, a, dtype) -> None:
+        a = np.ascontiguousarray(np.asarray(a), dtype=dtype)
+        self.u32(a.shape[0])
+        self.raw(memoryview(a))
+
+    def array_body(self, a, dtype) -> None:
+        a = np.ascontiguousarray(np.asarray(a), dtype=dtype)
+        self.raw(memoryview(a))
+
+
 # ---------------------------------------------------------------------------
 # v3 column codecs: vectorized LEB128 varint over zigzag deltas
 # ---------------------------------------------------------------------------
@@ -947,11 +996,14 @@ def _put_fvar(w: _Writer, a) -> None:
 
 
 class _Reader:
-    __slots__ = ("buf", "pos")
+    __slots__ = ("buf", "pos", "detach")
 
-    def __init__(self, buf, pos: int = 0):
+    def __init__(self, buf, pos: int = 0, detach: bool = False):
         self.buf = buf
         self.pos = pos
+        # with ``detach``, decoded columns must not alias ``buf`` (the
+        # payload lives in a shm ring slot that is recycled on release)
+        self.detach = detach
 
     def u8(self) -> int:
         if self.pos >= len(self.buf):
@@ -984,6 +1036,12 @@ class _Reader:
             raise WireFormatError("truncated column")
         a = np.frombuffer(self.buf, dtype=dtype, count=n, offset=self.pos)
         self.pos += nbytes
+        if self.detach and dtype.itemsize > 1:
+            # only raw-tag (uncompressed) columns survive decode as
+            # views over the payload; u8 varint streams are transient
+            # inputs to cumsum/xor passes that already produce fresh
+            # arrays, so copying them would be pure waste
+            a = a.copy()
         return a
 
 
@@ -1386,6 +1444,22 @@ class WireEncoder:
         self._staged = _encode_into(w, batch, self.version, enc=self)
         return memoryview(self._buf)
 
+    def encode_into(self, batch: ColumnarBatch, buf: memoryview) -> int:
+        """Encode one delta frame directly into a caller-provided
+        writable view (a shm ring reservation — zero intermediate
+        ``bytes``); returns the frame length.  Byte-identical to
+        ``encode()`` for the same session state.  Raises ``BufferError``
+        when the frame outgrows ``buf`` — watermarks only move on
+        ``commit()``, so the caller can re-encode the identical frame
+        through ``encode()`` and ship it over the fallback path."""
+        if batch.tables is not self.tables:
+            raise ValueError(
+                "WireEncoder is bound to one TraceTables; encode batches "
+                "built over encoder.tables (session ids are table-scoped)")
+        w = _ViewWriter(buf)
+        self._staged = _encode_into(w, batch, self.version, enc=self)
+        return w.pos
+
     def commit(self) -> None:
         """Acknowledge the last encoded frame as delivered: advance the
         dictionary watermarks and the frame sequence number."""
@@ -1411,8 +1485,8 @@ class WireEncoder:
 
 
 def decode_batch(data, tables: Optional[TraceTables] = None,
-                 sessions: Optional[Dict[int, _WireSession]] = None
-                 ) -> ColumnarBatch:
+                 sessions: Optional[Dict[int, _WireSession]] = None,
+                 *, detach: bool = False) -> ColumnarBatch:
     """Decode wire bytes (``bytes``, ``bytearray`` or ``memoryview`` —
     no copy is forced) into a ``ColumnarBatch``.
 
@@ -1424,9 +1498,14 @@ def decode_batch(data, tables: Optional[TraceTables] = None,
     v3 delta frames that extend an earlier frame's tables; a missing or
     out-of-sync session raises ``WireFormatError`` (the sender then
     ``reset()``s and re-opens).  Any truncated or corrupt payload raises
-    ``WireFormatError``."""
+    ``WireFormatError``.
+
+    ``detach=True`` guarantees no decoded column aliases ``data`` —
+    required when the payload sits in a shared-memory ring slot that
+    will be recycled after decode (only raw-tagged columns cost a copy;
+    varint columns already materialize fresh arrays)."""
     try:
-        return _decode_batch(data, tables, sessions)
+        return _decode_batch(data, tables, sessions, detach)
     except WireFormatError:
         raise
     except (struct.error, IndexError, ValueError) as e:
@@ -1434,14 +1513,14 @@ def decode_batch(data, tables: Optional[TraceTables] = None,
 
 
 def _decode_batch(data, tables: Optional[TraceTables],
-                  sessions: Optional[Dict[int, _WireSession]]
-                  ) -> ColumnarBatch:
+                  sessions: Optional[Dict[int, _WireSession]],
+                  detach: bool = False) -> ColumnarBatch:
     if bytes(data[:4]) != WIRE_MAGIC:
         raise WireFormatError("bad magic — not a trace batch")
     _magic, version, hdr_flags = _HDR.unpack_from(data, 0)
     if not WIRE_MIN_VERSION <= version <= WIRE_VERSION:
         raise WireFormatError(f"unsupported wire version {version}")
-    r = _Reader(data, _HDR.size)
+    r = _Reader(data, _HDR.size, detach)
     job_id = r.str_()
     node_id = r.str_()
 

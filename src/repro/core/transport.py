@@ -48,13 +48,16 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.shmring import RingPair, ShmRingError
 from repro.core.trace import (WireFormatError, _put_fvar, _put_ivar,
-                              _read_fvar, _read_ivar, _Reader, _Writer)
+                              _read_fvar, _read_ivar, _Reader, _ViewWriter,
+                              _Writer)
 
 __all__ = [
     "DIGEST_MAGIC", "DIGEST_VERSION", "DIGEST_MIN_VERSION",
     "DigestFormatError", "PodTransportError", "PodTimeoutError",
-    "PodCrashedError", "PodRemoteError", "encode_digest", "decode_digest",
+    "PodCrashedError", "PodRemoteError", "encode_digest",
+    "encode_digest_into", "decode_digest",
     "PodClient", "pod_worker_main", "spawn_pod_worker",
 ]
 
@@ -122,9 +125,26 @@ def encode_digest(digest, version: int = DIGEST_VERSION) -> bytes:
     Alerts must be ``StragglerAlert`` and summaries ``GroupBlame`` —
     the codec is lossless for both (unlike the publish-form
     ``GroupBlame.as_dict``, which drops ``last_start``)."""
+    w = _Writer()
+    _encode_digest_body(w, digest, version)
+    return bytes(w.buf)
+
+
+def encode_digest_into(digest, buf: memoryview,
+                       version: int = DIGEST_VERSION) -> int:
+    """Encode one digest directly into a writable view (a worker→facade
+    ring reservation); returns the frame length.  Byte-layout identical
+    to :func:`encode_digest`.  Raises ``BufferError`` when the digest
+    outgrows ``buf`` — the worker then falls back to an inline-bytes
+    reply."""
+    w = _ViewWriter(buf)
+    _encode_digest_body(w, digest, version)
+    return w.pos
+
+
+def _encode_digest_body(w, digest, version: int) -> None:
     if not DIGEST_MIN_VERSION <= version <= DIGEST_VERSION:
         raise DigestFormatError(f"cannot encode digest version {version}")
-    w = _Writer()
     w.raw(_DIGEST_HDR.pack(DIGEST_MAGIC, version, 0))
     w.raw(_POD_HDR.pack(digest.pod, digest.seq, digest.groups,
                         digest.ranks))
@@ -148,13 +168,16 @@ def encode_digest(digest, version: int = DIGEST_VERSION) -> bytes:
         _put_ivar(w, np.asarray(ranks, dtype=np.int64))
     _put_ivar(w, digest.flame_sids)
     _put_fvar(w, digest.flame_weights)
-    return bytes(w.buf)
 
 
-def decode_digest(data):
+def decode_digest(data, *, detach: bool = False):
     """Wire bytes -> :class:`~repro.core.pod.PodDigest` (round-trip
     equal to the encoded digest).  Raises :class:`DigestFormatError` on
-    bad magic, an un-negotiable version, or any truncation."""
+    bad magic, an un-negotiable version, or any truncation.
+
+    ``detach=True`` guarantees the digest's flame columns do not alias
+    ``data`` — required when decoding straight out of a ring slot that
+    is released (and recycled) right after."""
     from repro.core.pod import PodDigest
     from repro.core.straggler import GroupBlame, StragglerAlert
     try:
@@ -164,7 +187,7 @@ def decode_digest(data):
         if not DIGEST_MIN_VERSION <= version <= DIGEST_VERSION:
             raise DigestFormatError(
                 f"unsupported digest version {version}")
-        r = _Reader(data, _DIGEST_HDR.size)
+        r = _Reader(data, _DIGEST_HDR.size, detach)
         pod, seq, groups, ranks = _POD_HDR.unpack_from(
             bytes(r.raw(_POD_HDR.size)), 0)
         alerts: List[StragglerAlert] = []
@@ -217,23 +240,30 @@ class PodClient:
     """One facade-side endpoint of a pod worker connection.
 
     Every call is sequence-numbered.  A timed-out call may be retried
-    (same seq, bounded count, linear backoff); the worker answers a
-    duplicate seq from its response cache without re-executing, and the
-    client discards stale responses from earlier attempts that arrive
-    late — together: at-most-once execution, at-least-once delivery of
-    the answer, or a clean :class:`PodTimeoutError`."""
+    (same seq, bounded count, linear backoff capped at ``backoff_cap``
+    and spread by deterministic jitter — a fleet of facades retrying
+    against one wedged worker must not re-synchronize into thundering
+    herds, and the jitter draws from the injectable clock plus the call
+    seq so tests with a fake clock stay exactly reproducible); the
+    worker answers a duplicate seq from its response cache without
+    re-executing, and the client discards stale responses from earlier
+    attempts that arrive late — together: at-most-once execution,
+    at-least-once delivery of the answer, or a clean
+    :class:`PodTimeoutError`."""
 
-    __slots__ = ("conn", "timeout", "retries", "backoff", "clock",
-                 "_sleep", "_seq", "timeouts", "retries_used", "calls")
+    __slots__ = ("conn", "timeout", "retries", "backoff", "backoff_cap",
+                 "clock", "_sleep", "_seq", "timeouts", "retries_used",
+                 "calls")
 
     def __init__(self, conn, *, timeout: float = 5.0, retries: int = 2,
-                 backoff: float = 0.05,
+                 backoff: float = 0.05, backoff_cap: float = 1.0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
         self.conn = conn
         self.timeout = timeout
         self.retries = retries
         self.backoff = backoff
+        self.backoff_cap = backoff_cap
         self.clock = clock
         self._sleep = sleep
         self._seq = 0
@@ -266,10 +296,19 @@ class PodClient:
                     raise
                 attempt += 1
                 self.retries_used += 1
-                self._sleep(self.backoff * attempt)
+                self._sleep(self._backoff_delay(seq, attempt))
             except (BrokenPipeError, ConnectionError, EOFError,
                     OSError) as e:
                 raise PodCrashedError(f"pod pipe closed: {e}") from e
+
+    def _backoff_delay(self, seq: int, attempt: int) -> float:
+        """Capped linear backoff with deterministic jitter in
+        [0.5, 1.0)x: the jitter phase is a hash of the current clock
+        reading and the call seq, so concurrent clients desynchronize
+        while a fake-clock test reproduces the exact delays."""
+        base = min(self.backoff * attempt, self.backoff_cap)
+        phase = (self.clock() * 997.0 + seq * 13.0 + attempt * 7.0) % 1.0
+        return base * (0.5 + 0.5 * phase)
 
     def _await(self, seq: int, timeout: float) -> Tuple[str, object]:
         deadline = self.clock() + timeout
@@ -298,7 +337,8 @@ class PodClient:
 
 
 def pod_worker_main(conn, index: int, service_kwargs: Optional[Dict] = None,
-                    nonce: int = 0) -> None:
+                    nonce: int = 0,
+                    rings: Optional[RingPair] = None) -> None:
     """Run one pod worker until ``stop`` or a closed pipe.
 
     The worker's engine is a plain ``CentralService`` — identical to an
@@ -308,7 +348,18 @@ def pod_worker_main(conn, index: int, service_kwargs: Optional[Dict] = None,
     (asserted in tests/test_pod_ft.py).  ``nonce`` identifies this
     incarnation: a respawned worker answers pings with a new nonce, and
     its empty wire-session store makes the first delta upload come back
-    ``resync`` so the sender re-opens its dictionary session."""
+    ``resync`` so the sender re-opens its dictionary session.
+
+    With ``rings`` (a fork-inherited :class:`RingPair`), payload bytes
+    bypass the pipe: ``ingest_ring`` announces a record the facade
+    already committed to the up ring (the worker decodes it with
+    ``np.frombuffer`` views over the mapped pages, ``detach=True``
+    because the slot is recycled on release), and ``collect`` encodes
+    the digest straight into the down ring, answering ``("ring", seq,
+    nbytes)`` instead of inline bytes (falling back to inline when the
+    down ring is full).  The control messages stay on the pipe, so
+    ordering, retry, duplicate suppression and resync are byte-for-byte
+    the same protocol with or without rings."""
     from repro.core.pod import PodAggregator
     from repro.core.service import CentralService
 
@@ -333,13 +384,61 @@ def pod_worker_main(conn, index: int, service_kwargs: Optional[Dict] = None,
                 resp = ("ok", None)
             elif kind == "ingest_encoded":
                 resp = ("ok", engine.ingest_encoded(payload))
+            elif kind == "ingest_ring":
+                rseq, nbytes = payload
+                got = rings.up.pop() if rings is not None else None
+                if got is None:
+                    resp = ("err",
+                            f"announced ring record {rseq} not committed")
+                else:
+                    rec_seq, view = got
+                    try:
+                        if rec_seq != rseq or len(view) != nbytes:
+                            raise ShmRingError(
+                                f"ring record ({rec_seq}, {len(view)}) != "
+                                f"announced ({rseq}, {nbytes})")
+                        resp = ("ok",
+                                engine.ingest_encoded(view, detach=True))
+                    finally:
+                        rings.up.release()
             elif kind == "ingest_profiles":
                 job_id, profiles = payload
                 for p in profiles:
                     engine.ingest(p, job_id=job_id)
                 resp = ("ok", len(profiles))
             elif kind == "collect":
-                resp = ("ok", encode_digest(agg.collect(float(payload))))
+                dig = agg.collect(float(payload))
+                resp = None
+                if rings is not None:
+                    mv = rings.down.reserve_max()
+                    if mv is not None:
+                        try:
+                            n = encode_digest_into(dig, mv)
+                        except BufferError:
+                            rings.down.cancel()
+                        else:
+                            resp = ("ok",
+                                    ("ring", rings.down.commit(n), n))
+                if resp is None:
+                    resp = ("ok", encode_digest(dig))
+            elif kind == "sink":
+                # bench-only: swallow a pipe-carried payload, no decode —
+                # isolates transport cost for benchmarks/bench_shm.py
+                resp = ("ok", len(payload))
+            elif kind == "sink_ring":
+                rseq, nbytes = payload
+                got = rings.up.pop() if rings is not None else None
+                if got is None:
+                    resp = ("err",
+                            f"announced ring record {rseq} not committed")
+                else:
+                    rec_seq, view = got
+                    try:
+                        ok = rec_seq == rseq and len(view) == nbytes
+                        resp = ("ok", len(view)) if ok else \
+                            ("err", "ring record mismatch")
+                    finally:
+                        rings.up.release()
             elif kind == "diagnose_root":
                 loc, t0 = payload
                 ev = engine._diagnose_root(loc, t0)
@@ -382,16 +481,31 @@ def pod_worker_main(conn, index: int, service_kwargs: Optional[Dict] = None,
 
 
 def spawn_pod_worker(index: int, service_kwargs: Optional[Dict] = None,
-                     nonce: int = 0, *, ctx=None):
+                     nonce: int = 0, *, ctx=None,
+                     ring_bytes: Optional[int] = None):
     """Spawn one pod worker process; returns ``(process, PodClient
-    connection end)``.  Fork start method by default (the engine kwargs
-    — registry snapshots etc. — are inherited, not pickled)."""
+    connection end)`` — or ``(process, connection, RingPair)`` when
+    ``ring_bytes`` asks for shared-memory payload rings.  Fork start
+    method by default (the engine kwargs — registry snapshots etc. —
+    are inherited, not pickled); rings *require* fork, since the mmap
+    region is shared by inheritance, and are created fresh for every
+    spawn — a respawned worker never sees a dead incarnation's
+    half-consumed records."""
     import multiprocessing as mp
     ctx = ctx if ctx is not None else mp.get_context("fork")
+    rings = None
+    if ring_bytes:
+        if ctx.get_start_method() != "fork":
+            raise ValueError(
+                "shared-memory rings need the fork start method")
+        rings = RingPair.create(ring_bytes)
     parent, child = ctx.Pipe()
     proc = ctx.Process(
-        target=pod_worker_main, args=(child, index, service_kwargs, nonce),
+        target=pod_worker_main,
+        args=(child, index, service_kwargs, nonce, rings),
         name=f"pod-worker-{index}", daemon=True)
     proc.start()
     child.close()                           # parent keeps one end only
-    return proc, parent
+    if rings is None:
+        return proc, parent
+    return proc, parent, rings

@@ -39,19 +39,26 @@ __all__ = ["WorkerHandle", "PodSupervisor"]
 
 @dataclasses.dataclass
 class WorkerHandle:
-    """One live pod worker: process + its RPC client + incarnation."""
+    """One live pod worker: process + its RPC client + incarnation,
+    plus (optionally) the shared-memory payload rings mapped into this
+    incarnation — ``None`` on the plain pipe path."""
     index: int
     process: object
     client: PodClient
     generation: int = 0
+    rings: object = None
 
 
 class PodSupervisor:
     """Owns the pod worker fleet for one facade.
 
     ``spawn(index, service_kwargs, nonce)`` must return ``(process,
-    connection)``; the default forks a real ``pod_worker_main``.  Pass
-    a fake for deterministic tests."""
+    connection)`` or ``(process, connection, rings)``; the default
+    forks a real ``pod_worker_main``.  Pass a fake (or a
+    ``functools.partial`` binding ``ring_bytes``) for tests and the
+    shm-ring collection plane — a respawn calls it again, so the
+    replacement worker maps *fresh* rings and the dead incarnation's
+    half-consumed records are unreachable by construction."""
 
     def __init__(self, n_pods: int, service_kwargs: Optional[Dict] = None,
                  *, heartbeat_interval_s: float = 1.0,
@@ -81,12 +88,12 @@ class PodSupervisor:
     def _spawn(self, index: int) -> WorkerHandle:
         gen = (self.workers[index].generation + 1
                if index in self.workers else 0)
-        proc, conn = self._spawn_fn(index, self.service_kwargs, gen)
+        proc, conn, *rest = self._spawn_fn(index, self.service_kwargs, gen)
         handle = WorkerHandle(
             index=index, process=proc,
             client=PodClient(conn, timeout=self.call_timeout,
                              retries=self.retries, backoff=self.backoff),
-            generation=gen)
+            generation=gen, rings=rest[0] if rest else None)
         self.workers[index] = handle
         self.monitor.register(index)
         return handle
@@ -97,6 +104,9 @@ class PodSupervisor:
             return
         self._retired_timeouts += h.client.timeouts
         h.client.close()
+        if h.rings is not None:
+            h.rings.up.close()
+            h.rings.down.close()
         proc = h.process
         try:
             if proc.is_alive():
@@ -121,6 +131,11 @@ class PodSupervisor:
     # -- accessors -----------------------------------------------------------
     def client(self, index: int) -> PodClient:
         return self.workers[index].client
+
+    def rings(self, index: int):
+        """The worker's shared-memory ring pair, or ``None`` on the
+        plain pipe path (or for a fake spawn that returns 2-tuples)."""
+        return self.workers[index].rings
 
     def generation(self, index: int) -> int:
         return self.workers[index].generation

@@ -99,12 +99,18 @@ def test_fault_free_stats_and_ft_counters(fault_free_pair):
     assert st["pod_rpc_timeouts"] == 0.0
     assert st["session_resyncs"] == 0.0
     assert st["suppressed_low_coverage"] == 0.0
+    # default rings are ample for these frames: the fast path never
+    # degraded to the pipe
+    assert st["ring_overflows"] == 0.0
+    assert st["ring_fallback_uploads"] == 0.0
     assert st["ingested"] == float(multi.ingested) > 0
     # the snapshot carries the same stats, and the query plane serves
     # them under the "stats" kind
     assert multi.snapshot().stats["coverage_fraction"] == 1.0
+    assert multi.snapshot().stats["ring_fallback_uploads"] == 0.0
     q = multi.query("stats")
     assert q["stats"]["coverage_fraction"] == 1.0
+    assert q["stats"]["ring_overflows"] == 0.0
 
 
 def test_standing_verdicts_merged_from_workers(fault_free_pair):
@@ -118,6 +124,43 @@ def test_pod_fault_validation(fault_free_pair):
     with pytest.raises(ValueError, match="unknown pod fault"):
         PodTierService(n_pods=2).inject_pod_fault(0, "meteor_strike")
     assert set(POD_FAULT_KINDS) == {"pod_kill", "pod_slow"}
+
+
+def test_tiny_ring_overflow_falls_back_to_pipe_with_parity(
+        fault_free_pair):
+    """Rings too small for the session frames: every oversized upload
+    must fall back to the pipe copy (counted, never blocking, never
+    reordered) and the diagnosis output must stay event-for-event equal
+    to the in-process tier — the fast path degrading is an operator
+    signal, not a semantic change."""
+    inproc, _ = fault_free_pair
+    svc = MultiProcPodService(n_pods=N_PODS, ring_bytes=4096)
+    with svc:
+        d = _Driver(svc)
+        d.run(30)
+        d.add_root_fault()
+        d.run(30)
+        svc.process()
+        st = svc.stats()
+        assert st["ring_fallback_uploads"] > 0
+        assert st["ring_overflows"] + st["ring_fallback_uploads"] >= \
+            st["ring_fallback_uploads"]
+        assert _event_keys(svc) == _event_keys(inproc)
+
+
+def test_pipe_only_mode_still_works(fault_free_pair):
+    """``ring_bytes=None`` keeps the PR 9 pipe-copied plane intact."""
+    inproc, _ = fault_free_pair
+    svc = MultiProcPodService(n_pods=N_PODS, ring_bytes=None)
+    with svc:
+        d = _Driver(svc)
+        d.run(30)
+        d.add_root_fault()
+        d.run(30)
+        svc.process()
+        st = svc.stats()
+        assert st["ring_fallback_uploads"] == 0.0   # no rings, no fallback
+        assert _event_keys(svc) == _event_keys(inproc)
 
 
 def test_kill_degrade_suppress_respawn_resync_recover():

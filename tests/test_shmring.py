@@ -1,0 +1,184 @@
+"""SPSC shared-memory ring: record round-trips across wrap boundaries,
+commit-before-visible ordering, overflow-never-blocks, protocol-misuse
+errors, and crash tolerance — a producer killed mid-record leaves the
+ring cleanly consumable (the torn record is unreachable, not skipped)."""
+import os
+import struct
+
+import pytest
+
+from repro.core.shmring import (RingPair, ShmRing, ShmRingCorruption,
+                                ShmRingError, WRAP_MARKER)
+
+
+def _drain(ring):
+    out = []
+    while True:
+        got = ring.pop()
+        if got is None:
+            return out
+        seq, view = got
+        out.append((seq, bytes(view)))
+        ring.release()
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        ShmRing(16)
+
+
+def test_simple_roundtrip_and_fifo():
+    r = ShmRing(1 << 12)
+    payloads = [b"", b"x", b"hello" * 10, bytes(range(256))]
+    seqs = [r.push(p) for p in payloads]
+    assert seqs == [0, 1, 2, 3]
+    assert _drain(r) == list(enumerate(payloads))
+    assert r.used() == 0
+
+
+def test_wrap_boundary_roundtrip():
+    """Records whose sizes never divide the capacity force the wrap
+    marker path over and over; every byte still round-trips in order."""
+    r = ShmRing(1 << 12)
+    sent = []
+    seq = 0
+    for i in range(300):
+        p = bytes([i % 251]) * (17 + 37 * (i % 29))
+        s = r.push(p)
+        while s is None:    # full: drain one and retry (never blocks)
+            got = r.pop()
+            assert got is not None and bytes(got[1]) == sent.pop(0)
+            r.release()
+            s = r.push(p)
+        assert s == seq
+        seq += 1
+        sent.append(p)
+    for p in sent:
+        got = r.pop()
+        assert got is not None and bytes(got[1]) == p
+        r.release()
+    assert r.pop() is None
+
+
+def test_overflow_returns_none_and_counts():
+    r = ShmRing(1 << 12)
+    assert r.try_reserve(r.capacity) is None
+    assert r.overflows == 1
+    assert r.push(b"y" * (1 << 11)) is not None
+    assert r.try_reserve(1 << 11) is None       # header no longer fits
+    assert r.overflows == 2
+    # consumer frees the span; the same reservation now succeeds
+    r.pop()
+    r.release()
+    assert r.try_reserve(1 << 11) is not None
+
+
+def test_reserve_max_commit_partial_and_cancel():
+    r = ShmRing(1 << 12)
+    mv = r.reserve_max()
+    assert len(mv) == r.capacity - 8
+    mv[:5] = b"abcde"
+    assert r.commit(5) == 0
+    assert _drain(r) == [(0, b"abcde")]
+    mv = r.reserve_max()
+    with pytest.raises(ShmRingError, match="larger than reservation"):
+        r.commit(len(mv) + 1)
+    r.cancel()
+    assert r.push(b"after-cancel") == 1
+    assert _drain(r) == [(1, b"after-cancel")]
+
+
+def test_protocol_misuse_raises():
+    r = ShmRing(1 << 12)
+    r.try_reserve(8)
+    with pytest.raises(ShmRingError, match="already pending"):
+        r.try_reserve(8)
+    with pytest.raises(ShmRingError, match="already pending"):
+        r.reserve_max()
+    r.cancel()
+    with pytest.raises(ShmRingError, match="no pending"):
+        r.commit(0)
+    with pytest.raises(ShmRingError, match="no popped"):
+        r.release()
+    r.push(b"zz")
+    r.pop()
+    with pytest.raises(ShmRingError, match="not yet released"):
+        r.pop()
+
+
+def test_uncommitted_record_is_unreachable():
+    """The consumer must never observe a reserved-but-uncommitted
+    record: the tail only moves at commit, so a half-written payload is
+    simply not there."""
+    r = ShmRing(1 << 12)
+    mv = r.try_reserve(64)
+    mv[:64] = b"A" * 64            # fully written, never committed
+    assert r.pop() is None
+    r.commit(64)
+    assert bytes(r.pop()[1]) == b"A" * 64
+    r.release()
+
+
+def test_sequence_corruption_detected():
+    r = ShmRing(1 << 12)
+    r.push(b"fine")
+    # smash the committed record's sequence word
+    struct.pack_into("<I", r.data, 4, 7)
+    with pytest.raises(ShmRingCorruption, match="sequence"):
+        r.pop()
+
+
+def test_wrap_marker_without_record_detected():
+    r = ShmRing(1 << 12)
+    r.push(b"q" * 16)
+    struct.pack_into("<I", r.data, 0, WRAP_MARKER)
+    with pytest.raises(ShmRingCorruption, match="wrap marker"):
+        r.pop()
+
+
+def test_cross_process_fork_roundtrip():
+    """The mmap region really is shared: a forked child produces, the
+    parent consumes the same physical pages."""
+    r = ShmRing(1 << 16)
+    payloads = [bytes([i]) * (100 + i) for i in range(40)]
+    pid = os.fork()
+    if pid == 0:                    # child: producer
+        code = 0
+        try:
+            for p in payloads:
+                if r.push(p) is None:
+                    code = 2
+        except BaseException:
+            code = 3
+        os._exit(code)
+    _, status = os.waitpid(pid, 0)
+    assert os.waitstatus_to_exitcode(status) == 0
+    assert _drain(r) == list(enumerate(payloads))
+
+
+def test_torn_write_producer_crash_skipped_cleanly():
+    """A producer SIGKILL-equivalent death mid-record (reserved, payload
+    half-written, never committed) must leave every *committed* record
+    readable and the torn one invisible — the consumer sees a clean
+    end-of-stream, not garbage."""
+    r = ShmRing(1 << 16)
+    pid = os.fork()
+    if pid == 0:
+        r.push(b"committed-1")
+        r.push(b"committed-2")
+        mv = r.reserve_max()
+        mv[:9] = b"torn-torn"       # crash before commit
+        os._exit(0)
+    os.waitpid(pid, 0)
+    assert _drain(r) == [(0, b"committed-1"), (1, b"committed-2")]
+    assert r.pop() is None
+
+
+def test_ring_pair_create():
+    pair = RingPair.create(1 << 13)
+    assert pair.up.capacity == 1 << 13
+    assert pair.down.capacity == 1 << 13
+    pair.up.push(b"up")
+    pair.down.push(b"down")
+    assert bytes(pair.up.pop()[1]) == b"up"
+    assert bytes(pair.down.pop()[1]) == b"down"

@@ -1,0 +1,133 @@
+"""Property tests for the SPSC shared-memory ring: arbitrary
+record-size schedules round-trip in order across wrap boundaries, the
+reader never observes bytes that were not committed, and the
+overflow→pipe-fallback policy preserves end-to-end payload ordering
+(the invariant the transport layer's ring-first upload path relies
+on)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.shmring import ShmRing  # noqa: E402
+
+# small capacity so generated schedules cross the wrap marker often
+_CAP = 1 << 12
+# payload sizes around the interesting edges: empty, sub-alignment,
+# alignment multiples, and near-capacity
+_sizes = st.one_of(
+    st.integers(min_value=0, max_value=64),
+    st.integers(min_value=_CAP // 4, max_value=_CAP - 16))
+# a schedule interleaves produce (a size) and consume (None) steps
+_schedules = st.lists(st.one_of(_sizes, st.none()), max_size=200)
+
+
+def _payload(i: int, size: int) -> bytes:
+    return bytes([(i * 31 + j) % 251 for j in range(size)])
+
+
+@settings(deadline=None, max_examples=60)
+@given(_schedules)
+def test_roundtrip_in_order_across_wraps(schedule):
+    ring = ShmRing(_CAP)
+    pending = []
+    produced = 0
+    for step in schedule:
+        if step is None:
+            got = ring.pop()
+            if got is None:
+                assert not pending
+            else:
+                seq, view = got
+                want_seq, want = pending.pop(0)
+                assert seq == want_seq
+                assert bytes(view) == want
+                ring.release()
+        else:
+            seq = ring.push(_payload(produced, step))
+            if seq is not None:
+                assert seq == produced
+                pending.append((seq, _payload(produced, step)))
+                produced += 1
+    for want_seq, want in pending:
+        seq, view = ring.pop()
+        assert (seq, bytes(view)) == (want_seq, want)
+        ring.release()
+    assert ring.pop() is None
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.lists(st.tuples(_sizes, st.booleans()), max_size=60))
+def test_reader_never_observes_uncommitted(steps):
+    """Reserve-then-maybe-commit: whatever the commit/abandon pattern,
+    every popped record is exactly a committed payload — never bytes
+    from an abandoned (or still-pending) reservation."""
+    ring = ShmRing(_CAP)
+    committed = []
+    produced = 0
+    for size, do_commit in steps:
+        mv = ring.reserve_max()
+        if mv is None or len(mv) < size:
+            if mv is not None:
+                ring.cancel()
+            # full: drain everything and verify against committed only
+            while True:
+                got = ring.pop()
+                if got is None:
+                    break
+                assert bytes(got[1]) == committed.pop(0)
+                ring.release()
+            continue
+        mv[:size] = _payload(produced, size)
+        if do_commit:
+            ring.commit(size)
+            committed.append(_payload(produced, size))
+            produced += 1
+        else:
+            ring.cancel()
+    while True:
+        got = ring.pop()
+        if got is None:
+            break
+        assert bytes(got[1]) == committed.pop(0)
+        ring.release()
+    assert not committed
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.lists(_sizes, max_size=80), st.integers(2, 6))
+def test_overflow_fallback_preserves_ordering(sizes, drain_every):
+    """Model the transport's ring-first upload: each payload goes to
+    the ring, or — on overflow — to the pipe, and every send appends an
+    announcement to the (FIFO) pipe.  Replaying announcements in pipe
+    order must reproduce the exact send order, whichever path each
+    payload took."""
+    ring = ShmRing(_CAP)
+    announcements = []          # ("ring", seq) | ("pipe", bytes)
+    consumed = []
+
+    def drain(upto=None):
+        while announcements:
+            kind, val = announcements.pop(0)
+            if kind == "pipe":
+                consumed.append(val)
+            else:
+                seq, view = ring.pop()
+                assert seq == val
+                consumed.append(bytes(view))
+                ring.release()
+            if upto is not None and len(consumed) >= upto:
+                break
+
+    sent = []
+    for i, size in enumerate(sizes):
+        p = _payload(i, size)
+        seq = ring.push(p)
+        announcements.append(("ring", seq) if seq is not None
+                             else ("pipe", p))
+        sent.append(p)
+        if i % drain_every == 0:
+            drain()
+    drain()
+    assert consumed == sent
+    assert ring.pop() is None

@@ -512,3 +512,50 @@ def test_wire_v3_extreme_columns_round_trip():
                   ProfileBatch("j", [], "n")):
         assert decode_batch(encode_batch(batch, version=WIRE_VERSION)) \
             .to_dataclasses() == batch
+
+
+def test_encode_into_byte_identical_and_overflow_safe():
+    """``encode_into`` must produce exactly the bytes ``encode`` would
+    (the in-ring and on-pipe layouts are one layout), and an overflow
+    must leave the session able to re-encode the identical frame."""
+    t = TraceTables()
+    a, b = WireEncoder(t), WireEncoder(t)
+    b._nonce = a._nonce                     # same session identity
+    buf = memoryview(bytearray(1 << 16))
+    for it in range(3):
+        batch = _batch_over(t, [_profile(r, it) for r in range(3)])
+        ref = bytes(a.encode(batch))
+        n = b.encode_into(batch, buf)
+        assert bytes(buf[:n]) == ref
+        a.commit()
+        b.commit()
+    # too-small target: BufferError, nothing staged as delivered, and
+    # the fallback re-encode is byte-identical to the direct encode
+    batch = _batch_over(t, [_profile(9, 9)])
+    with pytest.raises(BufferError):
+        b.encode_into(batch, memoryview(bytearray(8)))
+    assert bytes(b.encode(batch)) == bytes(a.encode(batch))
+
+
+def test_decode_detach_survives_buffer_recycling():
+    """``detach=True`` decouples every decoded column from the payload
+    buffer: scribbling over the buffer right after decode (what a ring
+    release permits the producer to do) must not alter the profiles."""
+    t = TraceTables()
+    enc = WireEncoder(t)
+    batch = _batch_over(t, [_profile(r, 1) for r in range(2)])
+    raw = bytearray(bytes(enc.encode(batch)))
+    svc_tables, sessions = TraceTables(), {}
+    got = decode_batch(memoryview(raw), tables=svc_tables,
+                       sessions=sessions, detach=True)
+    want = [(p.stack_ts.copy(), p.kern_dur.copy(), p.coll_nbytes.copy(),
+             p.coll_entry.copy()) for p in got.profiles]
+    raw[:] = b"\xff" * len(raw)             # producer recycles the slot
+    for p, (ts, kd, nb, ce) in zip(got.profiles, want):
+        assert np.array_equal(p.stack_ts, ts)
+        assert np.array_equal(p.kern_dur, kd)
+        assert np.array_equal(p.coll_nbytes, nb)
+        assert np.array_equal(p.coll_entry, ce)
+    # OS thunks materialize from detached columns too
+    sig = got.profiles[0].os_signals
+    assert sig is not None and sig.interrupts

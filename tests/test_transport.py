@@ -231,6 +231,80 @@ def test_worker_process_ping_collect_wedge_and_kill():
         proc.join(timeout=5.0)
 
 
+def test_client_backoff_capped_and_deterministic_jitter():
+    """Retry backoff: linear growth capped at ``backoff_cap``, spread
+    by jitter in [0.5, 1.0)x — and fully reproducible under a fake
+    clock, while a different clock phase desynchronizes the herd."""
+    def delays(clock_now):
+        sleeps = []
+        c = PodClient(ScriptedConn(lambda *a: []), timeout=1.0,
+                      retries=3, backoff=0.05, backoff_cap=0.08,
+                      clock=lambda: clock_now, sleep=sleeps.append)
+        with pytest.raises(PodTimeoutError):
+            c.call("work")
+        return sleeps
+
+    first = delays(0.123)
+    assert len(first) == 3                # one sleep per retry
+    for attempt, s in enumerate(first, 1):
+        base = min(0.05 * attempt, 0.08)  # linear, then capped
+        assert base * 0.5 <= s < base
+    assert first[-1] < 0.08               # cap really binds on attempt 3
+    assert delays(0.123) == first         # fake clock → exact replay
+    assert delays(0.456) != first         # different phase → no herd
+
+
+# -- real process boundary with shared-memory rings ----------------------------
+
+
+def test_worker_process_ring_upload_and_ring_digest():
+    """The zero-copy path end-to-end over a real fork: session frames
+    encoded straight into the up ring and announced over the pipe,
+    digests answered as down-ring records — and a bogus announcement is
+    an error reply, never a hang."""
+    from repro.core import simcluster as sc
+    from repro.core.trace import ColumnarBatch, WireEncoder
+
+    proc, conn, rings = spawn_pod_worker(3, nonce=1, ring_bytes=1 << 20)
+    client = PodClient(conn, timeout=10.0, retries=0)
+    try:
+        cl = sc.cascade_fleet([[0, 1, 2, 3]], links=(), seed=5,
+                              columnar=True, samples_per_iter=60)
+        enc = WireEncoder(cl.tables)
+        for _ in range(3):
+            profiles = cl.step()
+            batch = ColumnarBatch("job-0", profiles, "node-0", cl.tables)
+            mv = rings.up.reserve_max()
+            n = enc.encode_into(batch, mv)
+            seq = rings.up.commit(n)
+            assert client.call("ingest_ring", (seq, n)) == \
+                ("ok", len(profiles))
+            enc.commit()
+        status, data = client.call("collect", 0.0)
+        assert status == "ok"
+        assert isinstance(data, tuple) and data[0] == "ring"
+        _tag, rseq, nbytes = data
+        seq, view = rings.down.pop()
+        assert seq == rseq and len(view) == nbytes
+        digest = decode_digest(view, detach=True)
+        rings.down.release()
+        assert digest.pod == 3 and digest.ranks == 4
+        # bench sink verbs move bytes without decoding them
+        payload = b"z" * 100000
+        assert client.call("sink", payload) == ("ok", 100000)
+        seq = rings.up.push(payload)
+        assert client.call("sink_ring", (seq, len(payload))) == \
+            ("ok", 100000)
+        # a record the facade never committed cannot be served
+        with pytest.raises(PodRemoteError, match="not committed"):
+            client.call("ingest_ring", (99, 10))
+    finally:
+        client.close()
+        if proc.is_alive():
+            proc.kill()
+        proc.join(timeout=5.0)
+
+
 # -- supervisor: detect -> respawn, deterministically --------------------------
 
 
